@@ -1,0 +1,39 @@
+"""Shared benchmark utilities: timing, CSV emission, dataset sizing.
+
+Benchmarks run REDUCED corpus sizes on this CPU container (the paper's
+60M-row corpus is exercised structurally via the dry-run); every table
+keeps the paper's comparison structure (fp32 arm vs int8 arm) so the
+claims — memory ratio, build-time ratio, QPS ratio, recall delta — are
+measured, just at smaller N.  Set REPRO_BENCH_SCALE to grow corpora.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+
+SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
+
+
+def sized(n: int) -> int:
+    return max(64, int(n * SCALE))
+
+
+def timeit(fn, *args, repeats: int = 3, warmup: int = 1):
+    """Median wall seconds of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    """The harness CSV contract: name,us_per_call,derived."""
+    print(f"{name},{seconds * 1e6:.1f},{derived}")

@@ -1,0 +1,40 @@
+"""Paper Figure 2: QPS and recall versus the EFS search parameter, fp32 vs
+int8 HNSW.  The paper's claims under test: int8 QPS > fp32 QPS at matched
+EFS, recall gap ~2%, and recall increasing in EFS for both arms."""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, sized, timeit
+from repro.data import synthetic
+from repro.data.groundtruth import exact_topk
+from repro.knn import HNSWIndex
+
+
+def main() -> None:
+    n = sized(3000)
+    k = 10
+    corpus, queries, metric = synthetic.load("product", n, 64)
+    queries = queries[:64]
+    _gt_s, gt_i = exact_topk(corpus, queries, k, metric)
+
+    builds = {
+        "fp32": HNSWIndex.build(corpus, m=8, ef_construction=80, metric=metric,
+                                batch_size=256),
+        "int8": HNSWIndex.build(corpus, m=8, ef_construction=80, metric=metric,
+                                quantized=True, sigmas=3.0, batch_size=256),
+    }
+    from repro.core.preserve import recall_at_k
+
+    for efs in (40, 80, 160):
+        for arm, idx in builds.items():
+            sec = timeit(lambda i=idx, e=efs: i.search(queries, k, ef_search=e))
+            _s, ids = idx.search(queries, k, ef_search=efs)
+            rec = float(recall_at_k(gt_i, ids))
+            qps = queries.shape[0] / sec
+            emit(f"fig2/{arm}_efs{efs}", sec, f"qps={qps:.1f} recall={rec:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Kernel microbenchmarks: qmip / ql2 / quantize wrappers vs the fp32 XLA
+dot baseline (CPU interpret numbers are structural, not TPU wall-time —
+the TPU claim lives in §Roofline's int8-vs-bf16 peak ratio)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, sized, timeit
+from repro.core import distances as D
+from repro.kernels import ops as K
+
+
+def main() -> None:
+    n = sized(20_000)
+    d = 128
+    kq, kx = jax.random.split(jax.random.PRNGKey(0))
+    q = jax.random.randint(kq, (32, d), -128, 128, dtype=jnp.int8)
+    x = jax.random.randint(kx, (n, d), -128, 128, dtype=jnp.int8)
+    qf = q.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+
+    emit("kernel/qmip_xla_int8", timeit(lambda: K.qmip(q, x, use_pallas=False)),
+         f"n={n} d={d}")
+    emit("kernel/fp32_dot", timeit(lambda: D.ip_scores(qf, xf)), f"n={n} d={d}")
+    lo = jnp.full((d,), -127.0)
+    hi = jnp.full((d,), 127.0)
+    zero = jnp.zeros((d,))
+    emit("kernel/quantize_xla", timeit(lambda: K.quantize(xf, lo, hi, zero,
+                                                           use_pallas=False)),
+         f"n={n} d={d}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Quantized retrieval scoring (the recsys retrieval_cand cell, reduced):
+fp32 vs int8 candidate scoring parity + memory — the paper's technique on
+its most direct production surface."""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, sized, timeit
+from repro.core.preserve import recall_at_k
+from repro.models.recsys import embedding as E
+from repro.models.recsys import retrieval as RT
+
+
+def main() -> None:
+    n = sized(100_000)
+    d = 64
+    k = 100
+    key = jax.random.PRNGKey(0)
+    cands = jax.random.normal(key, (n, d)) * 0.05
+    queries = jax.random.normal(jax.random.PRNGKey(1), (8, d)) * 0.05
+
+    qt = E.QuantizedTable.from_dense(cands)
+    s_fp, i_fp = RT.retrieve_fp32(queries, cands, k=k)
+    sec_fp = timeit(lambda: RT.retrieve_fp32(queries, cands, k=k))
+    sec_q8 = timeit(lambda: RT.retrieve_quantized(queries, qt.codes, qt.params, k=k, use_pallas=False))
+    _s, i_q8 = RT.retrieve_quantized(queries, qt.codes, qt.params, k=k, use_pallas=False)
+    rec = float(recall_at_k(i_fp, i_q8))
+    mem_fp = n * d * 4
+    emit("retrieval/fp32", sec_fp, f"mem={mem_fp}B")
+    emit(
+        "retrieval/int8", sec_q8,
+        f"recall={rec:.4f} mem={qt.memory_bytes()}B ratio={qt.memory_bytes()/mem_fp:.3f}",
+    )
+
+
+if __name__ == "__main__":
+    main()

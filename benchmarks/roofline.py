@@ -1,0 +1,264 @@
+"""§Roofline: compute / memory / collective terms per (arch x shape) cell.
+
+Methodology (full discussion in EXPERIMENTS.md §Roofline):
+
+  * XLA's ``cost_analysis()`` on this container counts while-loop BODIES
+    ONCE (verified: a 10-iteration scanned matmul reports 1 matmul), so
+    compiled numbers are lower bounds with loop-depth-dependent error.
+    We therefore use ANALYTIC workload models for all three terms — the
+    same napkin math the perf loop optimizes — and keep the raw HLO
+    numbers (flops, per-collective byte counts) as structural evidence
+    of the schedule (which collectives exist, at what tile sizes).
+
+  * Terms (TPU v5e, per 256-chip pod):
+      compute    = FLOPs / (256 · 197e12 bf16  [394e12 for int8 cells])
+      memory     = HBM bytes / (256 · 819e9)
+      collective = per-device wire bytes / 50e9 (one ICI link, worst case)
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_BF16 = 197e12
+PEAK_INT8 = 394e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = 256
+DP, TP = 16, 16   # single-pod mesh factors
+
+
+def _ring(nbytes: float) -> float:
+    """Ring all-reduce wire bytes per device ~ 2x payload."""
+    return 2.0 * nbytes
+
+
+# --------------------------------------------------------------------------
+# analytic workload models
+# --------------------------------------------------------------------------
+
+def lm_analytics(arch_id: str, shape: dict) -> dict:
+    from repro.configs import get
+
+    mod = get(arch_id)
+    cfg = mod.config()
+    micro = getattr(mod, "TRAIN_MICROBATCHES", 4)
+    N = cfg.param_count()
+    Na = cfg.active_param_count()
+    B, S = shape["global_batch"], shape["seq_len"]
+    kind = shape["kind"]
+    d = cfg.d_model
+    L = cfg.n_layers
+
+    pat = (cfg.layer_pattern * L)[:L]
+
+    def s_eff(c):
+        return min(S, cfg.window if c == "l" else cfg.chunk if c == "c" else S)
+
+    attn_fwd = sum(
+        4 * B * S * s_eff(c) * cfg.n_heads * cfg.head_dim * 0.5 for c in pat
+    )
+
+    if kind == "train":
+        flops = 6 * Na * B * S + 3 * attn_fwd
+        bytes_hbm = (
+            micro * 2 * Na                      # weights streamed per microbatch
+            + 16 * N                            # f32 moments r/w + grads
+            + 4 * B * S * d * L * 2 * 2         # remat carries r/w (bf16)
+        )
+        # TP activation all-reduces: 2/layer fwd + 2/layer bwd, [B_mb_loc,S,d] bf16
+        b_loc = B / DP / micro
+        tp = L * micro * 4 * _ring(b_loc * S * d * 2)
+        # ZeRO grad reduce-scatter + param all-gather over data: ~2 x f32 grads/TP
+        dp_sync = 2 * _ring(4 * N / TP)
+        # MoE all-to-all: 2 x tokens in+out per MoE layer per microbatch
+        a2a = 0.0
+        if cfg.moe is not None:
+            n_moe = L // cfg.block_layers if cfg.moe_every > 1 else L
+            a2a = n_moe * micro * 2 * 2 * (B / DP / micro) * S * d * 2
+        coll = tp + dp_sync + a2a
+    elif kind == "prefill":
+        flops = 2 * Na * B * S + attn_fwd
+        bytes_hbm = 2 * Na + 2 * B * S * cfg.n_kv * cfg.head_dim * L * 2 * 2
+        b_loc = B / DP
+        coll = L * 2 * _ring(b_loc * S * d * 2)
+        if cfg.moe is not None:
+            n_moe = L // cfg.block_layers if cfg.moe_every > 1 else L
+            coll += n_moe * 2 * 2 * b_loc * S * d * 2
+    else:  # decode
+        flops = 2 * Na * B + sum(
+            4 * B * min(S, s_eff(c)) * cfg.n_heads * cfg.head_dim for c in pat
+        )
+        kv_bytes = 2 * B * S * cfg.n_kv * cfg.head_dim * L * 2
+        bytes_hbm = 2 * Na + kv_bytes
+        b_loc = max(B / DP, 1)
+        # TP act all-reduce [B_loc, 1, d] x2/layer + S-sharded softmax psums
+        coll = L * 2 * _ring(b_loc * 1 * d * 2) + L * 3 * _ring(
+            b_loc * cfg.n_heads * 4
+        )
+    return dict(flops=flops, bytes=bytes_hbm, coll=coll, peak=PEAK_BF16)
+
+
+def recsys_analytics(arch_id: str, shape: dict) -> dict:
+    from repro.configs import get
+
+    cfg = get(arch_id).config()
+    kind = shape["kind"]
+    d = cfg.embed_dim
+
+    def mlp_flops(dims, b):
+        f, prev = 0, dims[0]
+        for h in dims[1:]:
+            f += 2 * b * prev * h
+            prev = h
+        return f
+
+    if kind == "retrieval":
+        N = shape["n_candidates"]
+        flops = 2 * shape["batch"] * N * d
+        bytes_hbm = N * d * 1 + shape["batch"] * d * 4   # int8 table
+        # distributed top-k: k-sized all-gather per shard
+        coll = _ring(CHIPS * 100 * 8)
+        return dict(flops=flops, bytes=bytes_hbm, coll=coll, peak=PEAK_INT8)
+
+    B = shape["batch"]
+    F = cfg.n_sparse
+    lookup_bytes = B * F * d * 4
+
+    if cfg.kind == "dlrm":
+        nf = F + 1
+        flops = (
+            mlp_flops((cfg.n_dense, *cfg.bot_mlp), B)
+            + 2 * B * nf * nf * d
+            + mlp_flops((cfg.bot_mlp[-1] + nf * (nf - 1) // 2, *cfg.top_mlp), B)
+        )
+    elif cfg.kind == "autoint":
+        da = cfg.n_heads * cfg.d_attn
+        flops = cfg.n_attn_layers * (
+            2 * B * F * d * da * 3 + 2 * B * F * F * da * 2 + 2 * B * F * d * da
+        ) + 2 * B * F * da
+    elif cfg.kind == "dien":
+        flops = 2 * B * cfg.seq_len * (d + cfg.gru_dim) * 3 * cfg.gru_dim * 2
+        flops += mlp_flops((d * cfg.n_sparse + cfg.gru_dim, *cfg.mlp, 1), B)
+    else:  # dcnv2
+        d_in = cfg.n_dense + F * d
+        flops = cfg.n_cross_layers * 2 * B * d_in * d_in + mlp_flops((d_in, *cfg.mlp), B)
+
+    # embedding exchange: gathered rows cross the mesh (tables row-sharded
+    # over data x model; batch over data) — in + grad-scatter back
+    coll = _ring(lookup_bytes / DP) * (2 if kind == "train" else 1)
+    if kind == "train":
+        flops *= 3
+        bytes_hbm = 5 * lookup_bytes + 0.0  # touched rows r/w + dense mlps
+    else:
+        bytes_hbm = lookup_bytes + B * 64
+    return dict(flops=flops, bytes=bytes_hbm, coll=coll, peak=PEAK_BF16)
+
+
+def gnn_analytics(arch_id: str, shape: dict) -> dict:
+    from repro.configs import get
+
+    cfg = get(arch_id).config()
+    h, rbf = cfg.d_hidden, cfg.n_rbf
+    kind = shape["kind"]
+    if kind == "molecule":
+        n_nodes = shape["batch"] * shape["n_nodes"]
+        n_edges = shape["batch"] * shape["n_edges"]
+    elif kind == "minibatch":
+        n_nodes, n_edges = shape["pad_nodes"], shape["pad_edges"]
+    else:
+        n_nodes, n_edges = shape["n_nodes"], shape["n_edges"]
+
+    per_inter = (
+        2 * n_edges * rbf * h + 2 * n_edges * h * h
+        + n_edges * h + 2 * n_nodes * h * h * 2
+    )
+    flops = 3 * (cfg.n_interactions * per_inter + 2 * n_edges * rbf)  # train
+    bytes_hbm = cfg.n_interactions * (n_edges * h * 4 * 3 + n_nodes * h * 4 * 2)
+    # edge-parallel scatter: psum of [n_nodes, h] f32 per interaction,
+    # fwd + bwd
+    coll = cfg.n_interactions * 2 * _ring(n_nodes * h * 4)
+    return dict(flops=flops, bytes=bytes_hbm, coll=coll, peak=PEAK_BF16)
+
+
+def analytics_for(arch_id: str, shape_key: str) -> dict:
+    from repro.configs import get
+
+    mod = get(arch_id)
+    shape = dict(mod.SHAPES[shape_key])
+    if mod.FAMILY == "lm":
+        return lm_analytics(arch_id, shape)
+    if mod.FAMILY == "recsys":
+        return recsys_analytics(arch_id, shape)
+    return gnn_analytics(arch_id, shape)
+
+
+# --------------------------------------------------------------------------
+# table assembly
+# --------------------------------------------------------------------------
+
+def cell_rows(dryrun_dir: str, suffix: str = "__pod.json"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, f"*{suffix}"))):
+        rec = json.load(open(path))
+        arch, shape_key = rec["arch"], rec["shape"]
+        if "skipped" in rec:
+            rows.append({"arch": arch, "shape": shape_key, "skipped": rec["skipped"]})
+            continue
+        ana = analytics_for(arch, shape_key)
+        t_compute = ana["flops"] / (CHIPS * ana["peak"])
+        t_memory = ana["bytes"] / (CHIPS * HBM_BW)
+        t_coll = ana["coll"] / ICI_BW
+        terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+        dominant = max(terms, key=terms.get)
+        rows.append(
+            {
+                "arch": arch,
+                "shape": shape_key,
+                "t_compute_s": t_compute,
+                "t_memory_s": t_memory,
+                "t_collective_s": t_coll,
+                "dominant": dominant,
+                "roofline_fraction": t_compute / max(max(terms.values()), 1e-30),
+                "model_flops": ana["flops"],
+                "hlo_flops_raw_per_device": rec["flops"],
+                "hlo_collectives": rec["collectives"],
+                "memory_analysis": rec["memory_analysis"],
+            }
+        )
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="experiments/dryrun")
+    ap.add_argument("--json-out", default="experiments/roofline.json")
+    args = ap.parse_args()
+
+    rows = cell_rows(args.dryrun_dir)
+    with open(args.json_out, "w") as f:
+        json.dump(rows, f, indent=2)
+
+    hdr = (f"{'arch':26s} {'shape':14s} {'compute':>10s} {'memory':>10s} "
+           f"{'collect.':>10s}  dominant    frac")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if "skipped" in r:
+            print(f"{r['arch']:26s} {r['shape']:14s} SKIP ({r['skipped'][:50]}...)")
+            continue
+        print(
+            f"{r['arch']:26s} {r['shape']:14s} "
+            f"{r['t_compute_s']:10.2e} {r['t_memory_s']:10.2e} "
+            f"{r['t_collective_s']:10.2e}  {r['dominant']:10s} "
+            f"{r['roofline_fraction']:5.2f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Benchmark orchestrator — one module per paper table/figure plus the
+kernel and retrieval micro-benches and the roofline derivation.
+
+Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run fig1 table2
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (
+    fig1_distribution,
+    fig2_qps_recall,
+    kernel_bench,
+    retrieval_bench,
+    table1_build_memory,
+    table2_exact_recall,
+    table3_graph_recall,
+)
+
+SUITES = {
+    "fig1": fig1_distribution.main,
+    "table2": table2_exact_recall.main,
+    "retrieval": retrieval_bench.main,
+    "kernels": kernel_bench.main,
+    "table3": table3_graph_recall.main,
+    "table1": table1_build_memory.main,
+    "fig2": fig2_qps_recall.main,
+}
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or list(SUITES)
+    failed = []
+    for name in wanted:
+        try:
+            SUITES[name]()
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            print(f"{name}/ERROR,0.0,{e!r}")
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(f"benchmark suites failed: {failed}")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,44 @@
+"""Paper Table 1: HNSW build time and memory, fp32 vs int8, over the
+(EFC, M) grid.  Reduced scale (PRODUCT60M -> synthetic narrow-band corpus);
+the paper's claims under test: int8 memory ~ 0.45x fp32 (incl. graph
+overhead) and build-time reduction from cheaper distance evaluations."""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, sized
+from repro.data import synthetic
+from repro.knn import HNSWIndex
+
+
+def main() -> None:
+    n = sized(3000)
+    corpus, _queries, metric = synthetic.load("product", n, 16)
+
+    grid = [(40, 8), (80, 8)]  # (EFC, M) — reduced grid of §5.2's 300..700 x {32,48}
+    for efc, m in grid:
+        idx_fp = HNSWIndex.build(
+            corpus, m=m, ef_construction=efc, metric=metric,
+            batch_size=256, key=jax.random.PRNGKey(0),
+        )
+        idx_q8 = HNSWIndex.build(
+            corpus, m=m, ef_construction=efc, metric=metric,
+            quantized=True, sigmas=3.0, batch_size=256, key=jax.random.PRNGKey(0),
+        )
+        mem_fp = idx_fp.memory_bytes()
+        mem_q8 = idx_q8.memory_bytes()
+        emit(
+            f"table1/build_fp32_efc{efc}_m{m}",
+            idx_fp.build_seconds,
+            f"mem={mem_fp}B",
+        )
+        emit(
+            f"table1/build_int8_efc{efc}_m{m}",
+            idx_q8.build_seconds,
+            f"mem={mem_q8}B ratio={mem_q8 / mem_fp:.3f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Paper Table 3: NGT (neighborhood graph + tree) recall@100, fp32 vs
+int8 — via the NGT-equivalent GraphIndex (kNN graph + centroid seeding;
+DESIGN.md §7).  Claims under test: small (2-6%) recall drop at int8 with
+memory/runtime reduction."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, sized, timeit
+from repro.core.preserve import recall_at_k
+from repro.data import synthetic
+from repro.data.groundtruth import exact_topk
+from repro.knn import GraphIndex
+
+
+def main() -> None:
+    k = 10
+    schemes = {"sift": ("global_minmax", 1.0), "glove": ("global_absmax", 1.0),
+               "product": ("gaussian", 3.0)}
+    for name in ("sift", "glove", "product"):
+        scheme, sigmas = schemes[name]
+        n = sized(3000)
+        corpus, queries, metric = synthetic.load(name, n, 64)
+        queries = queries[:64]
+        _s, gt = exact_topk(corpus, queries, k, metric)
+
+        idx_fp = GraphIndex.build(corpus, degree=24, metric=metric)
+        idx_q8 = GraphIndex.build(corpus, degree=24, metric=metric,
+                                  quantized=True, scheme=scheme, sigmas=sigmas)
+
+        for arm, idx in (("fp32", idx_fp), ("int8", idx_q8)):
+            sec = timeit(lambda i=idx: i.search(queries, k, ef_search=80))
+            _ss, ids = idx.search(queries, k, ef_search=80)
+            rec = float(recall_at_k(gt, ids))
+            emit(
+                f"table3/{name}_{arm}", sec,
+                f"recall={rec:.4f} mem={idx.memory_bytes()}B",
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.configs.registry import ARCHS, ASSIGNED, cells, get
+
+__all__ = ["ARCHS", "ASSIGNED", "cells", "get"]

@@ -1,0 +1,60 @@
+# The paper's primary contribution: the low-precision quantization family
+# (Q, phi) — data-driven clamped-linear scalar quantization (Eq. 1) plus
+# integer-domain distance functions, with Definition-2 order-preservation
+# validators. Sibling subpackages provide the substrates (knn, data, models,
+# train, dist, kernels, launch).
+from repro.core.stats import (
+    DimStats,
+    StreamingStats,
+    corpus_stats,
+    distributed_stats,
+    merge_stats,
+)
+from repro.core.quant import (
+    QuantParams,
+    Scheme,
+    dequantize,
+    learn_params,
+    params_from_stats,
+    quantization_error,
+    quantize,
+    quantize_corpus,
+)
+from repro.core.distances import (
+    angular_scores,
+    ip_scores,
+    l2_scores,
+    pairwise_distance,
+    qangular_scores,
+    qip_scores,
+    ql2_scores,
+    scores,
+)
+from repro.core.preserve import knn_recall, order_agreement, recall_at_k
+
+__all__ = [
+    "DimStats",
+    "StreamingStats",
+    "corpus_stats",
+    "distributed_stats",
+    "merge_stats",
+    "QuantParams",
+    "Scheme",
+    "dequantize",
+    "learn_params",
+    "params_from_stats",
+    "quantization_error",
+    "quantize",
+    "quantize_corpus",
+    "angular_scores",
+    "ip_scores",
+    "l2_scores",
+    "pairwise_distance",
+    "qangular_scores",
+    "qip_scores",
+    "ql2_scores",
+    "scores",
+    "knn_recall",
+    "order_agreement",
+    "recall_at_k",
+]

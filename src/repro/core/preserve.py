@@ -1,0 +1,101 @@
+"""Empirical validators for Definition 2 (partial distance preservation).
+
+The paper's correctness claim is *not* low reconstruction error; it is:
+
+    if d1(a, q) < d1(b, q)  then  d2(Q(a), h(q)) <= d2(Q(b), h(q))
+
+We validate this directly: sample (a, b, q) triples, evaluate both the
+original and the quantized metric, and measure the fraction of strict
+orderings that survive (ties in the quantized domain are allowed — that is
+the "equality relaxation" the paper attributes recall loss to).
+
+Also provides recall@k, the paper's §5.3 quality metric.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distances as D
+from repro.core import quant as Qz
+
+
+def order_agreement(
+    corpus: jax.Array,
+    queries: jax.Array,
+    params: Qz.QuantParams,
+    metric: str,
+    n_triples: int = 4096,
+    key: jax.Array | None = None,
+    margin_quantile: float = 0.0,
+) -> jax.Array:
+    """Fraction of sampled (a,b,q) triples whose strict order is preserved.
+
+    ``margin_quantile`` > 0 restricts to triples whose original distance gap
+    exceeds that quantile of gaps — the paper's point is that *near*
+    neighbors are preserved while far-apart aliasing is acceptable, so
+    agreement should rise with the margin.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    n = corpus.shape[0]
+    nq = queries.shape[0]
+    ka, kb, kq = jax.random.split(key, 3)
+    ia = jax.random.randint(ka, (n_triples,), 0, n)
+    ib = jax.random.randint(kb, (n_triples,), 0, n)
+    iq = jax.random.randint(kq, (n_triples,), 0, nq)
+
+    a, b, q = corpus[ia], corpus[ib], queries[iq]
+    qa, qb = Qz.quantize(a, params), Qz.quantize(b, params)
+    qq = Qz.quantize(q, params)
+
+    # larger-is-closer scores, one triple at a time via the batched API
+    s_a = jax.vmap(lambda u, v: D.scores(u[None], v[None], metric)[0, 0])(q, a)
+    s_b = jax.vmap(lambda u, v: D.scores(u[None], v[None], metric)[0, 0])(q, b)
+    t_a = jax.vmap(lambda u, v: D.scores(u[None], v[None], metric, quantized=True)[0, 0])(qq, qa)
+    t_b = jax.vmap(lambda u, v: D.scores(u[None], v[None], metric, quantized=True)[0, 0])(qq, qb)
+
+    gap = jnp.abs(s_a - s_b)
+    strict = gap > 0
+    if margin_quantile > 0.0:
+        thresh = jnp.quantile(gap, margin_quantile)
+        strict = strict & (gap >= thresh)
+
+    # Definition 2: original strict order must map to <= (ties allowed).
+    ok = jnp.where(
+        s_a > s_b,
+        t_a >= t_b,
+        jnp.where(s_b > s_a, t_b >= t_a, True),
+    )
+    return jnp.sum(ok & strict) / jnp.maximum(jnp.sum(strict), 1)
+
+
+def recall_at_k(exact_ids: jax.Array, approx_ids: jax.Array) -> jax.Array:
+    """Paper §5.3: |S_E ∩ S_A| / |S_E| averaged over queries.
+
+    Both inputs are [Q, k] integer id arrays.
+    """
+    hits = (exact_ids[:, :, None] == approx_ids[:, None, :]).any(-1)
+    return jnp.mean(jnp.sum(hits, axis=-1) / exact_ids.shape[1])
+
+
+def knn_recall(
+    corpus: jax.Array,
+    queries: jax.Array,
+    params: Qz.QuantParams,
+    metric: str,
+    k: int = 100,
+) -> jax.Array:
+    """End-to-end exact-scan recall: fp32 top-k vs quantized top-k.
+
+    This is exactly the paper's Table 2 protocol (FAISS exhaustive search,
+    fp32 vs int8) on whatever corpus is passed in.
+    """
+    s_fp = D.scores(queries, corpus, metric)
+    ids_fp = jax.lax.top_k(s_fp, k)[1]
+    codes = Qz.quantize(corpus, params)
+    qcodes = Qz.quantize(queries, params)
+    s_q = D.scores(qcodes, codes, metric, quantized=True)
+    ids_q = jax.lax.top_k(s_q, k)[1]
+    return recall_at_k(ids_fp, ids_q)

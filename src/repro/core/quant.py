@@ -1,0 +1,188 @@
+"""The paper's quantization family (Q, phi) — §3 of the paper.
+
+Eq. 1 (clamped linear quantization of dimension i at bit-width B):
+
+    Q(x^i) = round( 2^B * (x^i - k^i) / (S_e^i - S_b^i) )   if x^i in [S_b^i, S_e^i]
+           = -2^(B-1)                                        if x^i <  S_b^i
+           = +2^(B-1)                                        if x^i >  S_e^i
+
+with data-driven constants k^i = mu^i, S_b^i = mu^i - sigma^i,
+S_e^i = mu^i + sigma^i fit per dimension (§3.2), or their simplified forms:
+a single (mu, sigma) shared across dimensions (§4.1, interdimensional
+uniformity) and an abs-max range (§4.2, intradimensional uniformity).
+
+Storage note: with the paper's constants, Q(S_e) = +2^(B-1), which does not
+fit a B-bit signed integer (max 2^(B-1)-1).  We keep Eq. 1 verbatim and clip
+the stored code to the representable range [-2^(B-1), 2^(B-1)-1]; the single
+saturated code at the top of the range is part of the clamp semantics and
+affects only points already outside +-sigma.  This is recorded in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.stats import DimStats, corpus_stats
+
+
+class Scheme(str, enum.Enum):
+    """Which normalizing constants to use for Eq. 1.
+
+    Geometry note: per-dimension spans (GAUSSIAN/ABSMAX/MINMAX) rescale
+    dimensions independently — fine when dims are iso-distributed (the
+    paper's Fig-1 corpora, §4.1), but a *reweighted* metric otherwise.
+    For corpora with unequal per-dim spreads under L2/angular, use a
+    GLOBAL_* scheme (one span for every dim = a single affine map, which
+    preserves distance ordering exactly up to rounding: the paper's §4.2
+    "absolute maximum observed" applied globally).
+    """
+
+    GAUSSIAN = "gaussian"            # §3.2: per-dim mu +- sigmas*sigma
+    UNIFORM_GAUSSIAN = "uniform"     # §4.1: single (mu, sigma) for all dims
+    ABSMAX = "absmax"                # §4.2: per-dim [-amax, +amax], k = 0
+    MINMAX = "minmax"                # engineering variant: [vmin, vmax]
+    GLOBAL_ABSMAX = "global_absmax"  # one symmetric span for all dims
+    GLOBAL_MINMAX = "global_minmax"  # one [min, max] span for all dims
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QuantParams:
+    """Normalizing constants of Eq. 1 for one corpus.
+
+    lo = S_b, hi = S_e, zero = k  — all shape [d] f32.
+    ``bits`` is B.  ``scale`` is the derived LSB size (S_e-S_b)/2^B.
+    """
+
+    lo: jax.Array
+    hi: jax.Array
+    zero: jax.Array
+    bits: int = dataclasses.field(metadata=dict(static=True))
+    scheme: str = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def scale(self) -> jax.Array:
+        return (self.hi - self.lo) / (2.0**self.bits)
+
+    @property
+    def qmin(self) -> int:
+        return -(2 ** (self.bits - 1))
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+    @property
+    def storage_dtype(self):
+        if self.bits <= 8:
+            return jnp.int8
+        if self.bits <= 16:
+            return jnp.int16
+        return jnp.int32
+
+    @property
+    def acc_dtype(self):
+        # int8 x int8 over d <= ~128k fits int32; wider codes accumulate in i32
+        # on the MXU as well (TPU int matmul accumulates in 32 bit).
+        return jnp.int32
+
+
+def params_from_stats(
+    stats: DimStats,
+    bits: int = 8,
+    scheme: Scheme | str = Scheme.GAUSSIAN,
+    sigmas: float = 1.0,
+) -> QuantParams:
+    """Turn per-dimension corpus stats into Eq. 1 constants."""
+    scheme = Scheme(scheme)
+    if scheme == Scheme.UNIFORM_GAUSSIAN:
+        stats = stats.uniform()
+
+    if scheme in (Scheme.GAUSSIAN, Scheme.UNIFORM_GAUSSIAN):
+        mu, sd = stats.mean, stats.std * sigmas
+        sd = jnp.maximum(sd, 1e-12)
+        lo, hi, zero = mu - sd, mu + sd, mu
+    elif scheme == Scheme.ABSMAX:
+        amax = jnp.maximum(stats.amax, 1e-12)
+        lo, hi = -amax, amax
+        zero = jnp.zeros_like(amax)
+    elif scheme == Scheme.MINMAX:
+        lo, hi = stats.vmin, stats.vmax
+        hi = jnp.where(hi - lo < 1e-12, lo + 1e-12, hi)
+        zero = (lo + hi) / 2.0
+    elif scheme == Scheme.GLOBAL_ABSMAX:
+        amax = jnp.maximum(jnp.max(stats.amax), 1e-12)
+        full = jnp.ones_like(stats.amax)
+        lo, hi = -amax * full, amax * full
+        zero = jnp.zeros_like(full)
+    elif scheme == Scheme.GLOBAL_MINMAX:
+        gmin, gmax = jnp.min(stats.vmin), jnp.max(stats.vmax)
+        gmax = jnp.where(gmax - gmin < 1e-12, gmin + 1e-12, gmax)
+        full = jnp.ones_like(stats.amax)
+        lo, hi = gmin * full, gmax * full
+        zero = (gmin + gmax) / 2.0 * full
+    else:  # pragma: no cover
+        raise ValueError(f"unknown scheme {scheme}")
+    return QuantParams(lo=lo, hi=hi, zero=zero, bits=bits, scheme=scheme.value)
+
+
+def learn_params(
+    corpus: jax.Array,
+    bits: int = 8,
+    scheme: Scheme | str = Scheme.GAUSSIAN,
+    sigmas: float = 1.0,
+    stats: Optional[DimStats] = None,
+) -> QuantParams:
+    """Fit Eq. 1 constants on a corpus ([N, d]) — the paper's MLE step.
+
+    ``stats`` may be passed directly (e.g. from StreamingStats or
+    distributed_stats) to skip the one-shot pass.
+    """
+    if stats is None:
+        stats = corpus_stats(corpus)
+    return params_from_stats(stats, bits=bits, scheme=scheme, sigmas=sigmas)
+
+
+def quantize(x: jax.Array, params: QuantParams) -> jax.Array:
+    """Eq. 1 applied elementwise over the trailing dim of ``x``.
+
+    Returns the smallest signed integer dtype that holds B bits.
+    """
+    span = jnp.maximum(params.hi - params.lo, 1e-12)
+    q = jnp.round((2.0**params.bits) * (x - params.zero) / span)
+    # Clamp semantics of Eq. 1: below-range -> -2^(B-1); above-range -> +2^(B-1),
+    # clipped to the storable max (see module docstring).
+    q = jnp.clip(q, params.qmin, params.qmax)
+    return q.astype(params.storage_dtype)
+
+
+def dequantize(q: jax.Array, params: QuantParams) -> jax.Array:
+    """Inverse linear map (midpoint reconstruction) — used only for
+    diagnostics; the paper computes distances directly in Z^d."""
+    return q.astype(jnp.float32) * params.scale + params.zero
+
+
+def quantization_error(x: jax.Array, params: QuantParams) -> jax.Array:
+    """Mean-squared reconstruction error (NOT the paper's objective — kept
+    to demonstrate that order preservation, not MSE, is what drives recall)."""
+    return jnp.mean((dequantize(quantize(x, params), params) - x) ** 2)
+
+
+# --------------------------------------------------------------------------
+# Convenience one-call API used by the index builders.
+# --------------------------------------------------------------------------
+
+def quantize_corpus(
+    corpus: jax.Array,
+    bits: int = 8,
+    scheme: Scheme | str = Scheme.GAUSSIAN,
+    sigmas: float = 1.0,
+):
+    """learn + apply: returns (codes, params)."""
+    params = learn_params(corpus, bits=bits, scheme=scheme, sigmas=sigmas)
+    return quantize(corpus, params), params

@@ -1,0 +1,164 @@
+"""Per-dimension corpus statistics for data-driven quantization (paper §3.2).
+
+The paper fits a per-dimension Gaussian N(mu^i, sigma^i) by maximum
+likelihood over the corpus I:
+
+    theta = argmax_theta  prod_{x in I} prod_i P(x^i ; theta)
+
+For a Gaussian this is exactly the per-dimension sample mean / std.  We
+provide three collectors:
+
+  * ``corpus_stats``      — one-shot over an in-memory [N, d] array.
+  * ``StreamingStats``    — Chan/Welford parallel-merge over batches, for
+                            corpora that do not fit in memory (the paper's
+                            PRODUCT60M regime).
+  * ``distributed_stats`` — the same moments reduced across a mesh axis with
+                            ``jax.lax.psum`` (used under ``shard_map`` when
+                            the corpus is row-sharded over devices).
+
+All return a :class:`DimStats` with per-dimension mean / std / absmax /
+min / max, which downstream ``quant.learn_params`` turns into the Eq. 1
+normalizing constants.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DimStats:
+    """Per-dimension first/second moments + range of a corpus."""
+
+    count: jax.Array   # scalar f64-ish (f32) number of rows seen
+    mean: jax.Array    # [d]
+    m2: jax.Array      # [d] sum of squared deviations (Welford)
+    amax: jax.Array    # [d] max |x|
+    vmin: jax.Array    # [d]
+    vmax: jax.Array    # [d]
+
+    @property
+    def var(self) -> jax.Array:
+        return self.m2 / jnp.maximum(self.count, 1.0)
+
+    @property
+    def std(self) -> jax.Array:
+        return jnp.sqrt(self.var)
+
+    def uniform(self) -> "DimStats":
+        """Collapse to a single (mu, sigma) across dims (paper §4.1).
+
+        Interdimensional uniformity: for normalized, low-variance corpora
+        the paper assumes one mean/std across all dimensions.  The pooled
+        variance must include the between-dimension spread of means.
+        """
+        d = self.mean.shape[0]
+        pooled_mean = jnp.mean(self.mean)
+        # E[x^2] pooled across dims, then recentre on the pooled mean.
+        ex2 = self.m2 / jnp.maximum(self.count, 1.0) + self.mean**2
+        pooled_var = jnp.mean(ex2) - pooled_mean**2
+        pooled_var = jnp.maximum(pooled_var, 0.0)
+        full = jnp.full((d,), 1.0, self.mean.dtype)
+        return DimStats(
+            count=self.count,
+            mean=full * pooled_mean,
+            m2=full * pooled_var * jnp.maximum(self.count, 1.0),
+            amax=full * jnp.max(self.amax),
+            vmin=full * jnp.min(self.vmin),
+            vmax=full * jnp.max(self.vmax),
+        )
+
+
+def corpus_stats(x: jax.Array) -> DimStats:
+    """One-shot per-dimension stats of a [N, d] corpus."""
+    x = x.astype(jnp.float32)
+    n = jnp.asarray(x.shape[0], jnp.float32)
+    mean = jnp.mean(x, axis=0)
+    m2 = jnp.sum((x - mean) ** 2, axis=0)
+    return DimStats(
+        count=n,
+        mean=mean,
+        m2=m2,
+        amax=jnp.max(jnp.abs(x), axis=0),
+        vmin=jnp.min(x, axis=0),
+        vmax=jnp.max(x, axis=0),
+    )
+
+
+def merge_stats(a: DimStats, b: DimStats) -> DimStats:
+    """Chan et al. parallel merge of two partial moment sets."""
+    n = a.count + b.count
+    safe_n = jnp.maximum(n, 1.0)
+    delta = b.mean - a.mean
+    mean = a.mean + delta * (b.count / safe_n)
+    m2 = a.m2 + b.m2 + delta**2 * (a.count * b.count / safe_n)
+    return DimStats(
+        count=n,
+        mean=jnp.where(n > 0, mean, 0.0),
+        m2=m2,
+        amax=jnp.maximum(a.amax, b.amax),
+        vmin=jnp.minimum(a.vmin, b.vmin),
+        vmax=jnp.maximum(a.vmax, b.vmax),
+    )
+
+
+class StreamingStats:
+    """Accumulate :class:`DimStats` over a stream of [n_i, d] batches.
+
+    Used by the data pipeline to fit quantization constants on corpora
+    larger than memory (one pass, O(d) state).  ``update`` is jit-friendly;
+    the object itself is a thin host-side holder.
+    """
+
+    def __init__(self, d: int, dtype=jnp.float32):
+        zero = jnp.zeros((d,), dtype)
+        self._s = DimStats(
+            count=jnp.zeros((), dtype),
+            mean=zero,
+            m2=zero,
+            amax=zero,
+            vmin=jnp.full((d,), jnp.inf, dtype),
+            vmax=jnp.full((d,), -jnp.inf, dtype),
+        )
+
+    def update(self, batch: jax.Array) -> "StreamingStats":
+        self._s = merge_stats(self._s, corpus_stats(batch))
+        return self
+
+    @property
+    def stats(self) -> DimStats:
+        return self._s
+
+
+@partial(jax.jit, static_argnames=("axis_name",))
+def _psum_stats(local: DimStats, axis_name: str) -> DimStats:
+    # Moment-merge across an axis: psum of count / weighted mean / m2 with
+    # the cross-shard correction term, max/min for ranges.
+    n = jax.lax.psum(local.count, axis_name)
+    safe_n = jnp.maximum(n, 1.0)
+    gmean = jax.lax.psum(local.mean * local.count, axis_name) / safe_n
+    # m2_global = sum_i [m2_i + n_i * (mean_i - gmean)^2]
+    m2 = jax.lax.psum(local.m2 + local.count * (local.mean - gmean) ** 2, axis_name)
+    return DimStats(
+        count=n,
+        mean=gmean,
+        m2=m2,
+        amax=jax.lax.pmax(local.amax, axis_name),
+        vmin=jax.lax.pmin(local.vmin, axis_name),
+        vmax=jax.lax.pmax(local.vmax, axis_name),
+    )
+
+
+def distributed_stats(local_shard: jax.Array, axis_name: str) -> DimStats:
+    """Per-dim stats of a row-sharded corpus, reduced over ``axis_name``.
+
+    Call inside ``shard_map``: each device computes moments of its local
+    [n_local, d] shard, then the shards are merged with a single psum —
+    O(d) bytes on the wire instead of O(N·d).
+    """
+    return _psum_stats(corpus_stats(local_shard), axis_name)

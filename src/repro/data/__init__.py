@@ -1,0 +1,9 @@
+# Data substrate: hermetic synthetic generators for every corpus the
+# paper and the assigned architectures touch — ANN corpora (narrow-band
+# product embeddings / SIFT-like / GloVe-like), LM token streams,
+# criteo-style CTR batches, graphs + a real fan-out neighbor sampler —
+# plus exact ground-truth computation for recall.
+from repro.data import graph_data, lm_data, recsys_data, synthetic
+from repro.data.groundtruth import exact_topk
+
+__all__ = ["graph_data", "lm_data", "recsys_data", "synthetic", "exact_topk"]

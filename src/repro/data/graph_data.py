@@ -1,0 +1,142 @@
+"""Graph data substrate: synthetic graphs in the four assigned shape
+regimes plus a real GraphSAGE-style fan-out neighbor sampler (required by
+the ``minibatch_lg`` cell — "needs a real neighbor sampler").
+
+Graphs are (node_feat [N, F], senders [E], receivers [E], mask [E])
+flat-padded edge lists — the segment_sum-ready layout used across the GNN
+stack (JAX has no CSR; scatter over edge indices IS the system here).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Graph:
+    node_feat: jax.Array          # [N, F] (or positions [N, 3] for molecules)
+    senders: jax.Array            # [E] i32
+    receivers: jax.Array          # [E] i32
+    edge_mask: jax.Array          # [E] bool
+    n_nodes: int
+    positions: Optional[jax.Array] = None   # [N, 3] for molecular graphs
+    labels: Optional[jax.Array] = None
+
+
+def random_graph(
+    n_nodes: int, n_edges: int, d_feat: int, key: jax.Array | None = None
+) -> Graph:
+    """Erdos-Renyi-ish graph with power-law-ish degree (preferential hubs)."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    # hub-biased endpoints: square a uniform to concentrate on low ids
+    s = (jax.random.uniform(k1, (n_edges,)) ** 2 * n_nodes).astype(jnp.int32)
+    r = jax.random.randint(k2, (n_edges,), 0, n_nodes, dtype=jnp.int32)
+    feat = jax.random.normal(k3, (n_nodes, d_feat)) * 0.5
+    labels = jax.random.randint(k4, (n_nodes,), 0, 16, dtype=jnp.int32)
+    return Graph(
+        node_feat=feat,
+        senders=jnp.clip(s, 0, n_nodes - 1),
+        receivers=r,
+        edge_mask=jnp.ones((n_edges,), jnp.bool_),
+        n_nodes=n_nodes,
+        labels=labels,
+    )
+
+
+def random_molecules(
+    batch: int, n_atoms: int, n_edges_per: int, key: jax.Array | None = None
+) -> Graph:
+    """Batched small molecules (the ``molecule`` cell): one disjoint-union
+    graph with block-diagonal connectivity and 3-D positions for SchNet."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    n = batch * n_atoms
+    pos = jax.random.normal(k1, (batch, n_atoms, 3)) * 2.0
+    z = jax.random.randint(k2, (batch, n_atoms), 1, 10, dtype=jnp.int32)  # atomic numbers
+
+    s = jax.random.randint(k3, (batch, n_edges_per), 0, n_atoms, dtype=jnp.int32)
+    r = jax.random.randint(k4, (batch, n_edges_per), 0, n_atoms, dtype=jnp.int32)
+    offs = (jnp.arange(batch, dtype=jnp.int32) * n_atoms)[:, None]
+    return Graph(
+        node_feat=z.reshape(-1),                       # atomic numbers [N]
+        senders=(s + offs).reshape(-1),
+        receivers=(r + offs).reshape(-1),
+        edge_mask=jnp.ones((batch * n_edges_per,), jnp.bool_),
+        n_nodes=n,
+        positions=pos.reshape(-1, 3),
+        labels=jax.random.normal(k1, (batch,)),        # per-mol energy target
+    )
+
+
+# --------------------------------------------------------------------------
+# Neighbor sampler (GraphSAGE fan-out) — host-side, numpy CSR
+# --------------------------------------------------------------------------
+
+class NeighborSampler:
+    """Uniform fan-out sampler over a static graph.
+
+    Builds a CSR adjacency once (numpy), then ``sample(seed_nodes,
+    fanouts)`` returns a fixed-shape padded subgraph: layered gather ids
+    and edge lists compatible with the segment_sum message passing.  This
+    is the real sampler the ``minibatch_lg`` cell requires.
+    """
+
+    def __init__(self, senders: np.ndarray, receivers: np.ndarray, n_nodes: int):
+        order = np.argsort(receivers, kind="stable")
+        self.dst_sorted_src = senders[order]
+        self.indptr = np.zeros(n_nodes + 1, np.int64)
+        np.add.at(self.indptr, receivers + 1, 1)
+        self.indptr = np.cumsum(self.indptr)
+        self.n_nodes = n_nodes
+
+    def sample(
+        self, seeds: np.ndarray, fanouts: tuple[int, ...], rng: np.random.Generator
+    ):
+        """Returns (all_nodes [M], layers) where each layer has
+        (senders_local, receivers_local, mask) into all_nodes."""
+        frontier = np.unique(seeds)
+        all_nodes = [frontier]
+        layers = []
+        for fan in fanouts:
+            src_list, dst_list = [], []
+            for v in frontier:
+                lo, hi = self.indptr[v], self.indptr[v + 1]
+                deg = hi - lo
+                if deg == 0:
+                    continue
+                take = rng.integers(0, deg, size=fan)
+                nbrs = self.dst_sorted_src[lo + take]
+                src_list.append(nbrs)
+                dst_list.append(np.full(fan, v, np.int64))
+            if src_list:
+                src = np.concatenate(src_list)
+                dst = np.concatenate(dst_list)
+            else:
+                src = np.zeros(0, np.int64)
+                dst = np.zeros(0, np.int64)
+            layers.append((src, dst))
+            frontier = np.unique(src)
+            all_nodes.append(frontier)
+
+        nodes = np.unique(np.concatenate(all_nodes))
+        remap = {int(g): i for i, g in enumerate(nodes)}
+        out_layers = []
+        for src, dst in layers:
+            pad = max(len(src), 1)
+            s_l = np.zeros(pad, np.int32)
+            r_l = np.zeros(pad, np.int32)
+            m_l = np.zeros(pad, bool)
+            for i, (a, b) in enumerate(zip(src, dst)):
+                s_l[i] = remap[int(a)]
+                r_l[i] = remap[int(b)]
+                m_l[i] = True
+            out_layers.append((s_l, r_l, m_l))
+        return nodes.astype(np.int64), out_layers

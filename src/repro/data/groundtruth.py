@@ -1,0 +1,12 @@
+"""Exact ground-truth computation for recall measurement (paper §5.3)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.knn.flat import FlatIndex
+
+
+def exact_topk(corpus: jax.Array, queries: jax.Array, k: int, metric: str):
+    """fp32 exhaustive top-k — S_E of the paper's recall definition."""
+    return FlatIndex.build(corpus, metric=metric).search(queries, k)

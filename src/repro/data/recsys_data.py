@@ -1,0 +1,69 @@
+"""Criteo-style synthetic recsys batches: dense floats + multi-hot sparse
+categorical ids with a power-law id distribution (the regime that makes
+embedding-table sharding and the paper's int8 tables interesting).
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def _powerlaw_ids(key: jax.Array, shape, vocab: int) -> jax.Array:
+    """Zipf-ish ids: heavy head, long tail — like real ctr logs."""
+    u = jax.random.uniform(key, shape, minval=1e-6, maxval=1.0)
+    # inverse-CDF of p(i) ~ 1/(i+1): i = (vocab^u - 1)
+    ids = jnp.expm1(u * jnp.log(float(vocab))).astype(jnp.int32)
+    return jnp.clip(ids, 0, vocab - 1)
+
+
+def ctr_batch(
+    key: jax.Array,
+    batch: int,
+    n_dense: int,
+    vocab_sizes: Sequence[int],
+    seq_len: int = 0,
+) -> dict[str, jax.Array]:
+    """One CTR batch.
+
+    Returns dense [B, n_dense] f32, sparse ids [B, F] i32, label [B] f32,
+    and optionally a behaviour-sequence hist_ids [B, seq_len] (DIEN).
+    """
+    keys = jax.random.split(key, 4 + len(vocab_sizes))
+    dense = jax.random.normal(keys[0], (batch, n_dense)) if n_dense else jnp.zeros((batch, 0))
+    sparse = jnp.stack(
+        [
+            _powerlaw_ids(keys[2 + f], (batch,), v)
+            for f, v in enumerate(vocab_sizes)
+        ],
+        axis=1,
+    )
+    label = (jax.random.uniform(keys[1], (batch,)) < 0.25).astype(jnp.float32)
+    out = {"dense": dense.astype(jnp.float32), "sparse": sparse, "label": label}
+    if seq_len:
+        out["hist_ids"] = _powerlaw_ids(keys[-1], (batch, seq_len), int(vocab_sizes[0]))
+        out["hist_mask"] = jnp.ones((batch, seq_len), jnp.float32)
+    return out
+
+
+def batch_iterator(
+    batch: int,
+    n_dense: int,
+    vocab_sizes: Sequence[int],
+    seq_len: int = 0,
+    seed: int = 0,
+    sharding=None,
+    start_step: int = 0,
+) -> Iterator[dict[str, jax.Array]]:
+    step = start_step
+    while True:
+        b = ctr_batch(
+            jax.random.fold_in(jax.random.PRNGKey(seed), step),
+            batch, n_dense, vocab_sizes, seq_len,
+        )
+        if sharding is not None:
+            b = jax.device_put(b, sharding)
+        yield b
+        step += 1

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the paper's compute hot-spots:
+#   qmip     — fused int8 maximum-inner-product scoring (the query hot path)
+#   ql2      — fused int8 negated squared-L2 scoring
+#   quantize — Eq. 1 clamped-linear fp32 -> int8 corpus compression
+# Each has a pure-jnp oracle in ref.py; ops.py is the public jit'd surface.
+from repro.kernels.ops import qmip, ql2, quantize
+
+__all__ = ["qmip", "ql2", "quantize"]

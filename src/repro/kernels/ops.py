@@ -1,0 +1,114 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Responsibilities:
+  * pad ragged (Q, N) up to tile multiples and slice the result back,
+  * pick sane tile sizes for small inputs,
+  * run ``interpret=True`` automatically off-TPU (this container is CPU) so
+    the same call sites work everywhere,
+  * expose a ``use_pallas=False`` escape hatch that routes to the pure-jnp
+    reference (used under ``shard_map`` cells where the XLA int8 dot is
+    already optimal and for the dry-run, where kernel lowering to the host
+    platform is not the point).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import qmip as _qmip
+from repro.kernels import ql2 as _ql2
+from repro.kernels import quantize as _quantize
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def _pick_tile(n: int, pref: int, unit: int = 8) -> int:
+    """Largest tile <= pref that keeps padding waste small for tiny n."""
+    if n >= pref:
+        return pref
+    return max(unit, _round_up(n, unit))
+
+
+def _pad_rows(a: jax.Array, rows: int) -> jax.Array:
+    pad = rows - a.shape[0]
+    if pad == 0:
+        return a
+    return jnp.pad(a, ((0, pad), (0, 0)))
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def qmip(
+    q_codes: jax.Array,
+    x_codes: jax.Array,
+    *,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """int8 MIP scores [Q, N] int32 — fused MXU kernel with padding."""
+    if not use_pallas:
+        return _ref.qmip_ref(q_codes, x_codes)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    Q, _ = q_codes.shape
+    N, _ = x_codes.shape
+    bq = _pick_tile(Q, _qmip.BQ)
+    bn = _pick_tile(N, _qmip.BN)
+    qp = _pad_rows(q_codes, _round_up(Q, bq))
+    xp = _pad_rows(x_codes, _round_up(N, bn))
+    out = _qmip.qmip_pallas(qp, xp, bq=bq, bn=bn, interpret=interp)
+    return out[:Q, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def ql2(
+    q_codes: jax.Array,
+    x_codes: jax.Array,
+    *,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """int8 negated squared-L2 scores [Q, N] int32."""
+    if not use_pallas:
+        return _ref.ql2_ref(q_codes, x_codes)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    Q, _ = q_codes.shape
+    N, _ = x_codes.shape
+    bq = _pick_tile(Q, _ql2.BQ)
+    bn = _pick_tile(N, _ql2.BN)
+    qp = _pad_rows(q_codes, _round_up(Q, bq))
+    xp = _pad_rows(x_codes, _round_up(N, bn))
+    out = _ql2.ql2_pallas(qp, xp, bq=bq, bn=bn, interpret=interp)
+    return out[:Q, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "use_pallas", "interpret"))
+def quantize(
+    x: jax.Array,
+    lo: jax.Array,
+    hi: jax.Array,
+    zero: jax.Array,
+    *,
+    bits: int = 8,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Eq. 1 corpus compression [N, d] f32 -> int8."""
+    if not use_pallas:
+        return _ref.quantize_ref(x, lo, hi, zero, bits=bits)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    N, _ = x.shape
+    bn = _pick_tile(N, _quantize.BN, unit=8)
+    xp = _pad_rows(x, _round_up(N, bn))
+    out = _quantize.quantize_pallas(
+        xp, lo, hi, zero, bits=bits, bn=bn, interpret=interp
+    )
+    return out[:N]

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: fused int8 (negated) squared-L2 scoring.
+
+Same tiling story as :mod:`repro.kernels.qmip` — the O(Q*N*d) term is the
+int8 MXU matmul; the per-row squared norms are recomputed in-kernel per
+tile (O((BQ+BN)*d) int work, negligible against the BQ*BN*d matmul) which
+keeps the kernel single-pass and avoids a second HBM-resident norm array.
+
+    out[i, j] = -( ||q_i||^2 + ||x_j||^2 - 2 q_i . x_j )   (int32)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BQ = 128
+BN = 512
+
+
+def _ql2_kernel(q_ref, x_ref, o_ref):
+    q = q_ref[...].astype(jnp.int32)    # (BQ, d)
+    x = x_ref[...].astype(jnp.int32)    # (BN, d)
+    dot = jax.lax.dot_general(
+        q_ref[...],
+        x_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )                                    # (BQ, BN)
+    qq = jnp.sum(q * q, axis=-1, keepdims=True)      # (BQ, 1)
+    xx = jnp.sum(x * x, axis=-1)[None, :]            # (1, BN)
+    o_ref[...] = -(qq + xx - 2 * dot)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bn", "interpret"))
+def ql2_pallas(
+    q_codes: jax.Array,
+    x_codes: jax.Array,
+    *,
+    bq: int = BQ,
+    bn: int = BN,
+    interpret: bool = False,
+) -> jax.Array:
+    """[Q, d] int8 x [N, d] int8 -> [Q, N] int32 negated squared L2."""
+    Q, d = q_codes.shape
+    N, d2 = x_codes.shape
+    assert d == d2, (d, d2)
+    assert Q % bq == 0 and N % bn == 0, (Q, N, bq, bn)
+
+    grid = (Q // bq, N // bn)
+    return pl.pallas_call(
+        _ql2_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Q, N), jnp.int32),
+        interpret=interpret,
+    )(q_codes, x_codes)

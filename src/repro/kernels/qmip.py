@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: fused int8 maximum-inner-product scoring.
+
+The paper's hot path — scoring a batch of quantized queries against a tile
+of the quantized corpus — mapped onto the TPU MXU:
+
+  * corpus codes stream HBM -> VMEM in (BN, d) int8 tiles,
+  * query codes sit VMEM-resident in (BQ, d) int8 tiles,
+  * one ``dot_general`` with ``preferred_element_type=int32`` per tile pair
+    drives the MXU's native int8 x int8 -> int32 path (~2x bf16 peak on
+    TPU v5e),
+  * the int32 score tile (BQ, BN) is written straight out — no fp32
+    intermediates ever touch HBM.
+
+Tiling rationale (v5e): the MXU is 128x128; int8 VREG lanes are 128 wide.
+BQ=128 aligns the output sublane dim, BN=512 amortizes corpus-tile DMA
+against 4 MXU passes, and d is carried whole per tile (embedding dims here
+are <= 4096, so a (512, 4096) int8 corpus tile is 2 MiB — comfortably
+inside a ~16 MiB VMEM budget together with the query tile and the int32
+accumulator tile).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes — overridable from ops.py for the shape sweep tests.
+BQ = 128   # query rows per tile (MXU sublane-aligned)
+BN = 512   # corpus rows per tile
+LANE = 128 # last-dim alignment unit
+
+
+def _qmip_kernel(q_ref, x_ref, o_ref):
+    """One (BQ, BN) output tile: int8 dot int8 -> int32 on the MXU."""
+    q = q_ref[...]                      # (BQ, d) int8
+    x = x_ref[...]                      # (BN, d) int8
+    o_ref[...] = jax.lax.dot_general(
+        q,
+        x,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bn", "interpret"))
+def qmip_pallas(
+    q_codes: jax.Array,
+    x_codes: jax.Array,
+    *,
+    bq: int = BQ,
+    bn: int = BN,
+    interpret: bool = False,
+) -> jax.Array:
+    """[Q, d] int8 x [N, d] int8 -> [Q, N] int32 scores.
+
+    Q must be a multiple of ``bq`` and N of ``bn`` (ops.py pads).  d is
+    carried un-tiled: per-tile VMEM = bq*d + bn*d (int8) + bq*bn*4 bytes.
+    """
+    Q, d = q_codes.shape
+    N, d2 = x_codes.shape
+    assert d == d2, (d, d2)
+    assert Q % bq == 0 and N % bn == 0, (Q, N, bq, bn)
+
+    grid = (Q // bq, N // bn)
+    return pl.pallas_call(
+        _qmip_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Q, N), jnp.int32),
+        interpret=interpret,
+    )(q_codes, x_codes)

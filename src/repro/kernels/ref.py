@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (exactly, for
+integer outputs) across the shape/dtype sweeps in tests/test_kernels_*.py.
+They deliberately share no code with the kernels.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def qmip_ref(q_codes: jax.Array, x_codes: jax.Array) -> jax.Array:
+    """[Q, d] int x [N, d] int -> [Q, N] int32 inner products."""
+    return jnp.dot(
+        q_codes.astype(jnp.int32), x_codes.astype(jnp.int32).T
+    ).astype(jnp.int32)
+
+
+def ql2_ref(q_codes: jax.Array, x_codes: jax.Array) -> jax.Array:
+    """[Q, d] int x [N, d] int -> [Q, N] int32 negated squared L2."""
+    qi = q_codes.astype(jnp.int32)
+    xi = x_codes.astype(jnp.int32)
+    diff = qi[:, None, :] - xi[None, :, :]
+    return -jnp.sum(diff * diff, axis=-1).astype(jnp.int32)
+
+
+def quantize_ref(
+    x: jax.Array,
+    lo: jax.Array,
+    hi: jax.Array,
+    zero: jax.Array,
+    bits: int = 8,
+) -> jax.Array:
+    """Eq. 1 clamped linear quantization, elementwise oracle."""
+    span = jnp.maximum(hi - lo, 1e-12)
+    q = jnp.round((2.0**bits) * (x.astype(jnp.float32) - zero) / span)
+    return jnp.clip(q, -(2 ** (bits - 1)), 2 ** (bits - 1) - 1).astype(jnp.int8)

@@ -1,0 +1,23 @@
+# KNN substrate: the index structures the paper plugs its quantization
+# into — exact flat scan (FAISS-flat), IVF (TPU-native), HNSW (the paper's
+# primary target), and an NGT-equivalent graph index — plus streaming and
+# distributed top-k machinery and graph-construction utilities.
+from repro.knn.flat import FlatIndex
+from repro.knn.ivf import IVFIndex, kmeans
+from repro.knn.hnsw import HNSWIndex
+from repro.knn.graph_index import GraphIndex
+from repro.knn.topk import chunked_topk, distributed_topk, merge_topk
+from repro.knn.graph_utils import knn_graph, radius_graph
+
+__all__ = [
+    "FlatIndex",
+    "IVFIndex",
+    "kmeans",
+    "HNSWIndex",
+    "GraphIndex",
+    "chunked_topk",
+    "distributed_topk",
+    "merge_topk",
+    "knn_graph",
+    "radius_graph",
+]

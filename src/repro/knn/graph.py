@@ -1,0 +1,176 @@
+"""Graph beam search (HNSW SEARCH-LAYER) as a pure-JAX bounded loop.
+
+TPU adaptation: HNSWlib's priority-queue walk is replaced by a fixed-width
+beam held in registers/VMEM — per iteration we expand the best unexpanded
+beam entry, gather its adjacency row, score the unvisited neighbors
+against the query, and fold them into the beam with one ``top_k``.  The
+loop is a ``lax.while_loop`` with static bounds, so the whole search jits
+and vmaps over queries.
+
+Semantics match HNSW's SEARCH-LAYER: the beam *is* the W set (size ef);
+candidates that fall out of the top-ef are dropped, and the walk stops
+when every beam entry has been expanded (or at the iteration cap).
+
+Distances: ``score_set`` computes larger-is-closer scores of a gathered id
+set against the query — fp32 or the paper's int8 integer-domain scoring,
+chosen by the caller.  This is exactly where the paper swaps fp32 for int8
+inside HNSW/NGT.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+NEG = jnp.finfo(jnp.float32).min
+
+ScoreSet = Callable[[jax.Array, jax.Array], jax.Array]  # (q [d], ids [m]) -> [m] f32
+
+
+def make_score_set(data: jax.Array, metric: str, quantized: bool) -> ScoreSet:
+    """Build a (query, ids) -> scores closure over the index payload."""
+    from repro.core import distances as D
+
+    def score_set(q: jax.Array, ids: jax.Array) -> jax.Array:
+        vecs = data[ids]                                        # [m, d]
+        return D.scores(q[None], vecs, metric, quantized=quantized)[0].astype(
+            jnp.float32
+        )
+
+    return score_set
+
+
+@partial(jax.jit, static_argnames=("score_set", "ef", "max_iters"))
+def beam_search(
+    q: jax.Array,
+    adj: jax.Array,
+    entry_ids: jax.Array,
+    score_set: ScoreSet,
+    ef: int,
+    max_iters: int | None = None,
+):
+    """Single-query beam search over one graph layer.
+
+    Args:
+      q: [d] query (codes or fp32 — whatever score_set expects).
+      adj: [N, M] int32 adjacency, -1 padded.
+      entry_ids: [E] int32 entry points (-1 padded allowed).
+      ef: beam width (W-set size).
+      max_iters: expansion cap; defaults to 8 * ef.
+
+    Returns (beam_scores [ef], beam_ids [ef]) sorted best-first.
+    """
+    n_nodes, m = adj.shape
+    if max_iters is None:
+        max_iters = 8 * ef
+    e = entry_ids.shape[0]
+
+    valid_e = entry_ids >= 0
+    e_scores = jnp.where(valid_e, score_set(q, jnp.clip(entry_ids, 0)), NEG)
+
+    pad = max(ef - e, 0)
+    beam_ids = jnp.concatenate([entry_ids, jnp.full((pad,), -1, jnp.int32)])[:ef]
+    beam_scores = jnp.concatenate([e_scores, jnp.full((pad,), NEG)])[:ef]
+    # invalid slots count as already-expanded so they are never picked
+    expanded = beam_ids < 0
+    if e > ef:
+        top_s, pos = jax.lax.top_k(
+            jnp.where(valid_e, e_scores, NEG), ef
+        )
+        beam_ids = jnp.where(top_s > NEG, entry_ids[pos], -1)
+        beam_scores = top_s
+        expanded = beam_ids < 0
+
+    visited = jnp.zeros((n_nodes,), jnp.bool_)
+    visited = visited.at[jnp.clip(entry_ids, 0)].max(valid_e)
+
+    def cond(state):
+        it, _, _, expanded, _ = state
+        return (it < max_iters) & jnp.any(~expanded)
+
+    def body(state):
+        it, b_ids, b_scores, expanded, visited = state
+        pick = jnp.where(~expanded, b_scores, NEG)
+        pos = jnp.argmax(pick)
+        node = b_ids[pos]
+        expanded = expanded.at[pos].set(True)
+
+        nbrs = adj[jnp.clip(node, 0)]                           # [M]
+        safe = jnp.clip(nbrs, 0)
+        fresh = (nbrs >= 0) & (~visited[safe])
+        visited = visited.at[safe].max(fresh)
+
+        n_scores = jnp.where(fresh, score_set(q, safe), NEG)
+        n_ids = jnp.where(fresh, nbrs, -1)
+
+        all_s = jnp.concatenate([b_scores, n_scores])
+        all_i = jnp.concatenate([b_ids, n_ids])
+        all_e = jnp.concatenate([expanded, ~fresh])
+        top_s, idx = jax.lax.top_k(all_s, ef)
+        return (
+            it + 1,
+            jnp.where(top_s > NEG, all_i[idx], -1),
+            top_s,
+            jnp.where(top_s > NEG, all_e[idx], True),
+            visited,
+        )
+
+    _, beam_ids, beam_scores, _, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), beam_ids, beam_scores, expanded, visited)
+    )
+    return beam_scores, beam_ids
+
+
+def beam_search_batch(
+    queries: jax.Array,
+    adj: jax.Array,
+    entry_ids: jax.Array,
+    score_set: ScoreSet,
+    ef: int,
+    max_iters: int | None = None,
+):
+    """vmap of :func:`beam_search` over a [Q, d] query batch.
+
+    ``entry_ids`` is either [E] (shared entries) or [Q, E] (per query).
+    """
+    if entry_ids.ndim == 1:
+        entry_ids = jnp.broadcast_to(entry_ids[None], (queries.shape[0],) + entry_ids.shape)
+    fn = partial(beam_search, score_set=score_set, ef=ef, max_iters=max_iters)
+    return jax.vmap(lambda qq, ee: fn(qq, adj, ee))(queries, entry_ids)
+
+
+def greedy_descent(
+    q: jax.Array,
+    adj: jax.Array,
+    entry: jax.Array,
+    score_set: ScoreSet,
+    max_iters: int = 64,
+):
+    """ef=1 hill-climb used on HNSW's upper layers: walk to a local max."""
+    e_score = score_set(q, entry[None])[0]
+
+    def cond(state):
+        it, _, _, improved = state
+        return (it < max_iters) & improved
+
+    def body(state):
+        it, node, score, _ = state
+        nbrs = adj[node]
+        safe = jnp.clip(nbrs, 0)
+        n_scores = jnp.where(nbrs >= 0, score_set(q, safe), NEG)
+        best = jnp.argmax(n_scores)
+        better = n_scores[best] > score
+        return (
+            it + 1,
+            jnp.where(better, nbrs[best], node),
+            jnp.maximum(n_scores[best], score),
+            better,
+        )
+
+    _, node, score, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), entry, e_score, jnp.bool_(True))
+    )
+    return node, score

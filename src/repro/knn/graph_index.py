@@ -1,0 +1,161 @@
+"""NGT-equivalent: neighborhood-graph + seed-structure index (ONNG-style).
+
+NGT ("Neighborhood Graph and Tree", Iwasaki & Miyazaki) couples a kNN
+graph with a VP-tree used only to pick search entry points.  A VP-tree is
+a pointer/branch structure with no TPU analogue, so per DESIGN.md we keep
+the *role* (cheap entry-point selection) and swap the mechanism: a k-means
+centroid table scored with one small matmul — the same coarse-quantizer
+trick IVF uses.  The neighborhood graph itself is the exact kNN graph made
+bidirectional and degree-capped (ANNG/ONNG construction), searched with
+the same beam walk as HNSW.
+
+The quantized variant stores int8 codes and scores in the integer domain —
+the paper's Table 3 experiment.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distances as D
+from repro.core import quant as Qz
+from repro.kernels import ops as K
+from repro.knn import graph as G
+from repro.knn import ivf as IVF
+from repro.knn.flat import FlatIndex
+
+
+@dataclasses.dataclass
+class GraphIndex:
+    metric: str
+    quantized: bool
+    degree: int
+    data: jax.Array
+    params: Optional[Qz.QuantParams]
+    adj: jax.Array                      # [N, degree] int32, -1 pad
+    seeds: jax.Array                    # [n_seeds, d] f32 centroids
+    seed_ids: jax.Array                 # [n_seeds] nearest corpus row per centroid
+    build_seconds: float = 0.0
+    # MIP -> L2 reduction (Bachrach et al. [6], cited by the paper): graph
+    # walks on inner product suffer hub capture; augmenting vectors with
+    # sqrt(M^2 - ||x||^2) makes L2 ordering == IP ordering, and the graph
+    # becomes metric.  internal_metric is what the walk actually uses.
+    internal_metric: str = "l2"
+    aug: bool = False
+
+    @property
+    def n(self) -> int:
+        return self.data.shape[0]
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def build(
+        corpus: jax.Array,
+        degree: int = 32,
+        n_seeds: int = 32,
+        metric: str = "ip",
+        quantized: bool = False,
+        bits: int = 8,
+        scheme: str | Qz.Scheme = Qz.Scheme.GAUSSIAN,
+        sigmas: float = 1.0,
+        key: jax.Array | None = None,
+    ) -> "GraphIndex":
+        t0 = time.perf_counter()
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        corpus = jnp.asarray(corpus, jnp.float32)
+
+        aug = metric == "ip"
+        internal_metric = "l2" if aug else metric
+        if aug:
+            norms2 = jnp.sum(corpus * corpus, axis=-1)
+            extra = jnp.sqrt(jnp.maximum(jnp.max(norms2) - norms2, 0.0))
+            corpus = jnp.concatenate([corpus, extra[:, None]], axis=-1)
+        n, d = corpus.shape
+
+        params = None
+        data = corpus
+        if quantized:
+            params = Qz.learn_params(corpus, bits=bits, scheme=scheme, sigmas=sigmas)
+            data = K.quantize(corpus, params.lo, params.hi, params.zero, bits=params.bits)
+
+        # exact kNN graph in the *index's own distance domain* (int8 for the
+        # quantized index — build-time speedup is the paper's Table 1 claim)
+        flat = FlatIndex(
+            metric=internal_metric, quantized=quantized, n=n,
+            vectors=None if quantized else data,
+            codes=data if quantized else None, params=params,
+        )
+        half = max(degree // 2, 1)
+        _, nbr = flat.search(data if not quantized else Qz.dequantize(data, params),
+                             k=half + 1)
+        nbr = np.asarray(nbr)[:, 1:]                       # drop self
+
+        # bidirectional + cap (ONNG outdegree adjustment)
+        adj = np.full((n, degree), -1, np.int32)
+        counts = np.zeros(n, np.int32)
+        for i in range(n):
+            for j in nbr[i]:
+                if j < 0:
+                    continue
+                if counts[i] < degree:
+                    adj[i, counts[i]] = j
+                    counts[i] += 1
+                if counts[j] < degree:
+                    adj[j, counts[j]] = i
+                    counts[j] += 1
+
+        # seed structure: k-means centroids + their nearest corpus rows
+        cents = IVF.kmeans(corpus, min(n_seeds, n), key)
+        seed_ids = jnp.argmax(D.l2_scores(cents, corpus), axis=-1).astype(jnp.int32)
+
+        idx = GraphIndex(
+            metric=metric, quantized=quantized, degree=degree, data=data,
+            params=params, adj=jnp.asarray(adj), seeds=cents, seed_ids=seed_ids,
+            internal_metric=internal_metric, aug=aug,
+        )
+        idx.build_seconds = time.perf_counter() - t0
+        return idx
+
+    # ------------------------------------------------------------------
+    def prepare_queries(self, queries: jax.Array) -> jax.Array:
+        """queries must already be in the (possibly augmented) index space."""
+        if not self.quantized:
+            return jnp.asarray(queries, jnp.float32)
+        p = self.params
+        return K.quantize(queries, p.lo, p.hi, p.zero, bits=p.bits)
+
+    def search(self, queries: jax.Array, k: int, ef_search: int = 100):
+        qf = jnp.asarray(queries, jnp.float32)
+        if self.aug:
+            qf = jnp.concatenate(
+                [qf, jnp.zeros((qf.shape[0], 1), jnp.float32)], axis=-1
+            )
+        q = self.prepare_queries(qf)
+        score_set = G.make_score_set(self.data, self.internal_metric, self.quantized)
+
+        # entry points: best seeds by centroid score (the "tree" role)
+        cent_metric = self.internal_metric
+        cs = D.scores(qf, self.seeds, cent_metric)
+        n_entry = min(8, self.seeds.shape[0])
+        entry = self.seed_ids[jax.lax.top_k(cs, n_entry)[1]]    # [Q, n_entry]
+
+        ef = max(ef_search, k)
+        scores, ids = G.beam_search_batch(
+            q, self.adj, entry, score_set=score_set, ef=ef
+        )
+        return scores[:, :k], ids[:, :k]
+
+    def memory_bytes(self) -> int:
+        d = self.data.shape[1]
+        vec = self.n * d * (1 if self.quantized else 4)
+        graph = int(self.adj.size) * 4
+        seeds = int(self.seeds.size) * 4 + int(self.seed_ids.size) * 4
+        consts = 3 * d * 4 if self.params is not None else 0
+        return vec + graph + seeds + consts

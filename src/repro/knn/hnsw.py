@@ -1,0 +1,203 @@
+"""HNSW (Malkov & Yashunin) with the paper's int8 quantization as a
+drop-in storage/distance option — the paper's primary evaluation target.
+
+Layout: layer l adjacency is a dense int32 [N, M_max(l)] array (-1 padded),
+M_max(0) = 2M, M_max(l>0) = M (HNSWlib convention).  Build is host-
+orchestrated (as in HNSWlib, where C++ drives and the distance kernel is
+the hot loop): inserts proceed in batches whose candidate searches are
+vmapped jitted beam searches over the *current* graph — the stale-reads-
+within-a-batch approximation used by batched GPU builders (GGNN) — then
+connections are committed on the host with top-M_max pruning.
+
+The quantized index stores only int8 codes; every distance inside both
+build and search is the paper's integer-domain phi.  That is precisely the
+paper's Table 1 experiment (build time & memory, fp32 vs int8 HNSW).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant as Qz
+from repro.kernels import ops as K
+from repro.knn import graph as G
+
+
+@dataclasses.dataclass
+class HNSWIndex:
+    metric: str
+    quantized: bool
+    m: int
+    data: jax.Array                      # [N, d] f32 or int8 codes
+    params: Optional[Qz.QuantParams]
+    layers: list[jax.Array]              # adj per layer, layer 0 first
+    levels: np.ndarray                   # [N] int
+    entry: int
+    build_seconds: float = 0.0
+
+    # ------------------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return self.data.shape[0]
+
+    def _score_set(self) -> G.ScoreSet:
+        return G.make_score_set(self.data, self.metric, self.quantized)
+
+    def prepare_queries(self, queries: jax.Array) -> jax.Array:
+        if not self.quantized:
+            return jnp.asarray(queries, jnp.float32)
+        p = self.params
+        return K.quantize(queries, p.lo, p.hi, p.zero, bits=p.bits)
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def build(
+        corpus: jax.Array,
+        m: int = 16,
+        ef_construction: int = 100,
+        metric: str = "ip",
+        quantized: bool = False,
+        bits: int = 8,
+        scheme: str | Qz.Scheme = Qz.Scheme.GAUSSIAN,
+        sigmas: float = 1.0,
+        key: jax.Array | None = None,
+        batch_size: int = 64,
+        params: Optional[Qz.QuantParams] = None,
+    ) -> "HNSWIndex":
+        t0 = time.perf_counter()
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        corpus = jnp.asarray(corpus, jnp.float32)
+        n, d = corpus.shape
+
+        data = corpus
+        if quantized:
+            if params is None:
+                params = Qz.learn_params(corpus, bits=bits, scheme=scheme, sigmas=sigmas)
+            data = K.quantize(corpus, params.lo, params.hi, params.zero, bits=params.bits)
+
+        # level sampling: floor(-ln U * mL), mL = 1/ln M
+        ml = 1.0 / math.log(m)
+        u = np.asarray(jax.random.uniform(key, (n,), minval=1e-12, maxval=1.0))
+        levels = np.floor(-np.log(u) * ml).astype(np.int32)
+        max_level = int(levels.max())
+
+        caps = [2 * m] + [m] * max_level
+        adj = [np.full((n, caps[l]), -1, np.int32) for l in range(max_level + 1)]
+
+        score_set = G.make_score_set(data, metric, quantized)
+
+        # ---- seed: first few points fully interconnected --------------
+        seed_n = min(m + 1, n)
+        for p in range(seed_n):
+            for l in range(levels[p] + 1):
+                others = [o for o in range(seed_n) if o != p and levels[o] >= l]
+                adj[l][p, : min(len(others), caps[l])] = others[: caps[l]]
+        entry = int(np.argmax(levels[:seed_n]))
+
+        def _prune(ids: np.ndarray, scores: np.ndarray, cap: int) -> np.ndarray:
+            order = np.argsort(-scores)
+            return ids[order][:cap]
+
+        qdata = np.asarray(data)
+
+        # ---- batched incremental inserts ------------------------------
+        for start in range(seed_n, n, batch_size):
+            stop = min(start + batch_size, n)
+            ids = np.arange(start, stop)
+            qs = data[jnp.asarray(ids)]
+
+            # per layer from the top: descend with greedy, collect efc
+            # candidates at layers <= point level
+            entry_arr = jnp.full((len(ids), 1), entry, jnp.int32)
+            cand_per_layer: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+            cur_entry = entry_arr
+            for l in range(max_level, -1, -1):
+                adj_l = jnp.asarray(adj[l])
+                need = levels[ids] >= l
+                bs, bi = G.beam_search_batch(
+                    qs, adj_l, cur_entry,
+                    score_set=score_set,
+                    ef=ef_construction if l == 0 else max(1, ef_construction // 4),
+                )
+                cand_per_layer[l] = (np.asarray(bs), np.asarray(bi))
+                # entries for next layer down = best found here
+                cur_entry = bi[:, :1]
+                del need
+
+            # commit connections on host
+            for bi_pos, p in enumerate(ids):
+                for l in range(int(levels[p]), -1, -1):
+                    if l > max_level:
+                        continue
+                    scores_l, ids_l = cand_per_layer[l]
+                    c_ids = ids_l[bi_pos]
+                    c_scores = scores_l[bi_pos]
+                    ok = c_ids >= 0
+                    c_ids, c_scores = c_ids[ok], c_scores[ok]
+                    nbrs = _prune(c_ids, c_scores, m)
+                    adj[l][p, : len(nbrs)] = nbrs
+                    # back-connections with pruning
+                    for nb in nbrs:
+                        row = adj[l][nb]
+                        slot = np.where(row < 0)[0]
+                        if len(slot):
+                            adj[l][nb, slot[0]] = p
+                        else:
+                            # prune to cap by score-to-nb
+                            cand = np.concatenate([row, [p]])
+                            vecs = qdata[cand].astype(np.float32)
+                            target = qdata[nb].astype(np.float32)
+                            if metric == "l2":
+                                sc = -np.sum((vecs - target) ** 2, -1)
+                            else:
+                                sc = vecs @ target
+                            adj[l][nb] = _prune(cand, sc, caps[l])
+                if levels[p] > max_level:
+                    pass  # cannot happen: caps sized to max sampled level
+                if levels[p] >= max_level and levels[p] > levels[entry]:
+                    entry = int(p)
+
+        layers = [jnp.asarray(a) for a in adj]
+        idx = HNSWIndex(
+            metric=metric, quantized=quantized, m=m, data=data,
+            params=params, layers=layers, levels=levels, entry=entry,
+        )
+        idx.build_seconds = time.perf_counter() - t0
+        return idx
+
+    # ------------------------------------------------------------------
+    def search(self, queries: jax.Array, k: int, ef_search: int = 100):
+        """Layered descent + layer-0 beam; returns (scores, ids) [Q, k]."""
+        q = self.prepare_queries(queries)
+        score_set = self._score_set()
+        nq = q.shape[0]
+
+        entry = jnp.full((nq,), self.entry, jnp.int32)
+        # upper layers: greedy ef=1 descent
+        for l in range(len(self.layers) - 1, 0, -1):
+            adj_l = self.layers[l]
+            entry = jax.vmap(
+                lambda qq, ee: G.greedy_descent(qq, adj_l, ee, score_set)[0]
+            )(q, entry)
+
+        ef = max(ef_search, k)
+        scores, ids = G.beam_search_batch(
+            q, self.layers[0], entry[:, None], score_set=score_set, ef=ef
+        )
+        return scores[:, :k], ids[:, :k]
+
+    # ------------------------------------------------------------------
+    def memory_bytes(self) -> int:
+        d = self.data.shape[1]
+        vec = self.n * d * (1 if self.quantized else 4)
+        graph = sum(int(a.size) * 4 for a in self.layers)  # native pointers
+        consts = 3 * d * 4 if self.params is not None else 0
+        return vec + graph + consts

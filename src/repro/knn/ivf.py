@@ -1,0 +1,167 @@
+"""IVF (inverted-file) index — the TPU-native ANN structure.
+
+HNSW's pointer-chasing traversal is hostile to a systolic machine; the
+cluster-prune-then-scan pattern of IVF maps onto exactly two TPU-friendly
+ops: a (small) dense matmul against the centroid table, and a gathered
+batched matmul over the probed lists.  Both run on the int8 MXU path when
+the index is quantized, so the paper's technique composes with IVF the
+same way it composes with HNSW in §2 of the paper ("can be combined with
+existing indexing-based KNN frameworks").
+
+Lists are padded to a fixed length so every shape is static (jit/pjit
+friendly); the pad id -1 scores -inf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distances as D
+from repro.core import quant as Qz
+from repro.kernels import ops as K
+
+
+# --------------------------------------------------------------------------
+# k-means (Lloyd) — the coarse quantizer
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("n_clusters", "iters"))
+def kmeans(
+    x: jax.Array, n_clusters: int, key: jax.Array, iters: int = 10
+) -> jax.Array:
+    """Plain Lloyd k-means, random init, [N, d] -> [n_clusters, d]."""
+    n = x.shape[0]
+    x = x.astype(jnp.float32)
+    init_ids = jax.random.choice(key, n, (n_clusters,), replace=False)
+    cents = x[init_ids]
+
+    def step(cents, _):
+        # assign by L2 (larger-is-closer negated L2 scores)
+        s = D.l2_scores(x, cents)                     # [N, C]
+        assign = jnp.argmax(s, axis=-1)               # [N]
+        one_hot = jax.nn.one_hot(assign, n_clusters, dtype=jnp.float32)
+        counts = one_hot.sum(0)                       # [C]
+        sums = one_hot.T @ x                          # [C, d]
+        new = sums / jnp.maximum(counts[:, None], 1.0)
+        # keep old centroid for empty clusters
+        new = jnp.where(counts[:, None] > 0, new, cents)
+        return new, None
+
+    cents, _ = jax.lax.scan(step, cents, None, length=iters)
+    return cents
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class IVFIndex:
+    metric: str = dataclasses.field(metadata=dict(static=True))
+    quantized: bool = dataclasses.field(metadata=dict(static=True))
+    n: int = dataclasses.field(metadata=dict(static=True))
+    nlist: int = dataclasses.field(metadata=dict(static=True))
+    max_list: int = dataclasses.field(metadata=dict(static=True))
+    centroids: jax.Array                 # [nlist, d] f32
+    lists: jax.Array                     # [nlist, max_list] i32, -1 pad
+    data: jax.Array                      # [N, d] f32 or int8 codes
+    params: Optional[Qz.QuantParams]
+
+    @staticmethod
+    def build(
+        corpus: jax.Array,
+        nlist: int = 64,
+        metric: str = "ip",
+        quantized: bool = False,
+        bits: int = 8,
+        scheme: str | Qz.Scheme = Qz.Scheme.GAUSSIAN,
+        sigmas: float = 1.0,
+        key: jax.Array | None = None,
+        kmeans_iters: int = 10,
+    ) -> "IVFIndex":
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        n = int(corpus.shape[0])
+        corpus = jnp.asarray(corpus, jnp.float32)
+        cents = kmeans(corpus, nlist, key, iters=kmeans_iters)
+        assign = jnp.argmax(D.l2_scores(corpus, cents), axis=-1)
+
+        # bucket ids into fixed-width lists (host-side; build is offline)
+        import numpy as np
+
+        assign_np = np.asarray(assign)
+        buckets = [np.where(assign_np == c)[0] for c in range(nlist)]
+        max_list = max(1, max(len(b) for b in buckets))
+        # round up for alignment
+        max_list = ((max_list + 127) // 128) * 128
+        lists = np.full((nlist, max_list), -1, np.int32)
+        for c, b in enumerate(buckets):
+            lists[c, : len(b)] = b
+
+        params = None
+        data = corpus
+        if quantized:
+            params = Qz.learn_params(corpus, bits=bits, scheme=scheme, sigmas=sigmas)
+            data = K.quantize(corpus, params.lo, params.hi, params.zero, bits=params.bits)
+
+        return IVFIndex(
+            metric=metric, quantized=quantized, n=n, nlist=nlist,
+            max_list=max_list, centroids=cents, lists=jnp.asarray(lists),
+            data=data, params=params,
+        )
+
+    # ------------------------------------------------------------------
+    def prepare_queries(self, queries: jax.Array) -> jax.Array:
+        if not self.quantized:
+            return jnp.asarray(queries, jnp.float32)
+        p = self.params
+        return K.quantize(queries, p.lo, p.hi, p.zero, bits=p.bits)
+
+    def search(self, queries: jax.Array, k: int, nprobe: int = 8):
+        """Probe the nprobe best lists per query, exact-score the members.
+
+        Returns (scores [Q, k] f32, ids [Q, k] i32).
+        """
+        qf = jnp.asarray(queries, jnp.float32)
+        qq = self.prepare_queries(queries)
+
+        # 1) coarse: score centroids (always fp32 — tiny)
+        cent_metric = "l2" if self.metric == "l2" else self.metric
+        cs = D.scores(qf, self.centroids, cent_metric)          # [Q, nlist]
+        probe = jax.lax.top_k(cs, nprobe)[1]                    # [Q, nprobe]
+
+        # 2) gather candidate ids -> [Q, nprobe * max_list]
+        cand = self.lists[probe].reshape(qq.shape[0], -1)
+        valid = cand >= 0
+        safe = jnp.where(valid, cand, 0)
+
+        # 3) fine scoring, one query at a time (ragged per query)
+        def per_query(qv, ids, ok):
+            vecs = self.data[ids]                               # [L, d]
+            if self.quantized:
+                if self.metric == "ip":
+                    s = K.qmip(qv[None], vecs)[0]
+                elif self.metric == "l2":
+                    s = K.ql2(qv[None], vecs)[0]
+                else:
+                    s = D.qangular_scores(qv[None], vecs)[0]
+            else:
+                s = D.scores(qv[None], vecs, self.metric)[0]
+            s = jnp.where(ok, s.astype(jnp.float32), jnp.finfo(jnp.float32).min)
+            top_s, pos = jax.lax.top_k(s, k)
+            return top_s, jnp.where(
+                top_s > jnp.finfo(jnp.float32).min, ids[pos], -1
+            ).astype(jnp.int32)
+
+        return jax.vmap(per_query)(qq, safe, valid)
+
+    def memory_bytes(self) -> int:
+        d = self.data.shape[1]
+        itemsize = 1 if self.quantized else 4
+        base = self.n * d * itemsize
+        base += self.centroids.size * 4 + self.lists.size * 4
+        if self.params is not None:
+            base += 3 * d * 4
+        return base

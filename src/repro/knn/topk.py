@@ -1,0 +1,119 @@
+"""Top-k machinery: streaming (chunked) top-k over huge corpora and the
+distributed shard-merge used when the corpus is row-sharded over a mesh.
+
+Larger-is-closer convention throughout (matches core.distances).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def merge_topk(
+    scores_a: jax.Array,
+    ids_a: jax.Array,
+    scores_b: jax.Array,
+    ids_b: jax.Array,
+    k: int,
+):
+    """Merge two [Q, ka]/[Q, kb] candidate sets into the best k."""
+    s = jnp.concatenate([scores_a, scores_b], axis=-1)
+    i = jnp.concatenate([ids_a, ids_b], axis=-1)
+    top_s, pos = jax.lax.top_k(s, k)
+    top_i = jnp.take_along_axis(i, pos, axis=-1)
+    return top_s, top_i
+
+
+@partial(jax.jit, static_argnames=("k", "chunk", "score_fn"))
+def chunked_topk(
+    queries: jax.Array,
+    corpus: jax.Array,
+    k: int,
+    score_fn: Callable[[jax.Array, jax.Array], jax.Array],
+    chunk: int = 16384,
+):
+    """Exact top-k of score_fn(queries, corpus) without materializing [Q, N].
+
+    ``lax.scan`` over corpus row-chunks carrying a running (scores, ids)
+    top-k — the streaming formulation that keeps the working set at
+    O(Q * (k + chunk)) regardless of N.  Requires N % chunk == 0 (callers
+    pad with -inf sentinel rows via ``pad_corpus``).
+    """
+    Q = queries.shape[0]
+    N = corpus.shape[0]
+    assert N % chunk == 0, (N, chunk)
+    n_chunks = N // chunk
+    tiles = corpus.reshape(n_chunks, chunk, corpus.shape[-1])
+
+    init_s = jnp.full((Q, k), jnp.finfo(jnp.float32).min, jnp.float32)
+    init_i = jnp.full((Q, k), -1, jnp.int32)
+
+    def step(carry, inp):
+        best_s, best_i = carry
+        tile, tile_idx = inp
+        s = score_fn(queries, tile).astype(jnp.float32)        # [Q, chunk]
+        ids = (tile_idx * chunk + jnp.arange(chunk, dtype=jnp.int32))[None, :]
+        ids = jnp.broadcast_to(ids, s.shape)
+        return merge_topk(best_s, best_i, s, ids, k), None
+
+    (best_s, best_i), _ = jax.lax.scan(
+        step, (init_s, init_i), (tiles, jnp.arange(n_chunks, dtype=jnp.int32))
+    )
+    return best_s, best_i
+
+
+def pad_corpus(corpus: jax.Array, multiple: int):
+    """Pad corpus rows to a multiple; returns (padded, n_valid).
+
+    Padding rows are zeros — callers must mask ids >= n_valid or rely on
+    sentinel scores (zero vectors score 0 for IP; for L2 they can win, so
+    flat search masks by id).
+    """
+    n = corpus.shape[0]
+    target = ((n + multiple - 1) // multiple) * multiple
+    if target == n:
+        return corpus, n
+    return jnp.pad(corpus, ((0, target - n), (0, 0))), n
+
+
+def mask_invalid(scores: jax.Array, ids: jax.Array, n_valid: int):
+    """Force padded ids out of any subsequent merge."""
+    bad = ids >= n_valid
+    return jnp.where(bad, jnp.finfo(jnp.float32).min, scores), jnp.where(bad, -1, ids)
+
+
+# --------------------------------------------------------------------------
+# Distributed merge (corpus row-sharded over one or more mesh axes)
+# --------------------------------------------------------------------------
+
+def distributed_topk(
+    local_scores: jax.Array,
+    local_ids: jax.Array,
+    k: int,
+    axis_name: str | tuple[str, ...],
+    shard_offset: jax.Array,
+):
+    """Merge per-shard top-k into a global top-k, inside ``shard_map``.
+
+    Each shard holds [Q, k] candidates with *local* ids; ``shard_offset``
+    (scalar, per shard) rebases them to global row ids.  One all_gather of
+    k entries per query per shard — O(shards * Q * k) bytes, independent of
+    corpus size N.  (A butterfly collective_permute halves wire bytes at
+    log-depth; see EXPERIMENTS.md §Perf for why all_gather wins at k=100.)
+    """
+    gids = jnp.where(local_ids >= 0, local_ids + shard_offset, -1)
+    names = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+    s, i = local_scores, gids
+    for name in names:
+        s = jax.lax.all_gather(s, name, axis=0)   # [S, Q, k]
+        i = jax.lax.all_gather(i, name, axis=0)
+        S, Q, kk = s.shape
+        s = jnp.moveaxis(s, 0, 1).reshape(Q, S * kk)
+        i = jnp.moveaxis(i, 0, 1).reshape(Q, S * kk)
+        s, pos = jax.lax.top_k(s, k)
+        i = jnp.take_along_axis(i, pos, axis=-1)
+    return s, i

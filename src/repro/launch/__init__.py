@@ -1,0 +1,7 @@
+# Launch surface: mesh construction, step builders, the multi-pod
+# dry-run, the training launcher and the ANN serving loop.
+# NOTE: do not import dryrun here — it sets XLA_FLAGS at import time and
+# must be the process entrypoint.
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_host_mesh", "make_production_mesh"]

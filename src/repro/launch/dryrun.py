@@ -1,0 +1,455 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import (device count locks at first init).
+
+"""Multi-pod dry-run: .lower().compile() every (architecture x input-shape
+x mesh) cell on the production meshes, record memory_analysis +
+cost_analysis + the HLO collective schedule for §Roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --multi-pod both --out experiments/dryrun
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get, cells
+from repro.dist import sharding as SH
+from repro.launch import steps as ST
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as TF
+from repro.train import optimizer as OPT
+
+
+# --------------------------------------------------------------------------
+# collective-byte accounting from the partitioned HLO
+# --------------------------------------------------------------------------
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    for prefix, size in _DTYPE_BYTES.items():
+        if dtype.startswith(prefix):
+            return n * size
+    return n * 4
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes of every collective op in the partitioned module."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for coll in _COLLECTIVES:
+            # result shapes appear between "=" and "<coll>(" on the
+            # defining line:  %name = f32[..]{..} all-reduce(...)
+            marker = f" {coll}("
+            alt = f" {coll}-start("
+            pos = stripped.find(marker)
+            if pos < 0:
+                pos = stripped.find(alt)
+            eq = stripped.find(" = ")
+            if pos > 0 and 0 < eq < pos:
+                lhs = stripped[eq:pos]
+                total = sum(
+                    _shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(lhs)
+                )
+                out[coll] += total
+                counts[coll] += 1
+                break
+    return {"bytes": out, "counts": counts, "total_bytes": sum(out.values())}
+
+
+# --------------------------------------------------------------------------
+# cell builders: (fn, abstract_args) per (arch, shape)
+# --------------------------------------------------------------------------
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _pad_to(n: int, m: int) -> int:
+    """Round n up to a multiple of m (shard-boundary padding — standard
+    practice for vocabularies / tables / edge lists on SPMD meshes)."""
+    return ((n + m - 1) // m) * m
+
+
+def _with_sharding(abstract_tree, sharding_tree):
+    return jax.tree.map(
+        lambda a, s: _sds(a.shape, a.dtype, s), abstract_tree, sharding_tree
+    )
+
+
+def _abstract_opt(abstract_params):
+    return jax.eval_shape(OPT.adamw_init, abstract_params)
+
+
+def build_lm_cell(arch_id: str, shape_name: str, mesh, variant: str = "baseline"):
+    mod = get(arch_id)
+    cfg: TF.LMConfig = mod.config()
+    spec = mod.SHAPES[shape_name]
+    B, S = spec["global_batch"], spec["seq_len"]
+    dp = SH.dp_axes(mesh)
+
+    aparams = TF.abstract_params(cfg)
+    p_shard = SH.lm_params_sharding(mesh, aparams)
+    params_in = _with_sharding(aparams, p_shard)
+
+    if spec["kind"] == "train":
+        opt_cfg = OPT.OptConfig(
+            schedule=getattr(mod, "OPTIMIZER_SCHEDULE", "cosine"), total_steps=10000
+        )
+        aopt = _abstract_opt(aparams)
+        o_shard = SH.lm_opt_sharding(mesh, aopt)
+        opt_in = _with_sharding(aopt, o_shard)
+        batch = {
+            "tokens": _sds((B, S), jnp.int32, SH.named(mesh, SH.P(dp, None))),
+            "targets": _sds((B, S), jnp.int32, SH.named(mesh, SH.P(dp, None))),
+            "mask": _sds((B, S), jnp.float32, SH.named(mesh, SH.P(dp, None))),
+        }
+        # grad accumulation keeps the [B_micro, S, vocab] logits inside the
+        # 16 GB/chip envelope at 256k vocab (see EXPERIMENTS.md §Dry-run)
+        micro = getattr(mod, "TRAIN_MICROBATCHES", 4)
+        fn = ST.make_lm_train_step(
+            cfg, opt_cfg, microbatches=micro, batch_axes=dp,
+            grad_specs=SH.lm_grad_specs(aparams),
+        )
+        return fn, (params_in, opt_in, batch)
+
+    if spec["kind"] == "prefill":
+        tokens = _sds((B, S), jnp.int32, SH.named(mesh, SH.P(dp, None)))
+        c_shard = SH.lm_cache_spec(mesh, B)
+        out_shardings = (None, (c_shard, c_shard))   # logits, (k, v) caches
+        return ST.make_lm_prefill(cfg), (params_in, tokens), out_shardings
+
+    # decode: one new token against an S-long cache (block-major layout)
+    cache_shape = TF.cache_shape(cfg, B, S)
+    c_shard = SH.lm_cache_spec(mesh, B)
+    tok_spec = SH.P(dp, None) if B > 1 else SH.P(None, None)
+    token = _sds((B, 1), jnp.int32, SH.named(mesh, tok_spec))
+    cur_len = _sds((), jnp.int32, SH.named(mesh, SH.P()))
+
+    if variant == "int8kv":
+        # the paper-quantized cache: int8 codes + per (block, sub, Hkv, hd)
+        # scales — 2x less HBM than the bf16 baseline cache
+        from repro.quantized.qkv_cache import QuantizedCache
+
+        sshape = (cfg.n_blocks, cfg.block_layers, cfg.n_kv, cfg.head_dim)
+        s_shard = SH.named(mesh, SH.P(None, None, None, None))
+        qcache = QuantizedCache(
+            k_codes=_sds(cache_shape, jnp.int8, c_shard),
+            v_codes=_sds(cache_shape, jnp.int8, c_shard),
+            k_scale=_sds(sshape, jnp.float32, s_shard),
+            v_scale=_sds(sshape, jnp.float32, s_shard),
+        )
+        return ST.make_lm_decode_q8(cfg), (params_in, qcache, token, cur_len)
+
+    caches = (
+        _sds(cache_shape, cfg.jdtype, c_shard),
+        _sds(cache_shape, cfg.jdtype, c_shard),
+    )
+    return ST.make_lm_decode(cfg), (params_in, caches, token, cur_len)
+
+
+def build_recsys_cell(arch_id: str, shape_name: str, mesh, variant: str = "fp32"):
+    import dataclasses as _dc
+
+    from repro.models.recsys import models as RM
+
+    mod = get(arch_id)
+    cfg: RM.RecsysConfig = mod.config()
+    spec = mod.SHAPES[shape_name]
+    dp = SH.dp_axes(mesh)
+    table_shards = mesh.shape.get("data", 1) * mesh.shape["model"]
+
+    # pad sharded tables to the shard boundary (replicated small tables keep
+    # their exact size — recsys_param_spec's threshold)
+    padded_vocabs = tuple(
+        _pad_to(v, table_shards) if v >= max(table_shards, 4096) else v
+        for v in cfg.vocab_sizes
+    )
+    cfg = _dc.replace(cfg, vocab_sizes=padded_vocabs)
+
+    if spec["kind"] == "retrieval":
+        d = cfg.embed_dim
+        N = _pad_to(spec["n_candidates"], table_shards)
+        Q = spec["batch"]
+        cand_shard = SH.named(mesh, SH.P(("data", "model"), None))
+        q_in = _sds((Q, d), jnp.float32, SH.named(mesh, SH.P(None, None)))
+        if variant == "int8":
+            cand = _sds((N, d), jnp.int8, cand_shard)
+            const = _sds((d,), jnp.float32, SH.named(mesh, SH.P(None)))
+            return ST.make_retrieval(True), (q_in, cand, const, const, const)
+        cand = _sds((N, d), jnp.float32, cand_shard)
+        return ST.make_retrieval(False), (q_in, cand)
+
+    aparams = RM.abstract_params(cfg)
+    if variant == "int8" and spec["kind"] == "serve":
+        # paper-quantized serving tables: codes int8 + per-dim constants —
+        # gathered rows cross HBM and the mesh at 1/4 the bytes
+        qt = {}
+        for name, tp in aparams["tables"].items():
+            v, d_ = tp["table"].shape
+            qt[name] = {
+                "codes": jax.ShapeDtypeStruct((v, d_), jnp.int8),
+                "scale": jax.ShapeDtypeStruct((d_,), jnp.float32),
+                "zero": jax.ShapeDtypeStruct((d_,), jnp.float32),
+            }
+        aparams = dict(aparams)
+        aparams["tables"] = qt
+    p_shard = SH.recsys_params_sharding(mesh, aparams)
+    params_in = _with_sharding(aparams, p_shard)
+
+    B = spec["batch"]
+    batch = {
+        "dense": _sds((B, cfg.n_dense), jnp.float32, SH.named(mesh, SH.P(dp, None))),
+        "sparse": _sds((B, cfg.n_sparse), jnp.int32, SH.named(mesh, SH.P(dp, None))),
+        "label": _sds((B,), jnp.float32, SH.named(mesh, SH.P(dp))),
+    }
+    if cfg.seq_len:
+        batch["hist_ids"] = _sds((B, cfg.seq_len), jnp.int32, SH.named(mesh, SH.P(dp, None)))
+        batch["hist_mask"] = _sds((B, cfg.seq_len), jnp.float32, SH.named(mesh, SH.P(dp, None)))
+
+    if spec["kind"] == "train":
+        opt_cfg = OPT.OptConfig()
+        aopt = _abstract_opt(aparams)
+        opt_in = _with_sharding(aopt, SH.recsys_opt_sharding(mesh, aopt))
+        return ST.make_recsys_train_step(cfg, opt_cfg), (params_in, opt_in, batch)
+
+    return ST.make_recsys_serve(cfg), (params_in, batch)
+
+
+def build_gnn_cell(arch_id: str, shape_name: str, mesh):
+    from repro.models.gnn import schnet as S
+
+    mod = get(arch_id)
+    spec = mod.SHAPES[shape_name]
+    cfg: S.SchNetConfig = mod.config(shape_name)
+    opt_cfg = OPT.OptConfig()
+
+    e_shard = SH.gnn_edge_sharding(mesh)
+    rep = lambda nd: SH.named(mesh, SH.P(*([None] * nd)))
+
+    aparams = jax.eval_shape(lambda: S.init_params(jax.random.PRNGKey(0), cfg))
+    params_in = _with_sharding(aparams, SH.gnn_params_sharding(mesh, aparams))
+    aopt = _abstract_opt(aparams)
+    opt_in = _with_sharding(aopt, SH.replicated(mesh, aopt))
+
+    n_mesh = int(np.prod(list(mesh.shape.values())))
+    if spec["kind"] == "molecule":
+        n_nodes = spec["batch"] * spec["n_nodes"]
+        n_edges = _pad_to(spec["batch"] * spec["n_edges"], n_mesh)
+        batch = {
+            "z": _sds((n_nodes,), jnp.int32, rep(1)),
+            "positions": _sds((n_nodes, 3), jnp.float32, rep(2)),
+            "senders": _sds((n_edges,), jnp.int32, e_shard),
+            "receivers": _sds((n_edges,), jnp.int32, e_shard),
+            "edge_mask": _sds((n_edges,), jnp.bool_, e_shard),
+            "graph_ids": _sds((n_nodes,), jnp.int32, rep(1)),
+            "labels": _sds((spec["batch"],), jnp.float32, rep(1)),
+        }
+        fn = ST.make_gnn_train_step(
+            cfg, "molecule", opt_cfg, n_nodes=n_nodes, n_graphs=spec["batch"]
+        )
+        return fn, (params_in, opt_in, batch)
+
+    if spec["kind"] == "minibatch":
+        n_nodes, n_edges = spec["pad_nodes"], spec["pad_edges"]
+    else:
+        n_nodes, n_edges = spec["n_nodes"], spec["n_edges"]
+    n_edges = _pad_to(n_edges, n_mesh)   # edge lists pad to the mesh size
+    batch = {
+        "node_feat": _sds((n_nodes, spec["d_feat"]), jnp.float32, rep(2)),
+        "senders": _sds((n_edges,), jnp.int32, e_shard),
+        "receivers": _sds((n_edges,), jnp.int32, e_shard),
+        "edge_mask": _sds((n_edges,), jnp.bool_, e_shard),
+        "labels": _sds((n_nodes,), jnp.int32, rep(1)),
+    }
+    fn = ST.make_gnn_train_step(cfg, spec["kind"], opt_cfg, n_nodes=n_nodes)
+    return fn, (params_in, opt_in, batch)
+
+
+def build_ann_cell(shape_name: str, mesh, variant: str = "baseline"):
+    """The paper's own system at FULL scale: PRODUCT60M (60M x 256) /
+    SIFT1M / Glove100 exhaustive quantized MIP search, corpus row-sharded
+    over the production mesh, 1000-query batch (the paper's test-set
+    size), k=100 (the paper's §5.1 fixed k)."""
+    spec = {
+        "product60m": dict(n=60_000_000, d=256),
+        "sift1m": dict(n=1_000_000, d=128),
+        "glove100": dict(n=1_183_514, d=100),
+    }[shape_name]
+    n_shards = mesh.shape.get("data", 1) * mesh.shape["model"]
+    N = _pad_to(spec["n"], n_shards)
+    d = spec["d"]
+    Q = 1000
+    cand_shard = SH.named(mesh, SH.P(("data", "model"), None))
+    q_in = _sds((Q, d), jnp.float32, SH.named(mesh, SH.P(None, None)))
+    shard_idx = _sds((n_shards,), jnp.int32, SH.named(mesh, SH.P(("data", "model"))))
+    n_local = N // n_shards
+    if variant == "naive":
+        # the plain-jit formulation kept as the measured regression arm
+        cand = _sds((N, d), jnp.int8, cand_shard)
+        const = _sds((d,), jnp.float32, SH.named(mesh, SH.P(None)))
+        return ST.make_retrieval(True, k=100), (q_in, cand, const, const, const)
+    if variant != "fp32":  # int8 is the paper's arm and the default here
+        cand = _sds((N, d), jnp.int8, cand_shard)
+        const = _sds((d,), jnp.float32, SH.named(mesh, SH.P(None)))
+        fn = ST.make_retrieval_sharded(mesh, n_local, k=100, quantized=True)
+        return fn, (q_in, cand, const, const, const, shard_idx)
+    cand = _sds((N, d), jnp.float32, cand_shard)
+    fn = ST.make_retrieval_sharded(mesh, n_local, k=100, quantized=False)
+    return fn, (q_in, cand, shard_idx)
+
+
+def build_cell(arch_id: str, shape_name: str, mesh, variant: str = "baseline"):
+    family = get(arch_id).FAMILY
+    if family == "ann":
+        out = build_ann_cell(shape_name, mesh, variant=variant)
+    elif family == "lm":
+        out = build_lm_cell(arch_id, shape_name, mesh, variant=variant)
+    elif family == "recsys":
+        v = "int8" if variant == "int8" else "fp32"
+        out = build_recsys_cell(arch_id, shape_name, mesh, variant=v)
+    elif family == "gnn":
+        out = build_gnn_cell(arch_id, shape_name, mesh)
+    else:
+        raise ValueError(family)
+    if len(out) == 2:
+        return out[0], out[1], None
+    return out
+
+
+# --------------------------------------------------------------------------
+# run + record
+# --------------------------------------------------------------------------
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool, variant: str = "baseline"):
+    t0 = time.perf_counter()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fn, args, out_shardings = build_cell(arch_id, shape_name, mesh, variant)
+    # production aliasing: train steps donate (params, opt); decode donates
+    # the KV cache — halves the apparent temp footprint and matches how the
+    # launcher actually runs these steps.
+    kind = get(arch_id).SHAPES[shape_name].get("kind", "")
+    donate = {"train": (0, 1), "full_graph": (0, 1), "minibatch": (0, 1),
+              "molecule": (0, 1), "decode": (1,)}.get(kind, ())
+    jit_kwargs = dict(donate_argnums=donate)
+    if out_shardings is not None:
+        jit_kwargs["out_shardings"] = out_shardings
+    with mesh:
+        lowered = jax.jit(fn, **jit_kwargs).lower(*args)
+        compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    colls = collective_bytes(hlo)
+
+    record = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "variant": variant,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": int(np.prod(list(mesh.shape.values()))),
+        "compile_seconds": round(time.perf_counter() - t0, 1),
+        "flops": float(cost.get("flops", -1.0)) if cost else -1.0,
+        "bytes_accessed": float(cost.get("bytes accessed", -1.0)) if cost else -1.0,
+        "collectives": colls,
+        "memory_analysis": {
+            k: int(getattr(mem, k))
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "alias_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        },
+    }
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", choices=["no", "yes", "both"], default="both")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    pods = {"no": [False], "yes": [True], "both": [False, True]}[args.multi_pod]
+
+    todo = []
+    pool = list(cells())
+    if args.arch == "lpq-ann":
+        pool = [("lpq-ann", s, None) for s in get("lpq-ann").SHAPES]
+    for arch_id, shape, skip in pool:
+        if args.arch and arch_id != args.arch:
+            continue
+        if args.shape and shape != args.shape:
+            continue
+        todo.append((arch_id, shape, skip))
+
+    n_ok = n_skip = n_fail = 0
+    for arch_id, shape, skip in todo:
+        for mp in pods:
+            tag = f"{arch_id}__{shape}__{'multipod' if mp else 'pod'}"
+            if args.variant != "baseline":
+                tag += f"__{args.variant}"
+            path = os.path.join(args.out, tag + ".json")
+            if args.skip_existing and os.path.exists(path):
+                print(f"[dryrun] SKIP (exists) {tag}")
+                continue
+            if skip:
+                with open(path, "w") as f:
+                    json.dump({"arch": arch_id, "shape": shape,
+                               "mesh": "2x16x16" if mp else "16x16",
+                               "skipped": skip}, f, indent=2)
+                print(f"[dryrun] SKIP {tag}: {skip}")
+                n_skip += 1
+                continue
+            try:
+                rec = run_cell(arch_id, shape, mp, args.variant)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=2)
+                print(
+                    f"[dryrun] OK {tag}: {rec['compile_seconds']}s, "
+                    f"flops={rec['flops']:.3e}, "
+                    f"coll={rec['collectives']['total_bytes']:.3e}B"
+                )
+                n_ok += 1
+            except Exception as e:  # noqa: BLE001
+                n_fail += 1
+                print(f"[dryrun] FAIL {tag}: {e}")
+                traceback.print_exc()
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

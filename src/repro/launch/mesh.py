@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "BEFORE importing jax (launch/dryrun.py does this)."
+        )
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Small mesh over whatever devices exist — tests and local runs."""
+    n = len(jax.devices())
+    mp = min(model_parallel, n)
+    while n % mp:
+        mp -= 1
+    return jax.make_mesh((n // mp, mp), ("data", "model"))

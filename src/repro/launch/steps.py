@@ -1,0 +1,266 @@
+"""Step-function builders shared by the launcher, the serving loop and the
+multi-pod dry-run.  Each returns a pure function of abstract-shardable
+arguments (params/opt/batch pytrees) with all configs closed over
+statically — the exact callables that get pjit'd.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as TF
+from repro.models.gnn import schnet as S
+from repro.models.recsys import models as RM
+from repro.models.recsys import retrieval as RT
+from repro.quantized import qkv_cache as QC
+from repro.train import optimizer as OPT
+
+
+# --------------------------------------------------------------------------
+# LM
+# --------------------------------------------------------------------------
+
+def make_lm_train_step(
+    cfg: TF.LMConfig,
+    opt_cfg: OPT.OptConfig,
+    microbatches: int = 1,
+    batch_axes: tuple[str, ...] | None = None,
+    grad_specs=None,
+) -> Callable:
+    """Train step with in-step gradient accumulation.
+
+    microbatches > 1 scans over batch slices so the [B_micro, S, vocab]
+    logits (the activation-memory hot spot at 256k vocab) never exceed
+    one microbatch — the standard large-batch memory discipline.
+
+    batch_axes: mesh axes the batch dim is sharded over.  The microbatch
+    reshape [B, ...] -> [micro, B/micro, ...] otherwise loses the batch
+    sharding under GSPMD propagation (the split dim no longer divides the
+    axis), silently replicating the global batch on every device; an
+    explicit with_sharding_constraint on dim 1 keeps the slices sharded.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def grads_of(params, batch):
+        (loss, _aux), grads = jax.value_and_grad(TF.lm_loss, has_aux=True)(
+            params, batch, cfg
+        )
+        return loss, grads
+
+    def step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape(
+                    (microbatches, x.shape[0] // microbatches) + x.shape[1:]
+                ),
+                batch,
+            )
+            if batch_axes:
+                micro = jax.tree.map(
+                    lambda x: jax.lax.with_sharding_constraint(
+                        x, P(None, batch_axes, *([None] * (x.ndim - 2)))
+                    ),
+                    micro,
+                )
+
+            def constrain_grads(g):
+                # ZeRO: keep the f32 accumulators in the (data x model)
+                # layout so each microbatch's grads reduce-scatter into a
+                # 1/256 slice instead of living replicated over 'data'
+                if grad_specs is None:
+                    return g
+                return jax.tree.map(
+                    lambda a, s: jax.lax.with_sharding_constraint(a, s),
+                    g, grad_specs,
+                )
+
+            def accum(carry, mb):
+                loss_c, grads_c = carry
+                loss_i, grads_i = grads_of(params, mb)
+                grads_c = jax.tree.map(
+                    lambda a, b: a + b / microbatches, grads_c, grads_i
+                )
+                return (loss_c + loss_i / microbatches, constrain_grads(grads_c)), None
+
+            zero = constrain_grads(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            )
+            (loss, grads), _ = jax.lax.scan(accum, (jnp.zeros(()), zero), micro)
+        params, opt_state, om = OPT.adamw_update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, {"loss": loss, **om}
+
+    return step
+
+
+def make_lm_prefill(cfg: TF.LMConfig) -> Callable:
+    def step(params, tokens):
+        return TF.prefill(params, tokens, cfg)
+
+    return step
+
+
+def make_lm_decode(cfg: TF.LMConfig) -> Callable:
+    def step(params, caches, token, cur_len):
+        return TF.decode_step(params, caches, token, cur_len, cfg)
+
+    return step
+
+
+def make_lm_decode_q8(cfg: TF.LMConfig) -> Callable:
+    """Paper-quantized int8-KV decode (the beyond-baseline arm)."""
+
+    def step(params, qcache, token, cur_len):
+        return QC.decode_step_q8(params, qcache, token, cur_len, cfg)
+
+    return step
+
+
+# --------------------------------------------------------------------------
+# RecSys
+# --------------------------------------------------------------------------
+
+def make_recsys_train_step(cfg: RM.RecsysConfig, opt_cfg: OPT.OptConfig) -> Callable:
+    def step(params, opt_state, batch):
+        (loss, _aux), grads = jax.value_and_grad(RM.bce_loss, has_aux=True)(
+            params, batch, cfg
+        )
+        params, opt_state, om = OPT.adamw_update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, {"loss": loss, **om}
+
+    return step
+
+
+def make_recsys_serve(cfg: RM.RecsysConfig) -> Callable:
+    def step(params, batch):
+        return RM.serve(params, batch, cfg)
+
+    return step
+
+
+def make_retrieval_sharded(
+    mesh, n_local: int, k: int = 100, quantized: bool = True
+) -> Callable:
+    """Distributed exhaustive MIP search: shard-local scoring + local
+    top-k inside shard_map, then a k-sized merge — O(Q·(N_loc+k)) temp
+    and O(shards·Q·k) wire, versus the naive jit formulation whose
+    lax.top_k over the sharded N axis makes GSPMD materialize and
+    all-gather the FULL [Q, N] score matrix (measured: 480 GB temp /
+    240 GB wire at PRODUCT60M scale — EXPERIMENTS.md §Perf C2)."""
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import distances as D
+    from repro.knn import topk as T
+
+    axes = tuple(a for a in mesh.axis_names if a in ("data", "model"))
+
+    def local_search(q_codes, shard_codes, shard_idx):
+        s = D.scores(q_codes, shard_codes, "ip", quantized=quantized)
+        s = s.astype(jnp.float32)
+        loc_s, loc_i = jax.lax.top_k(s, k)
+        return T.distributed_topk(
+            loc_s, loc_i.astype(jnp.int32), k, axes, shard_idx[0] * n_local
+        )
+
+    inner = shard_map(
+        local_search,
+        mesh=mesh,
+        in_specs=(P(), P(axes, None), P(axes)),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+
+    if quantized:
+        def step(query_emb, cand_codes, lo, hi, zero, shard_idx):
+            from repro.core.quant import QuantParams
+            from repro.kernels import ops as K
+
+            params = QuantParams(lo=lo, hi=hi, zero=zero, bits=8, scheme="absmax")
+            q_codes = K.quantize(query_emb, params.lo, params.hi, params.zero)
+            return inner(q_codes, cand_codes, shard_idx)
+
+        return step
+
+    def step(query_emb, cand_table, shard_idx):
+        return inner(query_emb, cand_table, shard_idx)
+
+    return step
+
+
+def make_retrieval(quantized: bool, k: int = 100, use_pallas: bool = False) -> Callable:
+    """1-query x n_candidates MIP scoring (the paper's search problem).
+
+    use_pallas=False routes through the XLA int8 dot (the dry-run path —
+    the Pallas kernel is TPU-target and validated separately in interpret
+    mode); on real TPU hardware flip it on.
+    """
+    if quantized:
+        def step(query_emb, cand_codes, lo, hi, zero):
+            from repro.core.quant import QuantParams
+
+            params = QuantParams(lo=lo, hi=hi, zero=zero, bits=8, scheme="absmax")
+            return RT.retrieve_quantized(
+                query_emb, cand_codes, params, k=k, use_pallas=use_pallas
+            )
+
+        return step
+
+    def step(query_emb, cand_table):
+        return RT.retrieve_fp32(query_emb, cand_table, k=k)
+
+    return step
+
+
+# --------------------------------------------------------------------------
+# GNN (SchNet)
+# --------------------------------------------------------------------------
+
+def _schnet_molecule_loss(params, batch, cfg: S.SchNetConfig, n_nodes: int, n_graphs: int):
+    out = S.forward(
+        params, cfg,
+        senders=batch["senders"], receivers=batch["receivers"],
+        edge_mask=batch["edge_mask"], n_nodes=n_nodes,
+        z=batch["z"], positions=batch["positions"],
+    )[:, 0]
+    energies = jax.ops.segment_sum(out, batch["graph_ids"], num_segments=n_graphs)
+    return jnp.mean((energies - batch["labels"]) ** 2)
+
+
+def _schnet_node_loss(params, batch, cfg: S.SchNetConfig, n_nodes: int):
+    logits = S.forward(
+        params, cfg,
+        senders=batch["senders"], receivers=batch["receivers"],
+        edge_mask=batch["edge_mask"], n_nodes=n_nodes,
+        node_feat=batch["node_feat"],
+    )
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def make_gnn_train_step(
+    cfg: S.SchNetConfig,
+    kind: str,
+    opt_cfg: OPT.OptConfig,
+    n_nodes: int,
+    n_graphs: int = 0,
+) -> Callable:
+    if kind == "molecule":
+        loss_fn = partial(
+            _schnet_molecule_loss, cfg=cfg, n_nodes=n_nodes, n_graphs=n_graphs
+        )
+    else:
+        loss_fn = partial(_schnet_node_loss, cfg=cfg, n_nodes=n_nodes)
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, om = OPT.adamw_update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, {"loss": loss, **om}
+
+    return step

@@ -1,0 +1,17 @@
+# Model zoo: the 10 assigned architectures over three substrates —
+# decoder LM transformers (dense + MoE), SchNet GNN, and the recsys
+# family over the EmbeddingBag substrate.
+from repro.models import attention, layers, moe, transformer
+from repro.models.transformer import LMConfig
+from repro.models.gnn.schnet import SchNetConfig
+from repro.models.recsys.models import RecsysConfig
+
+__all__ = [
+    "attention",
+    "layers",
+    "moe",
+    "transformer",
+    "LMConfig",
+    "SchNetConfig",
+    "RecsysConfig",
+]

@@ -1,0 +1,148 @@
+"""Attention: GQA/MQA with RoPE, logit soft-cap, and three sparsity
+patterns (global causal, sliding window, chunked-local) expressed as
+*data* (per-layer window/chunk scalars), so a single scanned layer body
+serves gemma-2b (MQA global), gemma2-9b (alternating local/global +
+soft-cap), minicpm (GQA global) and llama4 (chunked local, iRoPE-style).
+
+Prefill/train uses a blockwise online-softmax over KV blocks
+(``lax.scan``), which keeps the live intermediate at O(S * block_kv) per
+head instead of O(S^2) — the difference between 32k-context cells fitting
+in 16 GB HBM or not.  Decode attends a 1-token query against the cache
+(optionally the paper-quantized int8 cache — see repro.quantized.qkv_cache).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+NEG_INF = -2.0e38
+# sentinel meaning "no locality constraint" for window/chunk scalars
+GLOBAL = jnp.int32(2**30)
+
+
+def attn_init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int, dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": L.dense_init(kq, d_model, n_heads * head_dim, dtype),
+        "wk": L.dense_init(kk, d_model, n_kv * head_dim, dtype),
+        "wv": L.dense_init(kv, d_model, n_kv * head_dim, dtype),
+        "wo": L.dense_init(ko, n_heads * head_dim, d_model, dtype),
+    }
+
+
+def _mask(qpos, kpos, window, chunk):
+    """Causal + locality mask from position vectors (broadcasts [Sq, Sk])."""
+    i = qpos[:, None]
+    j = kpos[None, :]
+    m = j <= i                                  # causal
+    m &= (i - j) < window                       # sliding window
+    m &= (i // chunk) == (j // chunk)           # chunked-local (llama4)
+    return m
+
+
+@partial(jax.jit, static_argnames=("cap", "block_q", "block_kv", "n_heads"))
+def blockwise_attention(
+    q: jax.Array,        # [B, Sq, H, hd]
+    k: jax.Array,        # [B, Sk, Hkv, hd]
+    v: jax.Array,        # [B, Sk, Hkv, hd]
+    qpos: jax.Array,     # [Sq] absolute positions
+    window=GLOBAL,       # per-layer scalar (GLOBAL disables)
+    chunk=GLOBAL,
+    cap: float | None = None,
+    block_q: int = 1024,
+    block_kv: int = 1024,
+    n_heads: int | None = None,
+):
+    """Flash-style attention: q- and kv-blocked online softmax with a
+    custom VJP (repro.models.flash) so neither forward nor backward ever
+    materializes more than one [B, block_q, H, block_kv] score tile."""
+    from repro.models import flash as F
+
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, Sk)
+
+    n_valid_k = Sk
+    if Sk % bkv:
+        pad = bkv - Sk % bkv
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_valid_q = Sq
+    if Sq % bq:
+        padq = bq - Sq % bq
+        q = jnp.pad(q, ((0, 0), (0, padq), (0, 0), (0, 0)))
+        qpos = jnp.pad(qpos, (0, padq))
+    locality = jnp.stack([jnp.asarray(window, jnp.int32),
+                          jnp.asarray(chunk, jnp.int32)])
+    out = F.flash_attention(
+        q, k, v, qpos, locality, cap, bq, bkv, n_valid_k
+    )
+    return out[:, :n_valid_q]
+
+
+def decode_attention(
+    q: jax.Array,        # [B, 1, H, hd]
+    k_cache: jax.Array,  # [B, S, Hkv, hd]
+    v_cache: jax.Array,  # [B, S, Hkv, hd]
+    cur_len: jax.Array,  # [B] or scalar — valid cache length
+    window=GLOBAL,
+    chunk=GLOBAL,
+    cap: float | None = None,
+):
+    """Single-token decode against a (possibly quantized) KV cache."""
+    B, _, H, hd = q.shape
+    S = k_cache.shape[1]
+    Hkv = k_cache.shape[2]
+    g = H // Hkv
+    scale = hd ** -0.5
+
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Hkv, g, hd)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32))
+    s = L.softcap(s, cap)
+
+    kpos = jnp.arange(S)
+    qpos = jnp.asarray(cur_len) - 1          # attend up to current position
+    qpos = jnp.broadcast_to(qpos, (B,))
+    i = qpos[:, None]
+    valid = (kpos[None, :] <= i) & ((i - kpos[None, :]) < window) & (
+        (i // chunk) == (kpos[None, :] // chunk)
+    )
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def attention_block(
+    params,
+    x: jax.Array,          # [B, S, d_model]
+    qpos: jax.Array,       # [S]
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    window=GLOBAL,
+    chunk=GLOBAL,
+    cap: float | None = None,
+    rope_base: float = 10000.0,
+    block_q: int = 1024,
+    block_kv: int = 1024,
+):
+    """Full train/prefill attention block (projections + blockwise attn)."""
+    B, S, _ = x.shape
+    q = L.dense(params["wq"], x).reshape(B, S, n_heads, head_dim)
+    k = L.dense(params["wk"], x).reshape(B, S, n_kv, head_dim)
+    v = L.dense(params["wv"], x).reshape(B, S, n_kv, head_dim)
+    pos2d = jnp.broadcast_to(qpos[None, :], (B, S))
+    q = L.rope(q, pos2d, rope_base)
+    k = L.rope(k, pos2d, rope_base)
+    o = blockwise_attention(
+        q, k, v, qpos, window=window, chunk=chunk, cap=cap,
+        block_q=block_q, block_kv=block_kv,
+    )
+    return L.dense(params["wo"], o.reshape(B, S, n_heads * head_dim)), (k, v)

@@ -1,0 +1,3 @@
+from repro.models.gnn import schnet
+
+__all__ = ["schnet"]

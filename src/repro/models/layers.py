@@ -1,0 +1,106 @@
+"""Shared model layers — functional (params-as-pytrees) style so every
+model jits, shards, and scans cleanly under pjit.
+
+Initializers take explicit keys; all matmuls carry ``preferred_element_type``
+so mixed-precision policies stay predictable under bf16 params.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32, scale: float | None = None):
+    if scale is None:
+        scale = 1.0 / (in_dim ** 0.5)
+    return {"w": jax.random.normal(key, (in_dim, out_dim), dtype) * scale}
+
+
+def dense(params, x):
+    return jnp.dot(x, params["w"], preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return {"table": jax.random.normal(key, (vocab, dim), dtype) * 0.02}
+
+
+def embed(params, ids):
+    return jnp.take(params["table"], ids, axis=0)
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.zeros((dim,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    normed = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (normed * (1.0 + params["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+# -- gated MLPs -------------------------------------------------------------
+
+def glu_mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff, dtype),
+        "up": dense_init(k2, d_model, d_ff, dtype),
+        "down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def glu_mlp(params, x, act: str = "gelu"):
+    g = dense(params["gate"], x)
+    g = jax.nn.gelu(g) if act == "gelu" else jax.nn.silu(g)
+    return dense(params["down"], g * dense(params["up"], x))
+
+
+def mlp_init(key, dims: list[int], dtype=jnp.float32):
+    """Plain MLP stack (recsys towers): dims = [in, h1, ..., out]."""
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        f"l{i}": {
+            **dense_init(keys[i], dims[i], dims[i + 1], dtype),
+            "b": jnp.zeros((dims[i + 1],), dtype),
+        }
+        for i in range(len(dims) - 1)
+    }
+
+
+def mlp(params, x, act=jax.nn.relu, final_act: bool = False):
+    n = len(params)
+    for i in range(n):
+        p = params[f"l{i}"]
+        x = jnp.dot(x, p["w"], preferred_element_type=jnp.float32).astype(x.dtype) + p["b"]
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# -- rotary position embeddings ---------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, base: float = 10000.0):
+    """Apply RoPE. x: [B, S, H, hd], positions: [B, S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # [B, S, half]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float | None):
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def shifted_softplus(x):
+    """SchNet's ssp activation: ln(0.5 e^x + 0.5)."""
+    return jax.nn.softplus(x) - jnp.log(2.0)

@@ -1,0 +1,139 @@
+"""Mixture-of-Experts FFN (llama4-style: top-1 routed experts + shared
+expert) with static-shape capacity dispatch.
+
+Dispatch is gather-based, not one-hot-matmul: tokens are ranked within
+their expert by a cumsum over the [T, E] assignment one-hot, dropped past
+capacity C = ceil(T * cf / E), and gathered into [E, C, d] for batched
+per-expert GEMMs — O(T·E) dispatch bookkeeping instead of the O(T·E·C)
+dense dispatch tensor.  All shapes static (pjit-friendly); EP shards the
+leading E axis of the expert weights over the ``model`` mesh axis.
+
+Router order preservation under the paper's quantization: router logits
+are inner products x·W_r, so Definition 2 applies — int8-quantized
+activations preserve top-1 expert choice up to equality relaxation
+(validated in tests/test_moe.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int = 1
+    d_ff: int = 8192
+    capacity_factor: float = 1.25
+    shared_expert: bool = True
+
+
+def moe_init(key, d_model: int, cfg: MoEConfig, dtype=jnp.float32):
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    E, F = cfg.n_experts, cfg.d_ff
+    s = 1.0 / (d_model ** 0.5)
+    p = {
+        "router": L.dense_init(kr, d_model, E, jnp.float32),
+        "gate_w": jax.random.normal(kg, (E, d_model, F), dtype) * s,
+        "up_w": jax.random.normal(ku, (E, d_model, F), dtype) * s,
+        "down_w": jax.random.normal(kd, (E, F, d_model), dtype) * (1.0 / (F ** 0.5)),
+    }
+    if cfg.shared_expert:
+        p["shared"] = L.glu_mlp_init(ks, d_model, F, dtype)
+    return p
+
+
+def _ambient_axes():
+    """Non-'model' axes of the mesh this trace is running under (if any)."""
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is None or not m.axis_names:
+            return None
+        return tuple(a for a in m.axis_names if a != "model")
+    except Exception:  # noqa: BLE001 — no ambient mesh: skip constraints
+        return None
+
+
+def _constrain(x, spec):
+    try:
+        from jax.sharding import PartitionSpec
+
+        return jax.lax.with_sharding_constraint(x, PartitionSpec(*spec))
+    except Exception:  # noqa: BLE001 — unpartitionable here: leave as-is
+        return x
+
+
+@partial(jax.jit, static_argnames=("cfg", "act"))
+def moe_apply(params, x: jax.Array, cfg: MoEConfig, act: str = "silu"):
+    """x: [B, S, d] -> ([B, S, d], aux_metrics)."""
+    B, S, d = x.shape
+    T = B * S
+    E = cfg.n_experts
+    C = max(8, int(-(-T * cfg.capacity_factor // E)))  # ceil, min 8
+
+    xt = x.reshape(T, d)
+    # keep token-major arrays batch-sharded and expert-major arrays
+    # expert-sharded through the dispatch — GSPMD otherwise replicates the
+    # [T, d] scatter buffers (measured: 39 GB -> ~8 GB on maverick train)
+    token_axes = _ambient_axes()
+    if token_axes:
+        xt = _constrain(xt, (token_axes, None))
+    logits = jnp.dot(
+        xt.astype(jnp.float32), params["router"]["w"], preferred_element_type=jnp.float32
+    )                                                   # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    assign = jnp.argmax(logits, axis=-1)                # top-1
+    gate = jnp.take_along_axis(probs, assign[:, None], axis=-1)[:, 0]
+
+    # rank within expert + capacity drop
+    onehot = jax.nn.one_hot(assign, E, dtype=jnp.int32)            # [T, E]
+    pos = jnp.take_along_axis(jnp.cumsum(onehot, axis=0), assign[:, None], 1)[:, 0] - 1
+    keep = pos < C
+
+    # [E, C] token index table; sentinel T points at an appended zero row
+    idx = jnp.full((E, C), T, jnp.int32)
+    idx = idx.at[
+        jnp.where(keep, assign, E - 1),
+        jnp.where(keep, pos, C - 1),
+    ].set(jnp.where(keep, jnp.arange(T, dtype=jnp.int32), T), mode="drop")
+
+    xpad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    xe = xpad[idx]                                       # [E, C, d]
+    if token_axes:
+        xe = _constrain(xe, ("model", None, None))       # expert-parallel
+
+    h = jnp.einsum("ecd,edf->ecf", xe, params["gate_w"],
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(h) if act == "silu" else jax.nn.gelu(h)).astype(xe.dtype)
+    u = jnp.einsum("ecd,edf->ecf", xe, params["up_w"],
+                   preferred_element_type=jnp.float32).astype(xe.dtype)
+    y = jnp.einsum("ecf,efd->ecd", h * u, params["down_w"],
+                   preferred_element_type=jnp.float32).astype(xe.dtype)
+
+    # combine: scatter expert outputs back to token order (top-1: each token
+    # written at most once) then apply the router gate
+    out = jnp.zeros((T + 1, d), y.dtype).at[idx.reshape(-1)].add(
+        y.reshape(E * C, d), mode="drop"
+    )[:T]
+    if token_axes:
+        out = _constrain(out, (token_axes, None))
+    out = out * gate[:, None].astype(out.dtype)
+
+    if "shared" in params:
+        out = out + L.glu_mlp(params["shared"], xt, act=act)
+
+    # aux: load-balance loss (Switch) + router z-loss
+    me = jnp.mean(jax.nn.one_hot(assign, E, dtype=jnp.float32), axis=0)
+    ce = jnp.mean(probs, axis=0)
+    aux = {
+        "lb_loss": E * jnp.sum(me * ce),
+        "z_loss": jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1))),
+        "drop_frac": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,4 @@
+from repro.models.recsys import embedding, interactions, models, retrieval
+from repro.models.recsys.models import RecsysConfig
+
+__all__ = ["embedding", "interactions", "models", "retrieval", "RecsysConfig"]

@@ -1,0 +1,119 @@
+"""Sparse embedding substrate for the recsys family.
+
+JAX has no native EmbeddingBag and no CSR sparse — per the assignment this
+layer IS part of the system: lookups are ``jnp.take`` gathers; ragged bags
+reduce with ``jax.ops.segment_sum``.  Tables row-shard over the ``model``
+mesh axis (DLRM hybrid parallelism) — see repro.dist.sharding.
+
+The paper's technique lands here as :class:`QuantizedTable`: int8 codes +
+per-dim Eq. 1 constants.  At 10^8-row MLPerf scale the table is the
+memory; int8 cuts table HBM 4x vs fp32 (the paper's ~60%+ claim at
+datacenter scale), and retrieval scoring against int8 candidate tables
+runs on the MXU int8 path via kernels.qmip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as Qz
+
+
+def table_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return {"table": jax.random.normal(key, (vocab, dim), dtype) * (dim ** -0.5)}
+
+
+def multi_table_init(key, vocab_sizes: Sequence[int], dim: int, dtype=jnp.float32):
+    keys = jax.random.split(key, len(vocab_sizes))
+    return {f"t{i}": table_init(keys[i], v, dim, dtype) for i, v in enumerate(vocab_sizes)}
+
+
+def lookup(table_params, ids: jax.Array) -> jax.Array:
+    """Gather: ids [...] -> [..., dim].
+
+    Dispatches on table format: dense {'table': f32 [V, d]} or the
+    paper-quantized {'codes': int8 [V, d], 'scale': [d], 'zero': [d]} —
+    the int8 gather moves 4x fewer bytes through HBM *and* across the
+    mesh (rows are exchanged as codes, dequantized after the collective).
+    """
+    if "codes" in table_params:
+        rows = jnp.take(table_params["codes"], ids, axis=0)
+        return rows.astype(jnp.float32) * table_params["scale"] + table_params["zero"]
+    return jnp.take(table_params["table"], ids, axis=0)
+
+
+def multi_lookup(tables, sparse_ids: jax.Array) -> jax.Array:
+    """sparse_ids [B, F] over F per-field tables -> [B, F, dim]."""
+    cols = [lookup(tables[f"t{f}"], sparse_ids[:, f]) for f in range(sparse_ids.shape[1])]
+    return jnp.stack(cols, axis=1)
+
+
+def quantize_tables(tables, bits: int = 8):
+    """Convert every dense per-field table to the int8 format in place
+    (paper Eq. 1, abs-max constants) — the serving-time compression step."""
+    out = {}
+    for name, tp in tables.items():
+        table = tp["table"]
+        p = Qz.learn_params(table, bits=bits, scheme=Qz.Scheme.ABSMAX)
+        out[name] = {
+            "codes": Qz.quantize(table, p),
+            "scale": p.scale.astype(jnp.float32),
+            "zero": p.zero.astype(jnp.float32),
+        }
+    return out
+
+
+def embedding_bag(
+    table_params,
+    flat_ids: jax.Array,       # [T] gathered ids of all bags
+    segment_ids: jax.Array,    # [T] bag index per id
+    n_bags: int,
+    weights: Optional[jax.Array] = None,
+    combiner: str = "sum",
+) -> jax.Array:
+    """Ragged EmbeddingBag: gather + segment-reduce. Returns [n_bags, dim]."""
+    rows = jnp.take(table_params["table"], flat_ids, axis=0)   # [T, dim]
+    if weights is not None:
+        rows = rows * weights[:, None]
+    summed = jax.ops.segment_sum(rows, segment_ids, num_segments=n_bags)
+    if combiner == "sum":
+        return summed
+    counts = jax.ops.segment_sum(
+        jnp.ones_like(flat_ids, dtype=rows.dtype), segment_ids, num_segments=n_bags
+    )
+    if combiner == "mean":
+        return summed / jnp.maximum(counts[:, None], 1.0)
+    raise ValueError(combiner)
+
+
+# --------------------------------------------------------------------------
+# Quantized tables — the paper applied to embedding storage
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QuantizedTable:
+    codes: jax.Array                  # [vocab, dim] int8
+    params: Qz.QuantParams
+
+    @staticmethod
+    def from_dense(table: jax.Array, bits: int = 8,
+                   scheme=Qz.Scheme.ABSMAX, sigmas: float = 1.0) -> "QuantizedTable":
+        p = Qz.learn_params(table, bits=bits, scheme=scheme, sigmas=sigmas)
+        return QuantizedTable(codes=Qz.quantize(table, p), params=p)
+
+    def lookup(self, ids: jax.Array) -> jax.Array:
+        """Dequantizing gather: int8 rows -> f32 embeddings."""
+        rows = jnp.take(self.codes, ids, axis=0)
+        return Qz.dequantize(rows, self.params)
+
+    def lookup_codes(self, ids: jax.Array) -> jax.Array:
+        """Integer-domain gather (for quantized scoring paths)."""
+        return jnp.take(self.codes, ids, axis=0)
+
+    def memory_bytes(self) -> int:
+        return int(self.codes.size) + 3 * int(self.codes.shape[1]) * 4

@@ -1,0 +1,180 @@
+"""The four assigned recsys architectures assembled over the shared
+embedding + interaction substrate, each exposing loss() for training,
+serve() for online/bulk scoring, and (via retrieval.py) the 1M-candidate
+MIP scoring step that is literally the paper's search problem.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.recsys import embedding as E
+from repro.models.recsys import interactions as I
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    kind: str                          # autoint | dlrm | dien | dcnv2
+    n_dense: int
+    vocab_sizes: tuple[int, ...]
+    embed_dim: int
+    # autoint
+    n_attn_layers: int = 3
+    n_heads: int = 2
+    d_attn: int = 32
+    # dlrm
+    bot_mlp: tuple[int, ...] = ()
+    top_mlp: tuple[int, ...] = ()
+    # dien
+    seq_len: int = 0
+    gru_dim: int = 0
+    mlp: tuple[int, ...] = ()
+    # dcn-v2
+    n_cross_layers: int = 0
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.vocab_sizes)
+
+    def param_count(self) -> int:
+        counts = sum(v * self.embed_dim for v in self.vocab_sizes)
+        return counts  # tables dominate; MLPs counted at init if needed
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init_params(key, cfg: RecsysConfig):
+    kt, km = jax.random.split(key)
+    p = {"tables": E.multi_table_init(kt, cfg.vocab_sizes, cfg.embed_dim, cfg.jdtype)}
+    d = cfg.embed_dim
+
+    if cfg.kind == "autoint":
+        keys = jax.random.split(km, cfg.n_attn_layers + 1)
+        dims = [d] + [cfg.n_heads * cfg.d_attn] * cfg.n_attn_layers
+        p["attn"] = {
+            f"a{i}": I.autoint_layer_init(keys[i], dims[i], cfg.n_heads, cfg.d_attn, cfg.jdtype)
+            for i in range(cfg.n_attn_layers)
+        }
+        p["out"] = L.mlp_init(keys[-1], [dims[-1] * cfg.n_sparse, 1], cfg.jdtype)
+
+    elif cfg.kind == "dlrm":
+        k1, k2 = jax.random.split(km)
+        p["bot"] = L.mlp_init(k1, [cfg.n_dense, *cfg.bot_mlp], cfg.jdtype)
+        n_feats = cfg.n_sparse + 1                       # sparse + bottom output
+        d_inter = n_feats * (n_feats - 1) // 2
+        p["top"] = L.mlp_init(k2, [d_inter + cfg.bot_mlp[-1], *cfg.top_mlp], cfg.jdtype)
+
+    elif cfg.kind == "dien":
+        k1, k2, k3, k4 = jax.random.split(km, 4)
+        p["gru"] = I.gru_init(k1, d, cfg.gru_dim, cfg.jdtype)
+        p["augru"] = I.gru_init(k2, cfg.gru_dim, cfg.gru_dim, cfg.jdtype)
+        p["att"] = L.mlp_init(k3, [cfg.gru_dim + d, 36, 1], cfg.jdtype)
+        # final MLP over [target_embed, final_interest, other fields]
+        d_in = d * cfg.n_sparse + cfg.gru_dim
+        p["out"] = L.mlp_init(k4, [d_in, *cfg.mlp, 1], cfg.jdtype)
+
+    elif cfg.kind == "dcnv2":
+        k1, k2, k3 = jax.random.split(km, 3)
+        d_in = cfg.n_dense + cfg.n_sparse * d
+        p["cross"] = I.cross_init(k1, d_in, cfg.n_cross_layers, cfg.jdtype)
+        p["deep"] = L.mlp_init(k2, [d_in, *cfg.mlp], cfg.jdtype)
+        p["out"] = L.mlp_init(k3, [d_in + cfg.mlp[-1], 1], cfg.jdtype)
+    else:
+        raise ValueError(cfg.kind)
+    return p
+
+
+def abstract_params(cfg: RecsysConfig):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# --------------------------------------------------------------------------
+# forward per kind
+# --------------------------------------------------------------------------
+
+def _forward_autoint(params, cfg, batch):
+    x = E.multi_lookup(params["tables"], batch["sparse"])       # [B, F, d]
+    for i in range(cfg.n_attn_layers):
+        x = I.autoint_layer(params["attn"][f"a{i}"], x, cfg.n_heads)
+    return L.mlp(params["out"], x.reshape(x.shape[0], -1))[:, 0]
+
+
+def _forward_dlrm(params, cfg, batch):
+    dense_v = L.mlp(params["bot"], batch["dense"], final_act=True)  # [B, d]
+    sparse_v = E.multi_lookup(params["tables"], batch["sparse"])    # [B, F, d]
+    feats = jnp.concatenate([dense_v[:, None, :], sparse_v], axis=1)
+    inter = I.dot_interaction(feats)                                # [B, .]
+    top_in = jnp.concatenate([dense_v, inter], axis=-1)
+    return L.mlp(params["top"], top_in)[:, 0]
+
+
+def _forward_dien(params, cfg, batch):
+    target = E.lookup(params["tables"]["t0"], batch["sparse"][:, 0])   # [B, d]
+    others = E.multi_lookup(params["tables"], batch["sparse"])          # [B, F, d]
+    hist = E.lookup(params["tables"]["t0"], batch["hist_ids"])          # [B, T, d]
+    mask = batch["hist_mask"]
+
+    states = I.gru_scan(params["gru"], hist, mask)                      # [B, T, g]
+    # attention of target on interest states
+    tgt = jnp.broadcast_to(target[:, None, :], hist.shape)
+    att_in = jnp.concatenate([states, tgt], axis=-1)
+    scores = L.mlp(params["att"], att_in)[..., 0]
+    scores = jnp.where(mask > 0, scores, -1e30)
+    att = jax.nn.softmax(scores, axis=-1)
+    final = I.augru_scan(params["augru"], states, att, mask)            # [B, g]
+
+    flat = jnp.concatenate([others.reshape(others.shape[0], -1), final], axis=-1)
+    return L.mlp(params["out"], flat)[:, 0]
+
+
+def _forward_dcnv2(params, cfg, batch):
+    sparse_v = E.multi_lookup(params["tables"], batch["sparse"])
+    x0 = jnp.concatenate(
+        [batch["dense"], sparse_v.reshape(sparse_v.shape[0], -1)], axis=-1
+    )
+    xc = I.cross_apply(params["cross"], x0)
+    xd = L.mlp(params["deep"], x0, final_act=True)
+    return L.mlp(params["out"], jnp.concatenate([xc, xd], axis=-1))[:, 0]
+
+
+_FWD = {
+    "autoint": _forward_autoint,
+    "dlrm": _forward_dlrm,
+    "dien": _forward_dien,
+    "dcnv2": _forward_dcnv2,
+}
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def forward(params, batch, cfg: RecsysConfig) -> jax.Array:
+    """CTR logit [B]."""
+    return _FWD[cfg.kind](params, cfg, batch)
+
+
+def bce_loss(params, batch, cfg: RecsysConfig):
+    logit = forward(params, batch, cfg)
+    y = batch["label"]
+    loss = jnp.mean(
+        jnp.maximum(logit, 0) - logit * y + jnp.log1p(jnp.exp(-jnp.abs(logit)))
+    )
+    return loss, {"logit_mean": jnp.mean(logit)}
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def serve(params, batch, cfg: RecsysConfig) -> jax.Array:
+    """Online scoring: sigmoid CTR probability [B]."""
+    return jax.nn.sigmoid(forward(params, batch, cfg))

@@ -1,0 +1,371 @@
+"""Decoder-only LM covering all five assigned transformer architectures
+through one scanned layer body.
+
+Architecture features expressed as config data (not code forks):
+  * GQA/MQA (n_kv), explicit head_dim (gemma's 256 ≠ d_model / n_heads),
+  * GeGLU / SwiGLU MLPs, embedding scaling by sqrt(d_model),
+  * attention/final logit soft-capping (gemma-2),
+  * per-layer locality pattern: 'g' global, 'l' sliding-window,
+    'c' chunked-local (llama4 iRoPE-style) — carried as per-layer int
+    scalars through one ``lax.scan``, so the HLO stays one-layer-sized
+    regardless of depth (48-layer graphs compile like 1-layer graphs),
+  * optional MoE FFN (llama4: 16/128 experts, top-1 + shared), with
+    ``moe_every=2`` interleaving dense and MoE layers (llama4-maverick's
+    actual 400B layout) via a scan over homogeneous layer *blocks*,
+  * vocabulary padding to a shard-friendly multiple (e.g. minicpm's
+    122753 -> 122880); padded logit columns are masked to -inf.
+
+Layer params are stacked along a leading [L_blocks, ...] axis; forward is
+``lax.scan`` over blocks with ``jax.checkpoint`` on the body (remat).
+Attention is flash-style blockwise with a custom VJP (repro.models.flash).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    act: str = "gelu"                      # geglu -> "gelu", swiglu -> "silu"
+    rope_base: float = 10000.0
+    layer_pattern: str = "g"               # tiled to n_layers: g/l/c
+    window: int = 4096                     # for 'l' layers
+    chunk: int = 8192                      # for 'c' layers
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    scale_embed: bool = True
+    moe: Optional[M.MoEConfig] = None
+    moe_every: int = 1                     # 2 = dense/MoE interleave (maverick)
+    dense_d_ff: Optional[int] = None       # dense-layer d_ff in interleave mode
+    dtype: str = "bfloat16"
+    block_q: int = 1024
+    block_kv: int = 1024
+    remat: bool = True
+    pad_vocab_multiple: int = 256
+    # paper integration: store decode KV cache as int8 codes
+    quantized_kv: bool = False
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.pad_vocab_multiple
+        return ((self.vocab + m - 1) // m) * m
+
+    @property
+    def block_layers(self) -> int:
+        """Layers per scan step (1 unless MoE interleaving)."""
+        return self.moe_every if self.moe is not None else 1
+
+    @property
+    def n_blocks(self) -> int:
+        assert self.n_layers % self.block_layers == 0
+        return self.n_layers // self.block_layers
+
+    def sub_uses_moe(self, j: int) -> bool:
+        """Does sub-layer j of a block use the MoE FFN?"""
+        return self.moe is not None and j == self.block_layers - 1
+
+    def sub_d_ff(self, j: int) -> int:
+        if self.moe is not None and not self.sub_uses_moe(j):
+            return self.dense_d_ff or self.d_ff
+        return self.d_ff
+
+    def layer_locality(self):
+        """Per-layer (window, chunk) int32 arrays from the pattern string."""
+        pat = (self.layer_pattern * self.n_layers)[: self.n_layers]
+        win = [self.window if c == "l" else int(A.GLOBAL) for c in pat]
+        chk = [self.chunk if c == "c" else int(A.GLOBAL) for c in pat]
+        shape = (self.n_blocks, self.block_layers)
+        return (
+            jnp.asarray(win, jnp.int32).reshape(shape),
+            jnp.asarray(chk, jnp.int32).reshape(shape),
+        )
+
+    def param_count(self) -> int:
+        d, v = self.d_model, self.vocab
+        attn = d * self.n_heads * self.head_dim * 2 + d * self.n_kv * self.head_dim * 2
+        total = v * d + d
+        for i in range(self.n_layers):
+            j = i % self.block_layers
+            total += attn + 2 * d
+            if self.sub_uses_moe(j):
+                total += 3 * d * self.moe.d_ff * self.moe.n_experts + d * self.moe.n_experts
+                if self.moe.shared_expert:
+                    total += 3 * d * self.moe.d_ff
+            else:
+                total += 3 * d * self.sub_d_ff(j)
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k experts + shared)."""
+        if self.moe is None:
+            return self.param_count()
+        d, v = self.d_model, self.vocab
+        attn = d * self.n_heads * self.head_dim * 2 + d * self.n_kv * self.head_dim * 2
+        total = v * d + d
+        for i in range(self.n_layers):
+            j = i % self.block_layers
+            total += attn + 2 * d
+            if self.sub_uses_moe(j):
+                total += 3 * d * self.moe.d_ff * self.moe.top_k + d * self.moe.n_experts
+                if self.moe.shared_expert:
+                    total += 3 * d * self.moe.d_ff
+            else:
+                total += 3 * d * self.sub_d_ff(j)
+        return total
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _sub_layer_init(key, cfg: LMConfig, j: int):
+    ka, km, _k1, _k2 = jax.random.split(key, 4)
+    p = {
+        "attn": A.attn_init(ka, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim, cfg.jdtype),
+        "ln1": L.rmsnorm_init(cfg.d_model, cfg.jdtype),
+        "ln2": L.rmsnorm_init(cfg.d_model, cfg.jdtype),
+    }
+    if cfg.sub_uses_moe(j):
+        p["moe"] = M.moe_init(km, cfg.d_model, cfg.moe, cfg.jdtype)
+    else:
+        p["mlp"] = L.glu_mlp_init(km, cfg.d_model, cfg.sub_d_ff(j), cfg.jdtype)
+    return p
+
+
+def _block_init(key, cfg: LMConfig):
+    keys = jax.random.split(key, cfg.block_layers)
+    return {f"sub{j}": _sub_layer_init(keys[j], cfg, j) for j in range(cfg.block_layers)}
+
+
+def init_params(key, cfg: LMConfig):
+    ke, kl, _kf = jax.random.split(key, 3)
+    block_keys = jax.random.split(kl, cfg.n_blocks)
+    layers = jax.vmap(lambda k: _block_init(k, cfg))(block_keys)
+    return {
+        "embed": L.embed_init(ke, cfg.padded_vocab, cfg.d_model, cfg.jdtype),
+        "layers": layers,
+        "final_norm": L.rmsnorm_init(cfg.d_model, cfg.jdtype),
+    }
+
+
+def abstract_params(cfg: LMConfig):
+    """ShapeDtypeStruct pytree (no allocation) — dry-run currency."""
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def _sub_layer_body(cfg: LMConfig, x, lp, window, chunk, qpos, collect_kv, j):
+    a_in = L.rmsnorm(lp["ln1"], x)
+    a_out, kv = A.attention_block(
+        lp["attn"], a_in, qpos,
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+        window=window, chunk=chunk, cap=cfg.attn_softcap,
+        rope_base=cfg.rope_base, block_q=cfg.block_q, block_kv=cfg.block_kv,
+    )
+    x = x + a_out
+    m_in = L.rmsnorm(lp["ln2"], x)
+    if cfg.sub_uses_moe(j):
+        m_out, aux = M.moe_apply(lp["moe"], m_in, cfg.moe, act=cfg.act)
+    else:
+        m_out = L.glu_mlp(lp["mlp"], m_in, act=cfg.act)
+        aux = {"lb_loss": jnp.zeros(()), "z_loss": jnp.zeros(()), "drop_frac": jnp.zeros(())}
+    x = x + m_out
+    return x, (kv if collect_kv else None), aux
+
+
+def _mask_padded_logits(logits, cfg: LMConfig):
+    if cfg.padded_vocab == cfg.vocab:
+        return logits
+    valid = jnp.arange(cfg.padded_vocab) < cfg.vocab
+    return jnp.where(valid, logits, A.NEG_INF)
+
+
+@partial(jax.jit, static_argnames=("cfg", "collect_kv", "logits_mode"))
+def forward(
+    params,
+    tokens: jax.Array,
+    cfg: LMConfig,
+    collect_kv: bool = False,
+    logits_mode: str = "full",       # full | last (prefill only needs [:, -1])
+):
+    """tokens [B, S] -> logits [B, S, padded_vocab] (+ caches, aux)."""
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens).astype(cfg.jdtype)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model**0.5, cfg.jdtype)
+    qpos = jnp.arange(S)
+    win_arr, chk_arr = cfg.layer_locality()    # [n_blocks, block_layers]
+
+    def body(x, per_block):
+        bp, windows, chunks = per_block
+        kvs, auxs = [], []
+        for j in range(cfg.block_layers):
+            x, kv, aux = _sub_layer_body(
+                cfg, x, bp[f"sub{j}"], windows[j], chunks[j], qpos, collect_kv, j
+            )
+            kvs.append(kv)
+            auxs.append(aux)
+        aux = jax.tree.map(lambda *a: jnp.mean(jnp.stack(a)), *auxs)
+        if collect_kv:
+            kv_out = jax.tree.map(lambda *a: jnp.stack(a), *kvs)
+        else:
+            kv_out = None
+        return x, (kv_out, aux)
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, (kvs, auxs) = jax.lax.scan(body_fn, x, (params["layers"], win_arr, chk_arr))
+
+    if logits_mode == "last":
+        x = x[:, -1:]                # avoid the [B, S, vocab] materialization
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = jnp.dot(
+        x, params["embed"]["table"].T.astype(x.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    logits = L.softcap(logits, cfg.final_softcap)
+    logits = _mask_padded_logits(logits, cfg)
+    aux = jax.tree.map(jnp.mean, auxs)
+    if collect_kv:
+        # kvs: (k, v) each [n_blocks, block_layers, B, S, Hkv, hd] — the
+        # canonical cache layout (block-major so decode's scan consumes it
+        # without reshape copies; see EXPERIMENTS.md §Perf decode iteration)
+        return logits, kvs, aux
+    return logits, aux
+
+
+def lm_loss(params, batch, cfg: LMConfig):
+    logits, aux = forward(params, batch["tokens"], cfg)
+    logits_f = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits_f, axis=-1)
+    tgt = jnp.take_along_axis(logits_f, batch["targets"][..., None], axis=-1)[..., 0]
+    nll = lse - tgt
+    loss = jnp.sum(nll * batch["mask"]) / jnp.maximum(jnp.sum(batch["mask"]), 1.0)
+    if cfg.moe is not None:
+        loss = loss + 0.01 * aux["lb_loss"] + 1e-3 * aux["z_loss"]
+    return loss, aux
+
+
+# --------------------------------------------------------------------------
+# prefill + decode (serving)
+# --------------------------------------------------------------------------
+
+def prefill(params, tokens: jax.Array, cfg: LMConfig):
+    """Run the prompt, return (last-position logits, kv caches)."""
+    logits, kvs, _ = forward(params, tokens, cfg, collect_kv=True, logits_mode="last")
+    return logits[:, -1], kvs  # kvs: (k [L,B,S,Hkv,hd], v [...])
+
+
+def _decode_sub(cfg, x, lp, kc, vc, window, chunk, pos2d, cur_len, j, B):
+    a_in = L.rmsnorm(lp["ln1"], x)
+    q = L.dense(lp["attn"]["wq"], a_in).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+    k = L.dense(lp["attn"]["wk"], a_in).reshape(B, 1, cfg.n_kv, cfg.head_dim)
+    v = L.dense(lp["attn"]["wv"], a_in).reshape(B, 1, cfg.n_kv, cfg.head_dim)
+    q = L.rope(q, pos2d, cfg.rope_base)
+    k = L.rope(k, pos2d, cfg.rope_base)
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), cur_len, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), cur_len, axis=1)
+    o = A.decode_attention(
+        q, kc, vc, cur_len + 1, window=window, chunk=chunk, cap=cfg.attn_softcap
+    )
+    x = x + L.dense(lp["attn"]["wo"], o.reshape(B, 1, cfg.n_heads * cfg.head_dim))
+    m_in = L.rmsnorm(lp["ln2"], x)
+    if cfg.sub_uses_moe(j):
+        mo, _ = M.moe_apply(lp["moe"], m_in, cfg.moe, act=cfg.act)
+        x = x + mo
+    else:
+        x = x + L.glu_mlp(lp["mlp"], m_in, act=cfg.act)
+    return x, kc, vc
+
+
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
+def decode_step(params, caches, token: jax.Array, cur_len: jax.Array, cfg: LMConfig):
+    """One decode step.
+
+    caches: (k_cache, v_cache) each [L, B, Smax, Hkv, hd] (fp) — for the
+    paper-quantized int8 cache path see repro.quantized.qkv_cache.
+    token: [B, 1] int32; cur_len: scalar int32 (tokens already in cache).
+    """
+    B = token.shape[0]
+    x = L.embed(params["embed"], token).astype(cfg.jdtype)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model**0.5, cfg.jdtype)
+    win_arr, chk_arr = cfg.layer_locality()
+    kb, vb = caches          # block layout [n_blocks, bl, B, Smax, Hkv, hd]
+    bl = cfg.block_layers
+    pos2d = jnp.broadcast_to(jnp.asarray(cur_len)[None, None], (B, 1))
+
+    # fori_loop with the caches in the CARRY (not scan xs/ys): carried
+    # buffers update in place under donation, so the O(L·B·S) cache is
+    # never double-buffered — scan's fresh ys allocation was the decode
+    # memory hot spot (EXPERIMENTS.md §Perf decode iteration).
+    def body(i, state):
+        x, kb, vb = state
+        bp = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+            params["layers"],
+        )
+        for j in range(bl):
+            kc = kb[i, j]
+            vc = vb[i, j]
+            x, kc, vc = _decode_sub(
+                cfg, x, bp[f"sub{j}"], kc, vc,
+                win_arr[i, j], chk_arr[i, j], pos2d, cur_len, j, B,
+            )
+            idx = (i, j) + (0,) * kc.ndim
+            kb = jax.lax.dynamic_update_slice(kb, kc[None, None], idx)
+            vb = jax.lax.dynamic_update_slice(vb, vc[None, None], idx)
+        return (x, kb, vb)
+
+    x, k_new, v_new = jax.lax.fori_loop(0, cfg.n_blocks, body, (x, kb, vb))
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = jnp.dot(
+        x, params["embed"]["table"].T.astype(x.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    logits = L.softcap(logits, cfg.final_softcap)
+    logits = _mask_padded_logits(logits, cfg)[:, 0]
+    return logits, (k_new, v_new)
+
+
+def cache_shape(cfg: LMConfig, batch: int, max_len: int) -> tuple:
+    """Canonical (block-major) KV cache shape."""
+    return (cfg.n_blocks, cfg.block_layers, batch, max_len, cfg.n_kv, cfg.head_dim)
+
+
+def make_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None):
+    """Empty fp KV cache [n_blocks, block_layers, B, Smax, Hkv, hd] x2."""
+    dtype = dtype or cfg.jdtype
+    shape = cache_shape(cfg, batch, max_len)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def write_prefix(cache: jax.Array, prefix: jax.Array, start: int = 0) -> jax.Array:
+    """Write prefill kv (same layout, shorter S at axis 3) into a cache."""
+    return jax.lax.dynamic_update_slice_in_dim(
+        cache, prefix.astype(cache.dtype), start, axis=3
+    )

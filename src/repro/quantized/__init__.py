@@ -1,0 +1,21 @@
+# The paper's technique integrated as first-class features:
+#   qkv_cache — int8 KV cache decode attention (LM family)
+#   embedding.QuantizedTable (models.recsys) — int8 embedding tables
+#   knn.* quantized index options — the paper's own evaluation targets
+from repro.quantized.qkv_cache import (
+    QuantizedCache,
+    cache_memory_bytes,
+    decode_step_q8,
+    make_quantized_cache,
+    quantize_cache,
+    quantized_decode_attention,
+)
+
+__all__ = [
+    "QuantizedCache",
+    "cache_memory_bytes",
+    "decode_step_q8",
+    "make_quantized_cache",
+    "quantize_cache",
+    "quantized_decode_attention",
+]

@@ -1,0 +1,218 @@
+"""int8 KV cache — the paper's quantization applied to LM decode.
+
+Decode attention logits are inner products q·K over the cache: exactly the
+paper's MIP problem, with the cache as the corpus and Definition 2
+guaranteeing top-k (i.e. attention-weight ordering) preservation.  We
+apply Eq. 1 per (layer, kv-head, head-dim) with abs-max constants (§4.2 —
+K/V activations are low-variance per dim after RoPE), storing codes int8:
+
+    K ≈ scale_k ⊙ K_codes        V ≈ scale_v ⊙ V_codes
+
+Scoring never dequantizes the O(S)-sized cache: the per-dim scale folds
+into the single query vector (q' = q ⊙ scale_k), so the hot loop is an
+int8 gather + dot over codes — 4x less HBM traffic than fp32 and 2x less
+than bf16, on the decode path whose roofline is *pure* HBM bandwidth
+(see EXPERIMENTS.md §Roofline: decode_32k is memory-term dominated).
+V applies its scale to the O(1)-sized attention output the same way.
+
+At 500k context this is the difference between a 90 GB and a 22 GB cache
+(gemma2-9b), i.e. whether the long_500k cell fits per-pod HBM at batch 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models.transformer import LMConfig
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QuantizedCache:
+    """int8 KV cache with per (layer, kv-head, dim) scales.
+
+    Block-major layout matching transformer.cache_shape:
+    codes [n_blocks, block_layers, B, S, Hkv, hd], scales [nb, bl, Hkv, hd].
+    """
+
+    k_codes: jax.Array
+    v_codes: jax.Array
+    k_scale: jax.Array
+    v_scale: jax.Array
+
+    @property
+    def max_len(self) -> int:
+        return self.k_codes.shape[3]
+
+
+def make_quantized_cache(cfg: LMConfig, batch: int, max_len: int) -> QuantizedCache:
+    from repro.models.transformer import cache_shape
+
+    shape = cache_shape(cfg, batch, max_len)
+    sshape = (cfg.n_blocks, cfg.block_layers, cfg.n_kv, cfg.head_dim)
+    return QuantizedCache(
+        k_codes=jnp.zeros(shape, jnp.int8),
+        v_codes=jnp.zeros(shape, jnp.int8),
+        k_scale=jnp.ones(sshape, jnp.float32),
+        v_scale=jnp.ones(sshape, jnp.float32),
+    )
+
+
+def _absmax_scale(x: jax.Array) -> jax.Array:
+    """abs-max per (block, sub, kv-head, dim) over batch and sequence."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(2, 3))  # [nb, bl, Hkv, hd]
+    return jnp.maximum(amax, 1e-8) / 127.0
+
+
+def _enc(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """fp -> int8 codes. x: [nb, bl, B, S, Hkv, hd]; scale [nb, bl, Hkv, hd]."""
+    q = jnp.round(x.astype(jnp.float32) / scale[:, :, None, None, :, :])
+    return jnp.clip(q, -128, 127).astype(jnp.int8)
+
+
+def quantize_cache(
+    k: jax.Array, v: jax.Array, max_len: int
+) -> QuantizedCache:
+    """Compress a prefill fp cache [nb, bl, B, S, Hkv, hd] into codes+scales.
+
+    This is the 'learn constants from the corpus' step of the paper, with
+    the prefill cache as the corpus; decode steps reuse the constants.
+    """
+    k_scale = _absmax_scale(k)
+    v_scale = _absmax_scale(v)
+    kc = _enc(k, k_scale)
+    vc = _enc(v, v_scale)
+    pad = max_len - kc.shape[3]
+    if pad > 0:
+        padw = ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+        kc = jnp.pad(kc, padw)
+        vc = jnp.pad(vc, padw)
+    return QuantizedCache(k_codes=kc, v_codes=vc, k_scale=k_scale, v_scale=v_scale)
+
+
+def quantized_decode_attention(
+    q: jax.Array,          # [B, 1, H, hd] fp
+    k_codes: jax.Array,    # [B, S, Hkv, hd] int8
+    v_codes: jax.Array,
+    k_scale: jax.Array,    # [Hkv, hd]
+    v_scale: jax.Array,
+    cur_len: jax.Array,
+    window=A.GLOBAL,
+    chunk=A.GLOBAL,
+    cap: float | None = None,
+):
+    """Decode attention over int8 codes; scales fold into q / output."""
+    B, _, H, hd = q.shape
+    S, Hkv = k_codes.shape[1], k_codes.shape[2]
+    g = H // Hkv
+    scale = hd ** -0.5
+
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Hkv, g, hd)
+    q_folded = qf * k_scale[None, :, None, :]              # fold k scale into q
+    s = jnp.einsum("bhgd,bkhd->bhgk", q_folded, k_codes.astype(jnp.float32))
+    s = L.softcap(s, cap)
+
+    kpos = jnp.arange(S)
+    i = (jnp.broadcast_to(jnp.asarray(cur_len), (B,)) - 1)[:, None]
+    valid = (kpos[None, :] <= i) & ((i - kpos[None, :]) < window) & (
+        (i // chunk) == (kpos[None, :] // chunk)
+    )
+    s = jnp.where(valid[:, None, None, :], s, A.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_codes.astype(jnp.float32))
+    out = out * v_scale[None, :, None, :]                  # fold v scale into output
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
+def decode_step_q8(
+    params, qcache: QuantizedCache, token: jax.Array, cur_len: jax.Array, cfg: LMConfig
+):
+    """One decode step over the int8 cache (mirror of transformer.decode_step)."""
+    from repro.models.transformer import _mask_padded_logits
+
+    B = token.shape[0]
+    x = L.embed(params["embed"], token).astype(cfg.jdtype)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model**0.5, cfg.jdtype)
+    win_arr, chk_arr = cfg.layer_locality()      # [n_blocks, block_layers]
+    pos2d = jnp.broadcast_to(jnp.asarray(cur_len)[None, None], (B, 1))
+
+    bl = cfg.block_layers
+
+    def sub(x, lp, kc, vc, ks, vs, window, chunk, j):
+        a_in = L.rmsnorm(lp["ln1"], x)
+        q = L.dense(lp["attn"]["wq"], a_in).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+        k = L.dense(lp["attn"]["wk"], a_in).reshape(B, 1, cfg.n_kv, cfg.head_dim)
+        v = L.dense(lp["attn"]["wv"], a_in).reshape(B, 1, cfg.n_kv, cfg.head_dim)
+        q = L.rope(q, pos2d, cfg.rope_base)
+        k = L.rope(k, pos2d, cfg.rope_base)
+
+        # quantize the incoming token with the cache's constants
+        k_new = jnp.clip(
+            jnp.round(k.astype(jnp.float32) / ks[None, None]), -128, 127
+        ).astype(jnp.int8)
+        v_new = jnp.clip(
+            jnp.round(v.astype(jnp.float32) / vs[None, None]), -128, 127
+        ).astype(jnp.int8)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k_new, cur_len, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v_new, cur_len, axis=1)
+
+        o = quantized_decode_attention(
+            q, kc, vc, ks, vs, cur_len + 1,
+            window=window, chunk=chunk, cap=cfg.attn_softcap,
+        )
+        x = x + L.dense(lp["attn"]["wo"], o.reshape(B, 1, cfg.n_heads * cfg.head_dim))
+        m_in = L.rmsnorm(lp["ln2"], x)
+        if cfg.sub_uses_moe(j):
+            mo, _ = M.moe_apply(lp["moe"], m_in, cfg.moe, act=cfg.act)
+            x = x + mo
+        else:
+            x = x + L.glu_mlp(lp["mlp"], m_in, act=cfg.act)
+        return x, kc, vc
+
+    def body(x, per_block):
+        bp, kc_b, vc_b, ks_b, vs_b, windows, chunks = per_block
+        new_k, new_v = [], []
+        for j in range(bl):
+            x, kc, vc = sub(
+                x, bp[f"sub{j}"], kc_b[j], vc_b[j], ks_b[j], vs_b[j],
+                windows[j], chunks[j], j,
+            )
+            new_k.append(kc)
+            new_v.append(vc)
+        return x, (jnp.stack(new_k), jnp.stack(new_v))
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body,
+        x,
+        (
+            params["layers"],
+            qcache.k_codes, qcache.v_codes,
+            qcache.k_scale, qcache.v_scale,
+            win_arr, chk_arr,
+        ),
+    )
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = jnp.dot(
+        x, params["embed"]["table"].T.astype(x.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    logits = L.softcap(logits, cfg.final_softcap)
+    logits = _mask_padded_logits(logits, cfg)[:, 0]
+    new_cache = dataclasses.replace(qcache, k_codes=k_new, v_codes=v_new)
+    return logits, new_cache
+
+
+def cache_memory_bytes(cfg: LMConfig, batch: int, max_len: int, quantized: bool) -> int:
+    per = cfg.n_layers * batch * max_len * cfg.n_kv * cfg.head_dim
+    if quantized:
+        return 2 * per + 2 * cfg.n_layers * cfg.n_kv * cfg.head_dim * 4
+    return 2 * per * 2  # bf16

@@ -1,0 +1,20 @@
+# Training runtime: dependency-free AdamW + schedules (incl. minicpm's
+# WSD), grad-accumulation step factory, atomic digest-verified
+# checkpointing, preemption/straggler/elastic fault tolerance.
+from repro.train import checkpoint, fault_tolerance, optimizer, train_loop
+from repro.train.optimizer import OptConfig, adamw_init, adamw_update, lr_at
+from repro.train.train_loop import TrainConfig, make_train_step, train
+
+__all__ = [
+    "checkpoint",
+    "fault_tolerance",
+    "optimizer",
+    "train_loop",
+    "OptConfig",
+    "adamw_init",
+    "adamw_update",
+    "lr_at",
+    "TrainConfig",
+    "make_train_step",
+    "train",
+]

@@ -1,0 +1,110 @@
+"""Atomic, digest-verified checkpointing — the fault-tolerance substrate.
+
+Layout: ``<dir>/step_<N>/`` containing ``arrays.npz`` (flattened pytree
+leaves) + ``meta.msgpack`` (treedef paths, shapes, dtypes, step, user
+metadata, content digest).  Writes go to ``<dir>/.tmp_step_<N>`` and are
+``os.rename``d into place — a crashed writer can never leave a
+half-checkpoint that restore would read (rename is atomic on POSIX).
+
+``restore_latest`` walks checkpoints newest-first and skips any that fail
+digest verification, so a corrupted latest step falls back to the
+previous one instead of killing the job — the restart-after-preemption
+path at cluster scale.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import shutil
+from typing import Any, Optional
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(p) for p in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def _digest(arrays: dict[str, np.ndarray]) -> str:
+    h = hashlib.sha256()
+    for k in sorted(arrays):
+        h.update(k.encode())
+        h.update(np.ascontiguousarray(arrays[k]).tobytes())
+    return h.hexdigest()
+
+
+def save(directory: str, step: int, tree: Any, metadata: Optional[dict] = None) -> str:
+    """Atomically write a checkpoint; returns its final path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = os.path.join(directory, f".tmp_step_{step:010d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    paths, leaves, _ = _flatten_with_paths(tree)
+    arrays = {f"a{i}": np.asarray(leaf) for i, leaf in enumerate(leaves)}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    meta = {
+        "step": step,
+        "paths": paths,
+        "digest": _digest(arrays),
+        "user": metadata or {},
+    }
+    with open(os.path.join(tmp, "meta.msgpack"), "wb") as f:
+        f.write(msgpack.packb(meta))
+
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def _load_one(path: str, tree_template: Any):
+    with open(os.path.join(path, "meta.msgpack"), "rb") as f:
+        meta = msgpack.unpackb(f.read())
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        arrays = {k: z[k] for k in z.files}
+    if _digest(arrays) != meta["digest"]:
+        raise IOError(f"digest mismatch in {path}")
+    leaves = [arrays[f"a{i}"] for i in range(len(arrays))]
+    treedef = jax.tree_util.tree_structure(tree_template)
+    restored = jax.tree_util.tree_unflatten(treedef, leaves)
+    return restored, meta
+
+
+def list_steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_"):
+            out.append(int(name.split("_")[1]))
+    return sorted(out)
+
+
+def restore_latest(directory: str, tree_template: Any):
+    """(tree, meta) from the newest verifiable checkpoint, or (None, None).
+
+    Corrupt checkpoints are skipped (with a warning) — restart resilience.
+    """
+    for step in reversed(list_steps(directory)):
+        path = os.path.join(directory, f"step_{step:010d}")
+        try:
+            return _load_one(path, tree_template)
+        except Exception as e:  # noqa: BLE001 — any corruption -> try older
+            print(f"[checkpoint] skipping corrupt {path}: {e}")
+    return None, None
+
+
+def retain(directory: str, keep: int = 3) -> None:
+    """Delete all but the newest ``keep`` checkpoints."""
+    steps = list_steps(directory)
+    for step in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{step:010d}"), ignore_errors=True)

@@ -1,0 +1,83 @@
+"""Fault-tolerance beyond checkpoint/restart: crash-resilient execution
+and elastic re-meshing when the device pool changes size.
+
+At 1000+ nodes the failure model is: (a) preemption (SIGTERM, handled in
+train_loop.PreemptionGuard), (b) hard node loss mid-step (XLA raises —
+handled here by restore-and-retry), (c) degraded-but-alive stragglers
+(watchdog in train_loop; the synchronous-SPMD remedy is to restart the
+slow host, not to desynchronize), and (d) resume on a *different* device
+count — handled by ``elastic_remesh``: NamedSharding is recomputed from
+the live topology and checkpointed host arrays are device_put onto the
+new mesh (works because checkpoints are device-layout-agnostic numpy).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def run_with_retries(
+    fn: Callable[[], Any],
+    restore: Callable[[], None],
+    max_failures: int = 3,
+    backoff_s: float = 1.0,
+):
+    """Execute ``fn``; on failure call ``restore`` and retry.
+
+    ``fn`` is expected to be a resumable closure (e.g. a train() call that
+    restores from its own checkpoint dir), so a retry continues from the
+    last checkpoint rather than from scratch.
+    """
+    failures = 0
+    while True:
+        try:
+            return fn()
+        except KeyboardInterrupt:
+            raise
+        except Exception as e:  # noqa: BLE001 — any device/runtime fault
+            failures += 1
+            if failures > max_failures:
+                raise
+            print(f"[ft] failure {failures}/{max_failures}: {e!r}; restoring")
+            restore()
+            time.sleep(backoff_s * failures)
+
+
+def best_mesh_shape(n_devices: int, model_parallel: int) -> tuple[int, int]:
+    """(data, model) factorization for an arbitrary live device count.
+
+    Shrinks model parallelism if the pool no longer supports the requested
+    width — elasticity means the job keeps running at reduced size.
+    """
+    mp = min(model_parallel, n_devices)
+    while n_devices % mp:
+        mp -= 1
+    return n_devices // mp, mp
+
+
+def elastic_remesh(
+    host_state: Any,
+    spec_fn: Callable[[Any], P],
+    model_parallel: int = 1,
+    devices=None,
+):
+    """Build a mesh from the live device pool and shard host state onto it.
+
+    host_state: numpy pytree (e.g. from checkpoint.restore_latest).
+    spec_fn: leaf -> PartitionSpec (the same logical rules used at launch;
+    axes that no longer exist in the new mesh are dropped).
+    """
+    devices = devices if devices is not None else jax.devices()
+    dp, mp = best_mesh_shape(len(devices), model_parallel)
+    mesh = Mesh(np.asarray(devices).reshape(dp, mp), ("data", "model"))
+
+    def put(leaf):
+        spec = spec_fn(leaf)
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+
+    return mesh, jax.tree.map(put, host_state)

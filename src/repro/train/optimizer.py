@@ -1,0 +1,92 @@
+"""Optimizers + LR schedules, dependency-free (no optax in this image).
+
+AdamW with decoupled weight decay and global-norm clipping; schedules:
+linear-warmup cosine, constant, and WSD (warmup-stable-decay — the
+minicpm-2b schedule, arXiv:2404.06395).
+
+State is a params-shaped pytree, so it shards exactly like params under
+pjit (ZeRO-style optimizer sharding falls out of NamedSharding on the
+same axes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    schedule: str = "cosine"        # cosine | wsd | const
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_frac: float = 0.1         # WSD: final fraction of steps that decay
+    min_lr_ratio: float = 0.1
+
+
+def lr_at(step: jax.Array, cfg: OptConfig) -> jax.Array:
+    """Schedule value at ``step`` (traced-friendly)."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "const":
+        return cfg.lr * warm
+    if cfg.schedule == "cosine":
+        t = jnp.clip(
+            (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+            0.0, 1.0,
+        )
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+    if cfg.schedule == "wsd":
+        decay_steps = int(cfg.total_steps * cfg.decay_frac)
+        stable_end = cfg.total_steps - decay_steps
+        t = jnp.clip((step - stable_end) / max(decay_steps, 1), 0.0, 1.0)
+        decay = 1.0 - (1.0 - cfg.min_lr_ratio) * t
+        return cfg.lr * warm * jnp.where(step < stable_end, 1.0, decay)
+    raise ValueError(cfg.schedule)
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return {
+        "mu": zeros,
+        "nu": jax.tree.map(jnp.zeros_like, zeros),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree))
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def adamw_update(grads, state, params, cfg: OptConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g, state["mu"], grads)
+    nu = jax.tree.map(lambda n, g: cfg.b2 * n + (1 - cfg.b2) * g * g, state["nu"], grads)
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+    lr = lr_at(step, cfg)
+
+    def upd(p, m, n):
+        update = (m / bc1) / (jnp.sqrt(n / bc2) + cfg.eps)
+        update = update + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, {"mu": mu, "nu": nu, "step": step}, {"grad_norm": gn, "lr": lr}

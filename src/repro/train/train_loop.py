@@ -1,0 +1,170 @@
+"""Training loop: jitted step factory (grad accumulation via scan),
+periodic atomic checkpointing, automatic resume, preemption handling, and
+a step-time straggler watchdog.
+
+The loop is loss-function-agnostic: every model family plugs in a
+``loss_fn(params, batch) -> (loss, aux)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from functools import partial
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import checkpoint as CKPT
+from repro.train import optimizer as OPT
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep_ckpts: int = 3
+    log_every: int = 10
+    microbatches: int = 1             # grad accumulation factor
+    straggler_factor: float = 3.0     # watchdog: step > factor * median -> warn
+
+
+def make_train_step(
+    loss_fn: Callable,
+    opt_cfg: OPT.OptConfig,
+    microbatches: int = 1,
+    donate: bool = True,
+):
+    """Build the jitted (params, opt_state, batch) -> (params, state, metrics).
+
+    With microbatches > 1, the leading batch axis is split and gradients
+    are accumulated with a ``lax.scan`` — same memory as one microbatch.
+    """
+
+    def grads_of(params, batch):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, aux, grads
+
+    def step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, aux, grads = grads_of(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:]),
+                batch,
+            )
+
+            def accum(carry, mb):
+                loss_c, grads_c = carry
+                loss_i, _, grads_i = grads_of(params, mb)
+                return (
+                    loss_c + loss_i / microbatches,
+                    jax.tree.map(lambda a, b: a + b / microbatches, grads_c, grads_i),
+                ), None
+
+            zero_grads = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss, grads), _ = jax.lax.scan(accum, (jnp.zeros(()), zero_grads), micro)
+            aux = {}
+        params, opt_state, om = OPT.adamw_update(grads, opt_state, params, opt_cfg)
+        metrics = {"loss": loss, **om}
+        return params, opt_state, metrics
+
+    return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+
+class PreemptionGuard:
+    """SIGTERM/SIGINT -> set a flag; the loop checkpoints and exits cleanly.
+
+    This is the cooperative-preemption contract on managed clusters
+    (maintenance events deliver SIGTERM with a grace window).
+    """
+
+    def __init__(self):
+        self.preempted = False
+        self._installed = False
+
+    def install(self):
+        if self._installed:
+            return
+        try:
+            signal.signal(signal.SIGTERM, self._handler)
+            self._installed = True
+        except ValueError:
+            pass  # non-main thread (tests) — watchdog only
+
+    def _handler(self, signum, frame):  # noqa: ARG002
+        self.preempted = True
+
+
+def train(
+    loss_fn: Callable,
+    params: Any,
+    data_iter: Iterator,
+    opt_cfg: OPT.OptConfig,
+    cfg: TrainConfig,
+    opt_state: Any = None,
+    start_step: int = 0,
+    hooks: Optional[list[Callable[[int, dict], None]]] = None,
+):
+    """Run the loop; returns (params, opt_state, history).
+
+    Resume: if ``cfg.ckpt_dir`` holds a valid checkpoint, training state
+    (params + optimizer + step) restores from it and the data iterator is
+    expected to be positioned via its own ``start_step`` (see
+    data.*.batch_iterator) — together they make restarts exact.
+    """
+    if opt_state is None:
+        opt_state = OPT.adamw_init(params)
+
+    step0 = start_step
+    if cfg.ckpt_dir:
+        restored, meta = CKPT.restore_latest(
+            cfg.ckpt_dir, {"params": params, "opt": opt_state}
+        )
+        if restored is not None:
+            params = restored["params"]
+            opt_state = restored["opt"]
+            step0 = meta["step"]
+            print(f"[train] resumed from step {step0}")
+
+    train_step = make_train_step(loss_fn, opt_cfg, cfg.microbatches)
+    guard = PreemptionGuard()
+    guard.install()
+
+    history = []
+    step_times = []
+    for step in range(step0, cfg.steps):
+        t0 = time.perf_counter()
+        batch = next(data_iter)
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        dt = time.perf_counter() - t0
+        step_times.append(dt)
+
+        # straggler watchdog: flag anomalously slow steps
+        if len(step_times) >= 8:
+            med = sorted(step_times[-32:])[len(step_times[-32:]) // 2]
+            if dt > cfg.straggler_factor * med:
+                print(f"[train] straggler step {step}: {dt:.3f}s vs median {med:.3f}s")
+
+        if step % cfg.log_every == 0 or step == cfg.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": step, **m, "sec": dt})
+            for h in hooks or []:
+                h(step, m)
+
+        must_ckpt = cfg.ckpt_dir and (
+            (step + 1) % cfg.ckpt_every == 0 or step == cfg.steps - 1 or guard.preempted
+        )
+        if must_ckpt:
+            CKPT.save(cfg.ckpt_dir, step + 1, {"params": params, "opt": opt_state})
+            CKPT.retain(cfg.ckpt_dir, cfg.keep_ckpts)
+        if guard.preempted:
+            print(f"[train] preempted at step {step}; checkpointed and exiting")
+            break
+
+    return params, opt_state, history

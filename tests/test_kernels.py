@@ -1,0 +1,104 @@
+"""Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracles.
+
+Kernels run in interpret mode on CPU (the TPU lowering is exercised
+structurally by the dry-run).  Integer-output kernels must match the oracle
+EXACTLY — there is no tolerance to hide behind.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels import ref
+
+
+def _codes(key, shape, bits=8):
+    lo = -(2 ** (bits - 1))
+    hi = 2 ** (bits - 1)
+    return jax.random.randint(key, shape, lo, hi, dtype=jnp.int8)
+
+
+QN_SHAPES = [
+    (1, 1, 8),        # degenerate
+    (1, 1000, 64),    # single query (retrieval_cand shape family)
+    (7, 333, 100),    # ragged everything (glove100 d)
+    (37, 1000, 96),
+    (128, 512, 128),  # exactly one tile (SIFT d)
+    (130, 700, 128),  # just over one tile
+    (256, 2048, 256), # multiple tiles (product-embedding d)
+]
+
+
+@pytest.mark.parametrize("q_rows,n_rows,d", QN_SHAPES)
+def test_qmip_matches_ref(q_rows, n_rows, d):
+    kq, kx = jax.random.split(jax.random.PRNGKey(q_rows * 7 + n_rows))
+    q = _codes(kq, (q_rows, d))
+    x = _codes(kx, (n_rows, d))
+    got = ops.qmip(q, x)
+    want = ref.qmip_ref(q, x)
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("q_rows,n_rows,d", QN_SHAPES)
+def test_ql2_matches_ref(q_rows, n_rows, d):
+    kq, kx = jax.random.split(jax.random.PRNGKey(q_rows * 13 + n_rows))
+    q = _codes(kq, (q_rows, d))
+    x = _codes(kx, (n_rows, d))
+    got = ops.ql2(q, x)
+    want = ref.ql2_ref(q, x)
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n_rows,d", [(1, 8), (9, 100), (1024, 128), (1500, 256)])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_quantize_matches_ref(n_rows, d, bits):
+    key = jax.random.PRNGKey(n_rows + bits)
+    x = jax.random.normal(key, (n_rows, d)) * 0.05
+    lo = jnp.full((d,), -0.04)
+    hi = jnp.full((d,), 0.06)
+    zero = jnp.full((d,), 0.01)
+    got = ops.quantize(x, lo, hi, zero, bits=bits)
+    want = ref.quantize_ref(x, lo, hi, zero, bits=bits)
+    assert got.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_quantize_clamps_to_storable_range():
+    x = jnp.array([[-1e9, 1e9, 0.0, 0.05]], dtype=jnp.float32)
+    lo = jnp.full((4,), -0.05)
+    hi = jnp.full((4,), 0.05)
+    zero = jnp.zeros((4,))
+    got = np.asarray(ops.quantize(x, lo, hi, zero, bits=8))[0]
+    assert got[0] == -128       # below range -> -2^(B-1)
+    assert got[1] == 127        # above range -> clipped +2^(B-1)
+    assert got[2] == 0
+    assert got[3] == 127        # S_e maps to the clipped top code
+
+
+def test_qmip_against_core_distances():
+    # The kernel and the core library (XLA path) must agree bit-for-bit.
+    from repro.core import distances as D
+
+    kq, kx = jax.random.split(jax.random.PRNGKey(3))
+    q = _codes(kq, (16, 64))
+    x = _codes(kx, (200, 64))
+    np.testing.assert_array_equal(
+        np.asarray(ops.qmip(q, x)), np.asarray(D.qip_scores(q, x))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(ops.ql2(q, x)), np.asarray(D.ql2_scores(q, x))
+    )
+
+
+def test_int32_accumulation_no_overflow_at_max_codes():
+    # worst case: all codes at +-128/127, d=2048 -> |dot| <= 2048*128*128 < 2^31
+    d = 2048
+    q = jnp.full((8, d), -128, jnp.int8)
+    x = jnp.full((16, d), -128, jnp.int8)
+    got = np.asarray(ops.qmip(q, x))
+    assert (got == d * 128 * 128).all()
+    assert got.dtype == np.int32

@@ -1,0 +1,119 @@
+"""Property-based tests (hypothesis) for the quantization family's
+invariants — Definition 2 and the structural guarantees of Eq. 1."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant as Qz
+from repro.core import distances as D
+from repro.core import preserve
+from repro.core.stats import corpus_stats, merge_stats
+
+
+def _corpus(seed, n, d, scale):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n, d)) * scale
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    n=st.integers(16, 128),
+    d=st.integers(2, 32),
+    bits=st.sampled_from([4, 8]),
+    scheme=st.sampled_from(["gaussian", "absmax", "minmax", "global_minmax"]),
+)
+def test_codes_within_storable_range(seed, n, d, bits, scheme):
+    x = _corpus(seed, n, d, 0.1)
+    params = Qz.learn_params(x, bits=bits, scheme=scheme, sigmas=2.0)
+    codes = np.asarray(Qz.quantize(x, params))
+    assert codes.min() >= -(2 ** (bits - 1))
+    assert codes.max() <= 2 ** (bits - 1) - 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), d=st.integers(2, 24))
+def test_monotonic_1d_order_preservation(seed, d):
+    """Eq. 1 is monotone per dimension: x <= y implies Q(x) <= Q(y)."""
+    x = _corpus(seed, 64, d, 0.2)
+    params = Qz.learn_params(x, bits=8, scheme="gaussian", sigmas=2.0)
+    sorted_col = jnp.sort(x[:, 0])
+    col = jnp.broadcast_to(sorted_col[:, None], (64, d))
+    codes = np.asarray(Qz.quantize(col, params))[:, 0]
+    assert (np.diff(codes) >= 0).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    metric=st.sampled_from(["ip", "l2", "angular"]),
+)
+def test_definition2_on_narrow_band(seed, metric):
+    """Strict-order agreement stays high on Fig-1-style corpora."""
+    corpus = _corpus(seed, 256, 16, 0.05)
+    queries = _corpus(seed + 1, 32, 16, 0.05)
+    params = Qz.learn_params(corpus, bits=8, scheme="gaussian", sigmas=3.0)
+    agree = float(
+        preserve.order_agreement(corpus, queries, params, metric, n_triples=512)
+    )
+    assert agree > 0.9, f"{metric}: {agree}"
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_agreement_improves_with_margin(seed):
+    """The paper's aliasing claim: near-ties account for the disagreements,
+    so restricting to larger original gaps raises agreement."""
+    corpus = _corpus(seed, 256, 16, 0.05)
+    queries = _corpus(seed + 1, 16, 16, 0.05)
+    params = Qz.learn_params(corpus, bits=4, scheme="gaussian", sigmas=2.0)
+    base = float(preserve.order_agreement(corpus, queries, params, "ip", 512))
+    wide = float(
+        preserve.order_agreement(
+            corpus, queries, params, "ip", 512, margin_quantile=0.5
+        )
+    )
+    assert wide >= base - 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    n=st.integers(8, 200),
+    split=st.floats(0.1, 0.9),
+)
+def test_streaming_stats_merge_associative(seed, n, split):
+    x = _corpus(seed, max(n, 8), 8, 1.0)
+    k = max(1, min(int(n * split), x.shape[0] - 1))
+    merged = merge_stats(corpus_stats(x[:k]), corpus_stats(x[k:]))
+    full = corpus_stats(x)
+    np.testing.assert_allclose(np.asarray(merged.mean), np.asarray(full.mean),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(merged.std), np.asarray(full.std),
+                               rtol=1e-3, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(merged.amax), np.asarray(full.amax))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), bits=st.sampled_from([4, 8]))
+def test_global_scheme_is_single_affine_map(seed, bits):
+    """GLOBAL_* schemes apply one affine map to every dim, so quantized L2
+    ordering equals exact L2 ordering up to rounding ties."""
+    x = _corpus(seed, 128, 8, 1.0) * jnp.arange(1, 9)[None, :]  # uneven dims
+    params = Qz.learn_params(x, bits=bits, scheme="global_minmax")
+    span = np.asarray(params.hi - params.lo)
+    assert np.allclose(span, span[0])
+    zero = np.asarray(params.zero)
+    assert np.allclose(zero, zero[0])
+
+
+def test_quantized_distances_exact_int32():
+    """Integer-domain distances are exact (no float rounding)."""
+    codes_a = jnp.array([[1, -2, 3], [120, -120, 7]], jnp.int8)
+    codes_b = jnp.array([[4, 5, -6], [-1, 0, 2]], jnp.int8)
+    ip = np.asarray(D.qip_scores(codes_a, codes_b))
+    assert ip[0, 0] == 1 * 4 + (-2) * 5 + 3 * (-6)
+    assert ip[1, 0] == 120 * 4 + (-120) * 5 + 7 * (-6)
+    l2 = np.asarray(D.ql2_scores(codes_a, codes_b))
+    assert l2[0, 0] == -((1 - 4) ** 2 + (-2 - 5) ** 2 + (3 + 6) ** 2)

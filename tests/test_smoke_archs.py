@@ -1,0 +1,184 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, assert output shapes + finite values (no NaNs)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get, ASSIGNED
+from repro.data import graph_data, lm_data, recsys_data
+
+LM_ARCHS = [a for a in ASSIGNED if get(a).FAMILY == "lm"]
+RECSYS_ARCHS = [a for a in ASSIGNED if get(a).FAMILY == "recsys"]
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke(arch):
+    from repro.models import transformer as TF
+
+    cfg = get(arch).reduced_config()
+    params = TF.init_params(jax.random.PRNGKey(0), cfg)
+    batch = lm_data.lm_batch(jax.random.PRNGKey(1), 2, 32, cfg.vocab)
+
+    logits, aux = TF.forward(params, batch["tokens"], cfg)
+    assert logits.shape == (2, 32, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all(), "NaN/inf in logits"
+
+    loss, _ = TF.lm_loss(params, batch, cfg)
+    assert np.isfinite(float(loss))
+    # one train step
+    grads = jax.grad(lambda p: TF.lm_loss(p, batch, cfg)[0])(params)
+    gn = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads))
+    )
+    assert np.isfinite(float(gn)) and float(gn) > 0
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_decode_smoke(arch):
+    from repro.models import transformer as TF
+
+    cfg = get(arch).reduced_config()
+    params = TF.init_params(jax.random.PRNGKey(0), cfg)
+    toks = lm_data.lm_batch(jax.random.PRNGKey(1), 2, 16, cfg.vocab)["tokens"]
+    _, caches = TF.prefill(params, toks[:, :8], cfg)
+    kc, vc = TF.make_cache(cfg, 2, 16, dtype=jnp.float32)
+    kc = TF.write_prefix(kc, caches[0])
+    vc = TF.write_prefix(vc, caches[1])
+    logits, _ = TF.decode_step(params, (kc, vc), toks[:, 8:9], jnp.int32(8), cfg)
+    assert logits.shape == (2, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits[:, : cfg.vocab])).all()
+
+
+@pytest.mark.parametrize("arch", RECSYS_ARCHS)
+def test_recsys_smoke(arch):
+    from repro.models.recsys import models as RM
+
+    cfg = get(arch).reduced_config()
+    params = RM.init_params(jax.random.PRNGKey(0), cfg)
+    batch = recsys_data.ctr_batch(
+        jax.random.PRNGKey(1), 16, cfg.n_dense, cfg.vocab_sizes, seq_len=cfg.seq_len
+    )
+    logit = RM.forward(params, batch, cfg)
+    assert logit.shape == (16,)
+    assert np.isfinite(np.asarray(logit)).all()
+
+    loss, _ = RM.bce_loss(params, batch, cfg)
+    assert np.isfinite(float(loss))
+    grads = jax.grad(lambda p: RM.bce_loss(p, batch, cfg)[0])(params)
+    assert all(np.isfinite(np.asarray(g)).all() for g in jax.tree.leaves(grads))
+
+    probs = RM.serve(params, batch, cfg)
+    assert ((np.asarray(probs) >= 0) & (np.asarray(probs) <= 1)).all()
+
+
+def test_schnet_molecule_smoke():
+    from repro.models.gnn import schnet as S
+
+    cfg = get("schnet").reduced_config("molecule")
+    params = S.init_params(jax.random.PRNGKey(0), cfg)
+    mol = graph_data.random_molecules(4, 6, 12)
+    gids = jnp.repeat(jnp.arange(4), 6)
+    loss = S.energy_loss(params, cfg, mol, gids, 4)
+    assert np.isfinite(float(loss))
+    grads = jax.grad(lambda p: S.energy_loss(p, cfg, mol, gids, 4))(params)
+    assert all(np.isfinite(np.asarray(g)).all() for g in jax.tree.leaves(grads))
+
+
+def test_schnet_feature_graph_smoke():
+    from repro.models.gnn import schnet as S
+
+    cfg = get("schnet").reduced_config("full_graph_sm")
+    params = S.init_params(jax.random.PRNGKey(0), cfg)
+    g = graph_data.random_graph(64, 256, 24)
+    g.labels = jnp.clip(g.labels, 0, cfg.n_classes - 1)
+    loss = S.node_class_loss(params, cfg, g)
+    assert np.isfinite(float(loss))
+    out = S.forward(
+        params, cfg, senders=g.senders, receivers=g.receivers,
+        edge_mask=g.edge_mask, n_nodes=g.n_nodes, node_feat=g.node_feat,
+    )
+    assert out.shape == (64, cfg.n_classes)
+
+
+def test_schnet_minibatch_sampler_smoke():
+    """The minibatch_lg regime: sampler -> padded subgraph -> train step."""
+    from repro.models.gnn import schnet as S
+
+    cfg = get("schnet").reduced_config("full_graph_sm")
+    g = graph_data.random_graph(500, 4000, 24)
+    sampler = graph_data.NeighborSampler(
+        np.asarray(g.senders), np.asarray(g.receivers), 500
+    )
+    nodes, layers = sampler.sample(
+        np.arange(8), fanouts=(5, 3), rng=np.random.default_rng(0)
+    )
+    # flatten sampled layers into one edge list over local node ids
+    s = np.concatenate([l[0] for l in layers])
+    r = np.concatenate([l[1] for l in layers])
+    m = np.concatenate([l[2] for l in layers])
+    params = S.init_params(jax.random.PRNGKey(0), cfg)
+    out = S.forward(
+        params, cfg,
+        senders=jnp.asarray(s), receivers=jnp.asarray(r),
+        edge_mask=jnp.asarray(m), n_nodes=len(nodes),
+        node_feat=g.node_feat[jnp.asarray(nodes)],
+    )
+    assert out.shape == (len(nodes), cfg.n_classes)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_registry_covers_assignment():
+    assert len(ASSIGNED) == 10
+    from repro.configs import cells
+
+    cs = cells()
+    assert len(cs) == 40, f"expected 40 cells, got {len(cs)}"
+    skips = [(a, s) for a, s, reason in cs if reason]
+    assert ("gemma-2b", "long_500k") in skips
+    assert ("minicpm-2b", "long_500k") in skips
+    assert len(skips) == 2
+
+
+def test_exact_assigned_hyperparams():
+    """Full configs carry the exact published hyperparameters."""
+    from repro.models.transformer import LMConfig
+
+    g2b: LMConfig = get("gemma-2b").config()
+    assert (g2b.n_layers, g2b.d_model, g2b.n_heads, g2b.n_kv) == (18, 2048, 8, 1)
+    assert (g2b.head_dim, g2b.d_ff, g2b.vocab) == (256, 16384, 256000)
+
+    g9: LMConfig = get("gemma2-9b").config()
+    assert (g9.n_layers, g9.d_model, g9.n_heads, g9.n_kv) == (42, 3584, 16, 8)
+    assert (g9.d_ff, g9.vocab, g9.attn_softcap) == (14336, 256000, 50.0)
+    assert g9.layer_pattern == "lg"
+
+    mc: LMConfig = get("minicpm-2b").config()
+    assert (mc.n_layers, mc.d_model, mc.n_heads, mc.n_kv) == (40, 2304, 36, 36)
+    assert (mc.d_ff, mc.vocab) == (5760, 122753)
+
+    for arch, n_exp in [("llama4-scout-17b-16e", 16), ("llama4-maverick-400b-17b", 128)]:
+        l4: LMConfig = get(arch).config()
+        assert (l4.n_layers, l4.d_model, l4.n_heads, l4.n_kv) == (48, 5120, 40, 8)
+        assert (l4.d_ff, l4.vocab) == (8192, 202048)
+        assert l4.moe.n_experts == n_exp and l4.moe.top_k == 1
+
+    sn = get("schnet").config("molecule")
+    assert (sn.n_interactions, sn.d_hidden, sn.n_rbf, sn.cutoff) == (3, 64, 300, 10.0)
+
+    ai = get("autoint").config()
+    assert (ai.n_sparse, ai.embed_dim, ai.n_attn_layers, ai.n_heads, ai.d_attn) == (
+        39, 16, 3, 2, 32,
+    )
+
+    dl = get("dlrm-mlperf").config()
+    assert (dl.n_dense, dl.n_sparse, dl.embed_dim) == (13, 26, 128)
+    assert dl.bot_mlp == (512, 256, 128) and dl.top_mlp == (1024, 1024, 512, 256, 1)
+
+    di = get("dien").config()
+    assert (di.embed_dim, di.seq_len, di.gru_dim, di.mlp) == (18, 100, 108, (200, 80))
+
+    dc = get("dcn-v2").config()
+    assert (dc.n_dense, dc.n_sparse, dc.embed_dim, dc.n_cross_layers) == (13, 26, 16, 3)
+    assert dc.mlp == (1024, 1024, 512)

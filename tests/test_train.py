@@ -1,0 +1,158 @@
+"""Training runtime tests: optimizer math, schedules, checkpoint
+round-trip + corruption resilience, resume semantics, microbatch
+equivalence, retries and elastic re-mesh."""
+
+import itertools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import lm_data
+from repro.models import transformer as TF
+from repro.train import (
+    OptConfig,
+    TrainConfig,
+    adamw_init,
+    adamw_update,
+    checkpoint as CKPT,
+    lr_at,
+    make_train_step,
+    train,
+)
+from repro.train.fault_tolerance import best_mesh_shape, elastic_remesh, run_with_retries
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = TF.LMConfig(
+        name="t", n_layers=2, d_model=32, n_heads=2, n_kv=1, head_dim=16,
+        d_ff=64, vocab=128, dtype="float32", block_q=16, block_kv=16, remat=False,
+    )
+    params = TF.init_params(jax.random.PRNGKey(0), cfg)
+    batch = lm_data.lm_batch(jax.random.PRNGKey(7), 8, 16, 128)
+    return cfg, params, batch
+
+
+def test_adamw_descends_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = adamw_init(params)
+    cfg = OptConfig(lr=0.1, weight_decay=0.0, warmup_steps=0, schedule="const")
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _m = adamw_update(grads, state, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_schedules():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=100, schedule="wsd",
+                    decay_frac=0.2, min_lr_ratio=0.1)
+    assert float(lr_at(0, cfg)) == 0.0
+    assert float(lr_at(10, cfg)) == pytest.approx(1.0)
+    assert float(lr_at(50, cfg)) == pytest.approx(1.0)     # stable phase
+    assert float(lr_at(99, cfg)) < 0.2                      # decay phase
+    ccfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=100, schedule="cosine")
+    assert float(lr_at(99, ccfg)) <= float(lr_at(50, ccfg))
+
+
+def test_grad_clipping():
+    params = {"w": jnp.zeros(3)}
+    cfg = OptConfig(lr=0.0, clip_norm=1.0, warmup_steps=0)
+    _p, _s, m = adamw_update({"w": jnp.full(3, 100.0)}, adamw_init(params), params, cfg)
+    assert float(m["grad_norm"]) > 100  # reported pre-clip
+
+
+def test_checkpoint_roundtrip(tmp_path, tiny):
+    _cfg, params, _b = tiny
+    tree = {"params": params, "step": jnp.int32(7)}
+    CKPT.save(str(tmp_path), 7, tree)
+    restored, meta = CKPT.restore_latest(str(tmp_path), tree)
+    assert meta["step"] == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_skips_corrupt(tmp_path, tiny):
+    _cfg, params, _b = tiny
+    tree = {"p": params}
+    CKPT.save(str(tmp_path), 1, tree)
+    CKPT.save(str(tmp_path), 2, tree)
+    # corrupt the newest
+    newest = os.path.join(str(tmp_path), "step_0000000002", "arrays.npz")
+    with open(newest, "r+b") as f:
+        f.seek(200)
+        f.write(b"\xde\xad\xbe\xef")
+    restored, meta = CKPT.restore_latest(str(tmp_path), tree)
+    assert meta["step"] == 1  # fell back past the corrupt one
+
+
+def test_checkpoint_retain(tmp_path, tiny):
+    _cfg, params, _b = tiny
+    for s in range(5):
+        CKPT.save(str(tmp_path), s, {"p": params})
+    CKPT.retain(str(tmp_path), keep=2)
+    assert CKPT.list_steps(str(tmp_path)) == [3, 4]
+
+
+def test_train_resume_continues(tmp_path, tiny):
+    cfg, params, batch = tiny
+    # train() donates its buffers; keep the shared fixture intact
+    params = jax.tree.map(jnp.array, params)
+    loss_fn = lambda p, b: TF.lm_loss(p, b, cfg)
+    opt = OptConfig(lr=1e-3, warmup_steps=2, total_steps=20)
+    data = itertools.repeat(batch)
+    _p, _o, h1 = train(loss_fn, params, data, opt,
+                       TrainConfig(steps=10, ckpt_dir=str(tmp_path), ckpt_every=5,
+                                   log_every=2))
+    _p, _o, h2 = train(loss_fn, params, itertools.repeat(batch), opt,
+                       TrainConfig(steps=16, ckpt_dir=str(tmp_path), ckpt_every=5,
+                                   log_every=2))
+    assert h2[0]["step"] == 10  # resumed, not restarted
+
+
+def test_microbatch_equivalence(tiny):
+    cfg, params, batch = tiny
+    loss_fn = lambda p, b: TF.lm_loss(p, b, cfg)
+    opt = OptConfig(lr=1e-3, warmup_steps=0)
+    s1 = make_train_step(loss_fn, opt, microbatches=1, donate=False)
+    s4 = make_train_step(loss_fn, opt, microbatches=4, donate=False)
+    p1, _o, _m = s1(params, adamw_init(params), batch)
+    p4, _o, _m = s4(params, adamw_init(params), batch)
+    diff = max(
+        jax.tree.leaves(jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()), p1, p4))
+    )
+    assert diff < 1e-4
+
+
+def test_run_with_retries():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("node died")
+        return "ok"
+
+    assert run_with_retries(flaky, restore=lambda: None, backoff_s=0.0) == "ok"
+    with pytest.raises(RuntimeError):
+        run_with_retries(
+            lambda: (_ for _ in ()).throw(RuntimeError("always")),
+            restore=lambda: None, max_failures=1, backoff_s=0.0,
+        )
+
+
+def test_elastic_remesh_factorizations():
+    assert best_mesh_shape(512, 16) == (32, 16)
+    assert best_mesh_shape(448, 16) == (28, 16)
+    assert best_mesh_shape(100, 16) == (10, 10)
+    assert best_mesh_shape(7, 16) == (1, 7)
+
+
+def test_elastic_remesh_resharding():
+    from jax.sharding import PartitionSpec as P
+
+    state = {"w": np.ones((8, 4), np.float32)}
+    mesh, sharded = elastic_remesh(state, lambda leaf: P(), model_parallel=1)
+    np.testing.assert_array_equal(np.asarray(sharded["w"]), state["w"])
