@@ -1,15 +1,17 @@
 """Paper Figure 2: QPS and recall versus the EFS search parameter, fp32 vs
 int8 HNSW.  The paper's claims under test: int8 QPS > fp32 QPS at matched
-EFS, recall gap ~2%, and recall increasing in EFS for both arms."""
+EFS, recall gap ~2%, and recall increasing in EFS for both arms.
+
+Both arms are built from factory strings through the unified registry API.
+"""
 
 from __future__ import annotations
 
-import jax
-
 from benchmarks.common import emit, sized, timeit
+from repro.core.preserve import recall_at_k
 from repro.data import synthetic
 from repro.data.groundtruth import exact_topk
-from repro.knn import HNSWIndex
+from repro.knn import SearchParams, make_index
 
 
 def main() -> None:
@@ -20,17 +22,16 @@ def main() -> None:
     _gt_s, gt_i = exact_topk(corpus, queries, k, metric)
 
     builds = {
-        "fp32": HNSWIndex.build(corpus, m=8, ef_construction=80, metric=metric,
-                                batch_size=256),
-        "int8": HNSWIndex.build(corpus, m=8, ef_construction=80, metric=metric,
-                                quantized=True, sigmas=3.0, batch_size=256),
+        arm: make_index(factory, corpus, metric=metric,
+                        ef_construction=80, batch_size=256)
+        for arm, factory in (("fp32", "hnsw8"), ("int8", "hnsw8,lpq8@gaussian:3"))
     }
-    from repro.core.preserve import recall_at_k
 
     for efs in (40, 80, 160):
+        sp = SearchParams(ef_search=efs)
         for arm, idx in builds.items():
-            sec = timeit(lambda i=idx, e=efs: i.search(queries, k, ef_search=e))
-            _s, ids = idx.search(queries, k, ef_search=efs)
+            sec = timeit(lambda i=idx, p=sp: i.search(queries, k, p))
+            ids = idx.search(queries, k, sp).ids
             rec = float(recall_at_k(gt_i, ids))
             qps = queries.shape[0] / sec
             emit(f"fig2/{arm}_efs{efs}", sec, f"qps={qps:.1f} recall={rec:.4f}")

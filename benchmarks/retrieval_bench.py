@@ -1,6 +1,8 @@
 """Quantized retrieval scoring (the recsys retrieval_cand cell, reduced):
 fp32 vs int8 candidate scoring parity + memory — the paper's technique on
-its most direct production surface."""
+its most direct production surface.  A third arm serves the same corpus
+through the registry's flat index (factory string) to keep the serving
+path and the raw scoring path honest against each other."""
 
 from __future__ import annotations
 
@@ -8,6 +10,7 @@ import jax
 
 from benchmarks.common import emit, sized, timeit
 from repro.core.preserve import recall_at_k
+from repro.knn import make_index
 from repro.models.recsys import embedding as E
 from repro.models.recsys import retrieval as RT
 
@@ -31,6 +34,16 @@ def main() -> None:
     emit(
         "retrieval/int8", sec_q8,
         f"recall={rec:.4f} mem={qt.memory_bytes()}B ratio={qt.memory_bytes()/mem_fp:.3f}",
+    )
+
+    # the same corpus through the unified index API (registry serving path)
+    idx = make_index("flat,lpq8@absmax", cands)
+    sec_idx = timeit(lambda: idx.search(queries, k))
+    i_idx = idx.search(queries, k).ids
+    rec_idx = float(recall_at_k(i_fp, i_idx))
+    emit(
+        "retrieval/flat_factory", sec_idx,
+        f"recall={rec_idx:.4f} mem={idx.memory_bytes()}B",
     )
 
 

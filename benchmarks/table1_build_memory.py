@@ -1,7 +1,10 @@
 """Paper Table 1: HNSW build time and memory, fp32 vs int8, over the
 (EFC, M) grid.  Reduced scale (PRODUCT60M -> synthetic narrow-band corpus);
 the paper's claims under test: int8 memory ~ 0.45x fp32 (incl. graph
-overhead) and build-time reduction from cheaper distance evaluations."""
+overhead) and build-time reduction from cheaper distance evaluations.
+
+Arms are factory strings (``hnsw<M>`` vs ``hnsw<M>,lpq8``) built through
+the registry."""
 
 from __future__ import annotations
 
@@ -9,7 +12,7 @@ import jax
 
 from benchmarks.common import emit, sized
 from repro.data import synthetic
-from repro.knn import HNSWIndex
+from repro.knn import make_index
 
 
 def main() -> None:
@@ -18,13 +21,13 @@ def main() -> None:
 
     grid = [(40, 8), (80, 8)]  # (EFC, M) — reduced grid of §5.2's 300..700 x {32,48}
     for efc, m in grid:
-        idx_fp = HNSWIndex.build(
-            corpus, m=m, ef_construction=efc, metric=metric,
-            batch_size=256, key=jax.random.PRNGKey(0),
+        idx_fp = make_index(
+            f"hnsw{m}", corpus, metric=metric,
+            ef_construction=efc, batch_size=256, key=jax.random.PRNGKey(0),
         )
-        idx_q8 = HNSWIndex.build(
-            corpus, m=m, ef_construction=efc, metric=metric,
-            quantized=True, sigmas=3.0, batch_size=256, key=jax.random.PRNGKey(0),
+        idx_q8 = make_index(
+            f"hnsw{m},lpq8@gaussian:3", corpus, metric=metric,
+            ef_construction=efc, batch_size=256, key=jax.random.PRNGKey(0),
         )
         mem_fp = idx_fp.memory_bytes()
         mem_q8 = idx_q8.memory_bytes()

@@ -1,32 +1,38 @@
 """Paper Table 2: FAISS-style exhaustive search recall@100, fp32 vs int8,
 on SIFT (L2) / Glove100 (angular) / PRODUCT (IP).  The claims under test:
-recall drops of ~0.97/0.94/0.98 respectively at int8."""
+recall drops of ~0.97/0.94/0.98 respectively at int8.
+
+Per-dataset quantization schemes are carried in the factory string's
+quant fragment (``lpq8@<scheme>[:<sigmas>]``)."""
 
 from __future__ import annotations
 
 from benchmarks.common import emit, sized, timeit
 from repro.core.preserve import recall_at_k
 from repro.data import synthetic
-from repro.knn import FlatIndex
+from repro.knn import make_index
+
+FACTORIES = {
+    "sift": "flat,lpq8@global_minmax",
+    "glove": "flat,lpq8@global_absmax",
+    "product": "flat,lpq8@gaussian:3",
+}
 
 
 def main() -> None:
     k = 100
-    schemes = {"sift": ("global_minmax", 1.0), "glove": ("global_absmax", 1.0),
-               "product": ("gaussian", 3.0)}
-    for name in ("sift", "glove", "product"):
-        scheme, sigmas = schemes[name]
+    for name, factory in FACTORIES.items():
         n = sized(8000)
         corpus, queries, metric = synthetic.load(name, n, 128)
         queries = queries[:128]
 
-        idx_fp = FlatIndex.build(corpus, metric=metric)
-        idx_q8 = FlatIndex.build(corpus, metric=metric, quantized=True, scheme=scheme, sigmas=sigmas)
+        idx_fp = make_index("flat", corpus, metric=metric)
+        idx_q8 = make_index(factory, corpus, metric=metric)
 
-        _s, gt = idx_fp.search(queries, k)
+        gt = idx_fp.search(queries, k).ids
         sec_fp = timeit(lambda: idx_fp.search(queries, k))
         sec_q8 = timeit(lambda: idx_q8.search(queries, k))
-        _s, ids = idx_q8.search(queries, k)
+        ids = idx_q8.search(queries, k).ids
         rec = float(recall_at_k(gt, ids))
         ratio = idx_q8.memory_bytes() / idx_fp.memory_bytes()
         emit(f"table2/{name}_fp32", sec_fp, "recall=1.0000")

@@ -1,7 +1,9 @@
 """Paper Table 3: NGT (neighborhood graph + tree) recall@100, fp32 vs
 int8 — via the NGT-equivalent GraphIndex (kNN graph + centroid seeding;
 DESIGN.md §7).  Claims under test: small (2-6%) recall drop at int8 with
-memory/runtime reduction."""
+memory/runtime reduction.
+
+Arms are registry factory strings: ``graph24`` vs ``graph24,lpq8@...``."""
 
 from __future__ import annotations
 
@@ -9,27 +11,30 @@ from benchmarks.common import emit, sized, timeit
 from repro.core.preserve import recall_at_k
 from repro.data import synthetic
 from repro.data.groundtruth import exact_topk
-from repro.knn import GraphIndex
+from repro.knn import SearchParams, make_index
+
+QUANT_FRAGMENT = {
+    "sift": "lpq8@global_minmax",
+    "glove": "lpq8@global_absmax",
+    "product": "lpq8@gaussian:3",
+}
 
 
 def main() -> None:
     k = 10
-    schemes = {"sift": ("global_minmax", 1.0), "glove": ("global_absmax", 1.0),
-               "product": ("gaussian", 3.0)}
-    for name in ("sift", "glove", "product"):
-        scheme, sigmas = schemes[name]
+    for name, fragment in QUANT_FRAGMENT.items():
         n = sized(3000)
         corpus, queries, metric = synthetic.load(name, n, 64)
         queries = queries[:64]
         _s, gt = exact_topk(corpus, queries, k, metric)
 
-        idx_fp = GraphIndex.build(corpus, degree=24, metric=metric)
-        idx_q8 = GraphIndex.build(corpus, degree=24, metric=metric,
-                                  quantized=True, scheme=scheme, sigmas=sigmas)
+        idx_fp = make_index("graph24", corpus, metric=metric)
+        idx_q8 = make_index(f"graph24,{fragment}", corpus, metric=metric)
 
+        sp = SearchParams(ef_search=80)
         for arm, idx in (("fp32", idx_fp), ("int8", idx_q8)):
-            sec = timeit(lambda i=idx: i.search(queries, k, ef_search=80))
-            _ss, ids = idx.search(queries, k, ef_search=80)
+            sec = timeit(lambda i=idx: i.search(queries, k, sp))
+            ids = idx.search(queries, k, sp).ids
             rec = float(recall_at_k(gt, ids))
             emit(
                 f"table3/{name}_{arm}", sec,

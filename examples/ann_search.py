@@ -1,11 +1,15 @@
-"""End-to-end ANN serving scenario: build fp32 + int8 HNSW and IVF
-indexes over a product corpus, sweep EFS (the paper's Fig 2 axis), and
-serve a batched query stream measuring QPS and recall for every arm.
+"""End-to-end ANN serving scenario through the unified index API: build
+fp32 + int8 HNSW and IVF indexes from factory strings, sweep EFS (the
+paper's Fig 2 axis) with one SearchParams knob, and demonstrate the
+save/load round-trip — every index behind the same four calls
+(make_index / search / memory_bytes / save).
 
     PYTHONPATH=src python examples/ann_search.py [--n 4000]
 """
 
 import argparse
+import os
+import tempfile
 import time
 
 import jax
@@ -13,7 +17,7 @@ import jax
 from repro.core.preserve import recall_at_k
 from repro.data import synthetic
 from repro.data.groundtruth import exact_topk
-from repro.knn import HNSWIndex, IVFIndex
+from repro.knn import SearchParams, load_index, make_index
 
 
 def main():
@@ -28,30 +32,40 @@ def main():
 
     print("== HNSW (the paper's primary target) ==")
     arms = {
-        "fp32": HNSWIndex.build(corpus, m=8, ef_construction=80, metric=metric,
-                                batch_size=256),
-        "int8": HNSWIndex.build(corpus, m=8, ef_construction=80, metric=metric,
-                                quantized=True, sigmas=3.0, batch_size=256),
+        arm: make_index(factory, corpus, metric=metric,
+                        ef_construction=80, batch_size=256)
+        for arm, factory in (("fp32", "hnsw8"),
+                             ("int8", "hnsw8,lpq8@gaussian:3"))
     }
     for arm, idx in arms.items():
         print(f"  {arm}: build {idx.build_seconds:.1f}s, "
               f"memory {idx.memory_bytes()/1e6:.1f} MB")
     for efs in (40, 80, 160):
+        sp = SearchParams(ef_search=efs)
         for arm, idx in arms.items():
             t0 = time.perf_counter()
-            _s, ids = idx.search(queries, args.k, ef_search=efs)
-            jax.block_until_ready(ids)
+            res = idx.search(queries, args.k, sp)
+            jax.block_until_ready(res.ids)
             dt = time.perf_counter() - t0
-            rec = float(recall_at_k(gt, ids))
+            rec = float(recall_at_k(gt, res.ids))
             print(f"  efs={efs:4d} {arm}: qps={len(queries)/dt:7.1f} "
                   f"recall@{args.k}={rec:.4f}")
 
     print("== IVF (TPU-native cluster-prune index) ==")
-    ivf = IVFIndex.build(corpus, nlist=32, metric=metric, quantized=True, sigmas=3.0)
+    ivf = make_index("ivf32,lpq8@gaussian:3", corpus, metric=metric)
     for nprobe in (4, 8, 16):
-        _s, ids = ivf.search(queries, args.k, nprobe=nprobe)
-        rec = float(recall_at_k(gt, ids))
+        res = ivf.search(queries, args.k, SearchParams(nprobe=nprobe))
+        rec = float(recall_at_k(gt, res.ids))
         print(f"  nprobe={nprobe:3d} int8: recall@{args.k}={rec:.4f}")
+
+    print("== save / load round-trip ==")
+    path = os.path.join(tempfile.mkdtemp(), "ivf.npz")
+    ivf.save(path)
+    restored = load_index(path)
+    res_a = ivf.search(queries, args.k, SearchParams(nprobe=8))
+    res_b = restored.search(queries, args.k, SearchParams(nprobe=8))
+    same = bool((res_a.ids == res_b.ids).all())
+    print(f"  {path}: kind={restored.kind}, identical results: {same}")
 
 
 if __name__ == "__main__":

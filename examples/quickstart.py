@@ -11,7 +11,7 @@ import jax
 
 from repro.core import learn_params, quantize, knn_recall
 from repro.data import synthetic
-from repro.knn import FlatIndex
+from repro.knn import make_index
 
 # 1. a corpus with the paper's Fig-1 value profile (50k x 256, values
 #    exclusively inside (-.125, .125))
@@ -26,10 +26,9 @@ print(f"codes dtype={codes.dtype}, "
       f"memory {codes.nbytes/1e6:.1f} MB vs fp32 {corpus.nbytes/1e6:.1f} MB "
       f"({codes.nbytes/corpus.nbytes:.0%})")
 
-# 3. exact search in both domains
-idx_fp = FlatIndex.build(corpus, metric=metric)
-idx_q8 = FlatIndex.build(corpus, metric=metric, quantized=True,
-                         scheme="gaussian", sigmas=3.0)
+# 3. exact search in both domains — factory strings through the registry
+idx_fp = make_index("flat", corpus, metric=metric)
+idx_q8 = make_index("flat,lpq8@gaussian:3", corpus, metric=metric)
 
 k = 100
 _scores, gt = idx_fp.search(queries, k)

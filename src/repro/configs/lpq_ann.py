@@ -19,10 +19,21 @@ class ANNConfig:
     bits: int = 8
     scheme: str = "gaussian"
     sigmas: float = 3.0             # clamp width (paper: 1.0; see EXPERIMENTS)
+    # unified-API factory string (the paper's primary arm); benchmarks and
+    # the serving loop build through repro.knn.make_index(index)
+    index: str = "hnsw32,lpq8@gaussian:3"
     # HNSW grid (paper §5.2)
     m_grid: tuple = (32, 48)
     efc_grid: tuple = (300, 400, 600, 700)
     efs_grid: tuple = (300, 400, 500, 600, 700, 800)
+
+    def index_spec(self):
+        """Parsed IndexSpec for the configured factory string (lazy imports:
+        configs must stay importable without touching jax)."""
+        from repro.data.synthetic import METRIC_FOR
+        from repro.knn.spec import parse_factory
+
+        return parse_factory(self.index, metric=METRIC_FOR[self.dataset])
 
 
 def config() -> ANNConfig:
@@ -31,7 +42,7 @@ def config() -> ANNConfig:
 
 def reduced_config() -> ANNConfig:
     return ANNConfig(
-        n=4000, n_queries=32, k=10,
+        n=4000, n_queries=32, k=10, index="hnsw8,lpq8@gaussian:3",
         m_grid=(8,), efc_grid=(40,), efs_grid=(40, 80),
     )
 

@@ -1,0 +1,12 @@
+# Distribution utilities: mesh-sharding rules for every model family plus
+# a shard_map compatibility shim (jax moved shard_map out of experimental
+# across the versions this repo supports).
+from repro.dist.sharding import (
+    P,
+    dp_axes,
+    named,
+    replicated,
+    shard_map,
+)
+
+__all__ = ["P", "dp_axes", "named", "replicated", "shard_map"]

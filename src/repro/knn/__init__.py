@@ -1,20 +1,37 @@
 # KNN substrate: the index structures the paper plugs its quantization
 # into — exact flat scan (FAISS-flat), IVF (TPU-native), HNSW (the paper's
-# primary target), and an NGT-equivalent graph index — plus streaming and
-# distributed top-k machinery and graph-construction utilities.
+# primary target), an NGT-equivalent graph index and PQ — behind one
+# unified API: QuantSpec/IndexSpec configs, a common Index protocol
+# (build/search/memory_bytes/save/load), a kind registry with FAISS-style
+# factory strings, plus streaming and distributed top-k machinery and
+# graph-construction utilities.
+from repro.knn.base import Index, SearchParams, SearchResult
+from repro.knn.spec import IndexSpec, QuantSpec, parse_factory
 from repro.knn.flat import FlatIndex
 from repro.knn.ivf import IVFIndex, kmeans
 from repro.knn.hnsw import HNSWIndex
 from repro.knn.graph_index import GraphIndex
+from repro.knn.pq import PQIndex
+from repro.knn.registry import kinds, load_index, make_index
 from repro.knn.topk import chunked_topk, distributed_topk, merge_topk
 from repro.knn.graph_utils import knn_graph, radius_graph
 
 __all__ = [
+    "Index",
+    "SearchParams",
+    "SearchResult",
+    "IndexSpec",
+    "QuantSpec",
+    "parse_factory",
+    "make_index",
+    "load_index",
+    "kinds",
     "FlatIndex",
     "IVFIndex",
     "kmeans",
     "HNSWIndex",
     "GraphIndex",
+    "PQIndex",
     "chunked_topk",
     "distributed_topk",
     "merge_topk",

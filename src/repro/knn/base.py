@@ -1,0 +1,163 @@
+"""The common ``Index`` protocol: one call shape for every index kind.
+
+Every registered index implements
+
+    build(corpus, spec, *, key=None)          -> Index
+    search(queries, k, params=None)           -> SearchResult
+    memory_bytes()                            -> int
+    save(path) / load(path)                   -> disk round-trip
+
+``SearchParams`` unifies the per-kind search knobs (``chunk`` for the
+exhaustive scan, ``nprobe`` for IVF, ``ef_search`` for the graph walks);
+each index reads the knobs it understands and ignores the rest, so one
+``SearchParams`` drives any kind — the registry-driven serving loop and
+benchmarks depend on exactly that property.
+
+``SearchResult`` carries (scores, ids, stats).  It unpacks like the
+historical ``(scores, ids)`` pair so pre-unification call sites keep
+working: ``scores, ids = index.search(q, k)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Iterator, Optional, Protocol, runtime_checkable
+
+import jax
+import numpy as np
+
+from repro.core import quant as Qz
+from repro.knn.spec import IndexSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchParams:
+    """Union of every index kind's search-time knobs.
+
+    chunk      streaming tile rows for the exhaustive scan (flat)
+    nprobe     probed lists per query (ivf)
+    ef_search  beam width of the graph walk (hnsw, graph)
+    """
+
+    chunk: int = 16384
+    nprobe: int = 8
+    ef_search: int = 100
+
+    def merged(self, **overrides) -> "SearchParams":
+        live = {k: v for k, v in overrides.items() if v is not None}
+        return dataclasses.replace(self, **live) if live else self
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """scores [Q, k] f32 (larger-is-closer), ids [Q, k] i32 (-1 = no hit),
+    stats: per-search accounting (kind, candidates scored, ...)."""
+
+    scores: jax.Array
+    ids: jax.Array
+    stats: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    # legacy pair protocol: ``scores, ids = index.search(...)`` and
+    # ``index.search(...)[1]`` predate SearchResult and stay valid.
+    def __iter__(self) -> Iterator[jax.Array]:
+        return iter((self.scores, self.ids))
+
+    def __getitem__(self, i):
+        return (self.scores, self.ids)[i]
+
+    def __len__(self) -> int:
+        return 2
+
+
+# a jax pytree (scores/ids are leaves, stats is static aux data) so jitted
+# callers can return it, as they could the old (scores, ids) tuple
+jax.tree_util.register_pytree_node(
+    SearchResult,
+    lambda r: ((r.scores, r.ids), tuple(sorted(r.stats.items()))),
+    lambda aux, kids: SearchResult(kids[0], kids[1], dict(aux)),
+)
+
+
+@runtime_checkable
+class Index(Protocol):
+    """Structural protocol every registered index satisfies."""
+
+    kind: str
+
+    @staticmethod
+    def build(corpus, spec: IndexSpec | str | None = None, *, key=None) -> "Index":
+        ...
+
+    def search(self, queries, k: int, params: Optional[SearchParams] = None) -> SearchResult:
+        ...
+
+    def memory_bytes(self) -> int:
+        ...
+
+    def save(self, path: str) -> None:
+        ...
+
+    @staticmethod
+    def load(path: str) -> "Index":
+        ...
+
+
+# --------------------------------------------------------------------------
+# Disk round-trip: one .npz per index — arrays plus a JSON meta record.
+# --------------------------------------------------------------------------
+
+_META_KEY = "__meta__"
+
+
+def save_state(path: str, arrays: dict[str, Any], meta: dict[str, Any]) -> None:
+    """Write an index's arrays + static metadata as a single ``.npz``.
+
+    ``meta`` must be JSON-serializable and include ``kind`` so
+    ``registry.load_index`` can dispatch without knowing the class.
+    """
+    out = {k: np.asarray(v) for k, v in arrays.items() if v is not None}
+    out[_META_KEY] = np.frombuffer(
+        json.dumps(meta).encode("utf-8"), dtype=np.uint8
+    )
+    with open(path, "wb") as f:
+        np.savez(f, **out)
+
+
+def load_state(path: str) -> tuple[dict[str, np.ndarray], dict[str, Any]]:
+    with np.load(path) as z:
+        meta = json.loads(bytes(z[_META_KEY].tobytes()).decode("utf-8"))
+        arrays = {k: z[k] for k in z.files if k != _META_KEY}
+    return arrays, meta
+
+
+def load_meta(path: str) -> dict[str, Any]:
+    """Read only the metadata record — npz members load lazily, so this
+    never materializes the (possibly huge) index arrays."""
+    with np.load(path) as z:
+        return json.loads(bytes(z[_META_KEY].tobytes()).decode("utf-8"))
+
+
+def pack_quant_params(params: Optional[Qz.QuantParams]) -> tuple[dict, dict]:
+    """(arrays, meta) fragments for an optional QuantParams."""
+    if params is None:
+        return {}, {"quant": None}
+    return (
+        {"q_lo": params.lo, "q_hi": params.hi, "q_zero": params.zero},
+        {"quant": {"bits": params.bits, "scheme": params.scheme}},
+    )
+
+
+def unpack_quant_params(arrays: dict, meta: dict) -> Optional[Qz.QuantParams]:
+    import jax.numpy as jnp
+
+    q = meta.get("quant")
+    if q is None:
+        return None
+    return Qz.QuantParams(
+        lo=jnp.asarray(arrays["q_lo"]),
+        hi=jnp.asarray(arrays["q_hi"]),
+        zero=jnp.asarray(arrays["q_zero"]),
+        bits=int(q["bits"]),
+        scheme=str(q["scheme"]),
+    )

@@ -5,6 +5,9 @@ This is the reference the paper's Table 2 uses: exhaustive scan, fp32 vs
 int8 codes, identical top-k logic.  The quantized path stores only int8
 codes (4x smaller than fp32) and scores through the qmip/ql2 Pallas
 kernels (MXU int8 path on TPU, interpret mode on CPU).
+
+Registered as kind ``"flat"``; factory strings: ``"flat"``,
+``"flat,lpq8@gaussian:3"``.
 """
 
 from __future__ import annotations
@@ -19,9 +22,13 @@ import jax.numpy as jnp
 from repro.core import distances as D
 from repro.core import quant as Qz
 from repro.kernels import ops as K
+from repro.knn import base as B
+from repro.knn import registry
 from repro.knn import topk as T
+from repro.knn.spec import IndexSpec, quant_spec_from_kwargs, resolve_build_spec
 
 
+@registry.register("flat")
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class FlatIndex:
@@ -38,6 +45,9 @@ class FlatIndex:
     @staticmethod
     def build(
         corpus: jax.Array,
+        spec: IndexSpec | str | None = None,
+        *,
+        key: jax.Array | None = None,
         metric: str = "ip",
         quantized: bool = False,
         bits: int = 8,
@@ -45,18 +55,25 @@ class FlatIndex:
         sigmas: float = 1.0,
         params: Optional[Qz.QuantParams] = None,
     ) -> "FlatIndex":
+        """Build from an ``IndexSpec``/factory string (unified API) or the
+        legacy kwargs, which are adapted into a spec on entry."""
+        del key  # deterministic build; accepted for protocol uniformity
+        spec, _p = resolve_build_spec(
+            "flat", spec, metric=metric,
+            quant=quant_spec_from_kwargs(quantized, bits, scheme, sigmas, params),
+        )
+
         n = int(corpus.shape[0])
-        if not quantized:
+        if spec.quant is None:
             return FlatIndex(
-                metric=metric, quantized=False, n=n,
+                metric=spec.metric, quantized=False, n=n,
                 vectors=jnp.asarray(corpus, jnp.float32), codes=None, params=None,
             )
-        if params is None:
-            params = Qz.learn_params(corpus, bits=bits, scheme=scheme, sigmas=sigmas)
-        codes = K.quantize(corpus, params.lo, params.hi, params.zero, bits=params.bits)
+        qp = spec.quant.learn(corpus)
+        codes = spec.quant.encode(corpus, qp)
         return FlatIndex(
-            metric=metric, quantized=True, n=n,
-            vectors=None, codes=codes, params=params,
+            metric=spec.metric, quantized=True, n=n,
+            vectors=None, codes=codes, params=qp,
         )
 
     # -- query ------------------------------------------------------------
@@ -67,11 +84,20 @@ class FlatIndex:
         p = self.params
         return K.quantize(queries, p.lo, p.hi, p.zero, bits=p.bits)
 
-    def search(self, queries: jax.Array, k: int, chunk: int = 16384):
+    def search(
+        self,
+        queries: jax.Array,
+        k: int,
+        params: Optional[B.SearchParams] = None,
+        *,
+        chunk: int | None = None,
+    ) -> B.SearchResult:
         """Exhaustive top-k; streams the corpus in chunks when N > chunk.
 
-        Returns (scores [Q, k] f32, ids [Q, k] i32), larger-is-closer.
+        Returns a ``SearchResult`` (scores [Q, k] f32, ids [Q, k] i32),
+        larger-is-closer.
         """
+        sp = (params or B.SearchParams()).merged(chunk=chunk)
         q = self.prepare_queries(queries)
         data = self.codes if self.quantized else self.vectors
 
@@ -85,15 +111,17 @@ class FlatIndex:
         else:
             score_fn = partial(D.scores, metric=self.metric)
 
-        if self.n <= chunk:
+        stats = {"kind": "flat", "candidates": self.n}
+        if self.n <= sp.chunk:
             s = score_fn(q, data).astype(jnp.float32)
             k_eff = min(k, self.n)
             top_s, top_i = jax.lax.top_k(s, k_eff)
-            return top_s, top_i.astype(jnp.int32)
+            return B.SearchResult(top_s, top_i.astype(jnp.int32), stats)
 
-        padded, n_valid = T.pad_corpus(data, chunk)
-        s, i = T.chunked_topk(q, padded, k, score_fn, chunk=chunk)
-        return T.mask_invalid(s, i, n_valid)
+        padded, n_valid = T.pad_corpus(data, sp.chunk)
+        s, i = T.chunked_topk(q, padded, k, score_fn, chunk=sp.chunk)
+        s, i = T.mask_invalid(s, i, n_valid)
+        return B.SearchResult(s, i, stats)
 
     # -- accounting (paper Table 1/2 memory column) -------------------------
     def memory_bytes(self) -> int:
@@ -103,3 +131,23 @@ class FlatIndex:
             return self.n * d * 1 + 3 * d * 4
         d = self.vectors.shape[1]
         return self.n * d * 4
+
+    # -- disk round-trip ---------------------------------------------------
+    def save(self, path: str) -> None:
+        q_arrays, q_meta = B.pack_quant_params(self.params)
+        B.save_state(
+            path,
+            {"vectors": self.vectors, "codes": self.codes, **q_arrays},
+            {"kind": "flat", "metric": self.metric,
+             "quantized": self.quantized, "n": self.n, **q_meta},
+        )
+
+    @staticmethod
+    def load(path: str) -> "FlatIndex":
+        arrays, meta = B.load_state(path)
+        return FlatIndex(
+            metric=meta["metric"], quantized=meta["quantized"], n=meta["n"],
+            vectors=jnp.asarray(arrays["vectors"]) if "vectors" in arrays else None,
+            codes=jnp.asarray(arrays["codes"]) if "codes" in arrays else None,
+            params=B.unpack_quant_params(arrays, meta),
+        )

@@ -26,11 +26,15 @@ import numpy as np
 from repro.core import distances as D
 from repro.core import quant as Qz
 from repro.kernels import ops as K
+from repro.knn import base as B
 from repro.knn import graph as G
 from repro.knn import ivf as IVF
+from repro.knn import registry
 from repro.knn.flat import FlatIndex
+from repro.knn.spec import IndexSpec, quant_spec_from_kwargs, resolve_build_spec
 
 
+@registry.register("graph")
 @dataclasses.dataclass
 class GraphIndex:
     metric: str
@@ -57,6 +61,8 @@ class GraphIndex:
     @staticmethod
     def build(
         corpus: jax.Array,
+        spec: IndexSpec | str | None = None,
+        *,
         degree: int = 32,
         n_seeds: int = 32,
         metric: str = "ip",
@@ -66,6 +72,16 @@ class GraphIndex:
         sigmas: float = 1.0,
         key: jax.Array | None = None,
     ) -> "GraphIndex":
+        spec, p = resolve_build_spec(
+            "graph", spec, metric=metric,
+            quant=quant_spec_from_kwargs(quantized, bits, scheme, sigmas),
+            degree=degree, n_seeds=n_seeds,
+        )
+        degree = int(p["degree"])
+        n_seeds = int(p["n_seeds"])
+        metric = spec.metric
+        quantized = spec.quant is not None
+
         t0 = time.perf_counter()
         if key is None:
             key = jax.random.PRNGKey(0)
@@ -82,8 +98,14 @@ class GraphIndex:
         params = None
         data = corpus
         if quantized:
-            params = Qz.learn_params(corpus, bits=bits, scheme=scheme, sigmas=sigmas)
-            data = K.quantize(corpus, params.lo, params.hi, params.zero, bits=params.bits)
+            # constants are learned in the index's own (possibly augmented)
+            # space, so pre-learned d-dim params cannot be reused under the
+            # MIP->L2 augmentation — drop them and re-fit.
+            quant = spec.quant
+            if aug and quant.params is not None:
+                quant = dataclasses.replace(quant, params=None)
+            params = quant.learn(corpus)
+            data = quant.encode(corpus, params)
 
         # exact kNN graph in the *index's own distance domain* (int8 for the
         # quantized index — build-time speedup is the paper's Table 1 claim)
@@ -131,7 +153,16 @@ class GraphIndex:
         p = self.params
         return K.quantize(queries, p.lo, p.hi, p.zero, bits=p.bits)
 
-    def search(self, queries: jax.Array, k: int, ef_search: int = 100):
+    def search(
+        self,
+        queries: jax.Array,
+        k: int,
+        params: Optional[B.SearchParams] = None,
+        *,
+        ef_search: int | None = None,
+    ) -> B.SearchResult:
+        sp = (params or B.SearchParams()).merged(ef_search=ef_search)
+        ef_search = sp.ef_search
         qf = jnp.asarray(queries, jnp.float32)
         if self.aug:
             qf = jnp.concatenate(
@@ -150,7 +181,8 @@ class GraphIndex:
         scores, ids = G.beam_search_batch(
             q, self.adj, entry, score_set=score_set, ef=ef
         )
-        return scores[:, :k], ids[:, :k]
+        stats = {"kind": "graph", "ef_search": ef, "n_entry": n_entry}
+        return B.SearchResult(scores[:, :k], ids[:, :k], stats)
 
     def memory_bytes(self) -> int:
         d = self.data.shape[1]
@@ -159,3 +191,30 @@ class GraphIndex:
         seeds = int(self.seeds.size) * 4 + int(self.seed_ids.size) * 4
         consts = 3 * d * 4 if self.params is not None else 0
         return vec + graph + seeds + consts
+
+    # ------------------------------------------------------------------
+    def save(self, path: str) -> None:
+        q_arrays, q_meta = B.pack_quant_params(self.params)
+        B.save_state(
+            path,
+            {"data": self.data, "adj": self.adj, "seeds": self.seeds,
+             "seed_ids": self.seed_ids, **q_arrays},
+            {"kind": "graph", "metric": self.metric,
+             "quantized": self.quantized, "degree": self.degree,
+             "internal_metric": self.internal_metric, "aug": self.aug,
+             "build_seconds": self.build_seconds, **q_meta},
+        )
+
+    @staticmethod
+    def load(path: str) -> "GraphIndex":
+        arrays, meta = B.load_state(path)
+        return GraphIndex(
+            metric=meta["metric"], quantized=meta["quantized"],
+            degree=meta["degree"], data=jnp.asarray(arrays["data"]),
+            params=B.unpack_quant_params(arrays, meta),
+            adj=jnp.asarray(arrays["adj"]),
+            seeds=jnp.asarray(arrays["seeds"]),
+            seed_ids=jnp.asarray(arrays["seed_ids"]),
+            build_seconds=float(meta.get("build_seconds", 0.0)),
+            internal_metric=meta["internal_metric"], aug=meta["aug"],
+        )

@@ -27,9 +27,13 @@ import numpy as np
 
 from repro.core import quant as Qz
 from repro.kernels import ops as K
+from repro.knn import base as B
 from repro.knn import graph as G
+from repro.knn import registry
+from repro.knn.spec import IndexSpec, quant_spec_from_kwargs, resolve_build_spec
 
 
+@registry.register("hnsw")
 @dataclasses.dataclass
 class HNSWIndex:
     metric: str
@@ -60,6 +64,8 @@ class HNSWIndex:
     @staticmethod
     def build(
         corpus: jax.Array,
+        spec: IndexSpec | str | None = None,
+        *,
         m: int = 16,
         ef_construction: int = 100,
         metric: str = "ip",
@@ -71,6 +77,17 @@ class HNSWIndex:
         batch_size: int = 64,
         params: Optional[Qz.QuantParams] = None,
     ) -> "HNSWIndex":
+        spec, p = resolve_build_spec(
+            "hnsw", spec, metric=metric,
+            quant=quant_spec_from_kwargs(quantized, bits, scheme, sigmas, params),
+            m=m, ef_construction=ef_construction, batch_size=batch_size,
+        )
+        m = int(p["m"])
+        ef_construction = int(p["ef_construction"])
+        batch_size = int(p["batch_size"])
+        metric = spec.metric
+        quantized = spec.quant is not None
+
         t0 = time.perf_counter()
         if key is None:
             key = jax.random.PRNGKey(0)
@@ -78,10 +95,10 @@ class HNSWIndex:
         n, d = corpus.shape
 
         data = corpus
+        params = None
         if quantized:
-            if params is None:
-                params = Qz.learn_params(corpus, bits=bits, scheme=scheme, sigmas=sigmas)
-            data = K.quantize(corpus, params.lo, params.hi, params.zero, bits=params.bits)
+            params = spec.quant.learn(corpus)
+            data = spec.quant.encode(corpus, params)
 
         # level sampling: floor(-ln U * mL), mL = 1/ln M
         ml = 1.0 / math.log(m)
@@ -174,8 +191,18 @@ class HNSWIndex:
         return idx
 
     # ------------------------------------------------------------------
-    def search(self, queries: jax.Array, k: int, ef_search: int = 100):
-        """Layered descent + layer-0 beam; returns (scores, ids) [Q, k]."""
+    def search(
+        self,
+        queries: jax.Array,
+        k: int,
+        params: Optional[B.SearchParams] = None,
+        *,
+        ef_search: int | None = None,
+    ) -> B.SearchResult:
+        """Layered descent + layer-0 beam; returns a ``SearchResult``
+        (scores, ids) [Q, k]."""
+        sp = (params or B.SearchParams()).merged(ef_search=ef_search)
+        ef_search = sp.ef_search
         q = self.prepare_queries(queries)
         score_set = self._score_set()
         nq = q.shape[0]
@@ -192,7 +219,8 @@ class HNSWIndex:
         scores, ids = G.beam_search_batch(
             q, self.layers[0], entry[:, None], score_set=score_set, ef=ef
         )
-        return scores[:, :k], ids[:, :k]
+        stats = {"kind": "hnsw", "ef_search": ef, "n_layers": len(self.layers)}
+        return B.SearchResult(scores[:, :k], ids[:, :k], stats)
 
     # ------------------------------------------------------------------
     def memory_bytes(self) -> int:
@@ -201,3 +229,31 @@ class HNSWIndex:
         graph = sum(int(a.size) * 4 for a in self.layers)  # native pointers
         consts = 3 * d * 4 if self.params is not None else 0
         return vec + graph + consts
+
+    # ------------------------------------------------------------------
+    def save(self, path: str) -> None:
+        q_arrays, q_meta = B.pack_quant_params(self.params)
+        arrays = {"data": self.data, "levels": self.levels, **q_arrays}
+        for l, adj in enumerate(self.layers):
+            arrays[f"layer_{l}"] = adj
+        B.save_state(
+            path, arrays,
+            {"kind": "hnsw", "metric": self.metric, "quantized": self.quantized,
+             "m": self.m, "entry": self.entry, "n_layers": len(self.layers),
+             "build_seconds": self.build_seconds, **q_meta},
+        )
+
+    @staticmethod
+    def load(path: str) -> "HNSWIndex":
+        arrays, meta = B.load_state(path)
+        layers = [
+            jnp.asarray(arrays[f"layer_{l}"]) for l in range(meta["n_layers"])
+        ]
+        return HNSWIndex(
+            metric=meta["metric"], quantized=meta["quantized"], m=meta["m"],
+            data=jnp.asarray(arrays["data"]),
+            params=B.unpack_quant_params(arrays, meta),
+            layers=layers, levels=np.asarray(arrays["levels"]),
+            entry=int(meta["entry"]),
+            build_seconds=float(meta.get("build_seconds", 0.0)),
+        )

@@ -10,6 +10,9 @@ existing indexing-based KNN frameworks").
 
 Lists are padded to a fixed length so every shape is static (jit/pjit
 friendly); the pad id -1 scores -inf.
+
+Registered as kind ``"ivf"``; factory strings: ``"ivf256"``,
+``"ivf256,lpq8"``.
 """
 
 from __future__ import annotations
@@ -24,6 +27,9 @@ import jax.numpy as jnp
 from repro.core import distances as D
 from repro.core import quant as Qz
 from repro.kernels import ops as K
+from repro.knn import base as B
+from repro.knn import registry
+from repro.knn.spec import IndexSpec, quant_spec_from_kwargs, resolve_build_spec
 
 
 # --------------------------------------------------------------------------
@@ -56,6 +62,7 @@ def kmeans(
     return cents
 
 
+@registry.register("ivf")
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class IVFIndex:
@@ -72,15 +79,26 @@ class IVFIndex:
     @staticmethod
     def build(
         corpus: jax.Array,
+        spec: IndexSpec | str | None = None,
+        *,
+        key: jax.Array | None = None,
         nlist: int = 64,
         metric: str = "ip",
         quantized: bool = False,
         bits: int = 8,
         scheme: str | Qz.Scheme = Qz.Scheme.GAUSSIAN,
         sigmas: float = 1.0,
-        key: jax.Array | None = None,
+        params: Optional[Qz.QuantParams] = None,
         kmeans_iters: int = 10,
     ) -> "IVFIndex":
+        spec, p = resolve_build_spec(
+            "ivf", spec, metric=metric,
+            quant=quant_spec_from_kwargs(quantized, bits, scheme, sigmas, params),
+            nlist=nlist, kmeans_iters=kmeans_iters,
+        )
+        nlist = int(p["nlist"])
+        kmeans_iters = int(p["kmeans_iters"])
+
         if key is None:
             key = jax.random.PRNGKey(0)
         n = int(corpus.shape[0])
@@ -100,16 +118,16 @@ class IVFIndex:
         for c, b in enumerate(buckets):
             lists[c, : len(b)] = b
 
-        params = None
+        qp = None
         data = corpus
-        if quantized:
-            params = Qz.learn_params(corpus, bits=bits, scheme=scheme, sigmas=sigmas)
-            data = K.quantize(corpus, params.lo, params.hi, params.zero, bits=params.bits)
+        if spec.quant is not None:
+            qp = spec.quant.learn(corpus)
+            data = spec.quant.encode(corpus, qp)
 
         return IVFIndex(
-            metric=metric, quantized=quantized, n=n, nlist=nlist,
-            max_list=max_list, centroids=cents, lists=jnp.asarray(lists),
-            data=data, params=params,
+            metric=spec.metric, quantized=spec.quant is not None, n=n,
+            nlist=nlist, max_list=max_list, centroids=cents,
+            lists=jnp.asarray(lists), data=data, params=qp,
         )
 
     # ------------------------------------------------------------------
@@ -119,11 +137,20 @@ class IVFIndex:
         p = self.params
         return K.quantize(queries, p.lo, p.hi, p.zero, bits=p.bits)
 
-    def search(self, queries: jax.Array, k: int, nprobe: int = 8):
+    def search(
+        self,
+        queries: jax.Array,
+        k: int,
+        params: Optional[B.SearchParams] = None,
+        *,
+        nprobe: int | None = None,
+    ) -> B.SearchResult:
         """Probe the nprobe best lists per query, exact-score the members.
 
-        Returns (scores [Q, k] f32, ids [Q, k] i32).
+        Returns a ``SearchResult`` (scores [Q, k] f32, ids [Q, k] i32).
         """
+        sp = (params or B.SearchParams()).merged(nprobe=nprobe)
+        nprobe = min(sp.nprobe, self.nlist)
         qf = jnp.asarray(queries, jnp.float32)
         qq = self.prepare_queries(queries)
 
@@ -155,7 +182,10 @@ class IVFIndex:
                 top_s > jnp.finfo(jnp.float32).min, ids[pos], -1
             ).astype(jnp.int32)
 
-        return jax.vmap(per_query)(qq, safe, valid)
+        scores, ids = jax.vmap(per_query)(qq, safe, valid)
+        stats = {"kind": "ivf", "nprobe": nprobe,
+                 "candidates": nprobe * self.max_list}
+        return B.SearchResult(scores, ids, stats)
 
     def memory_bytes(self) -> int:
         d = self.data.shape[1]
@@ -165,3 +195,27 @@ class IVFIndex:
         if self.params is not None:
             base += 3 * d * 4
         return base
+
+    # ------------------------------------------------------------------
+    def save(self, path: str) -> None:
+        q_arrays, q_meta = B.pack_quant_params(self.params)
+        B.save_state(
+            path,
+            {"centroids": self.centroids, "lists": self.lists,
+             "data": self.data, **q_arrays},
+            {"kind": "ivf", "metric": self.metric, "quantized": self.quantized,
+             "n": self.n, "nlist": self.nlist, "max_list": self.max_list,
+             **q_meta},
+        )
+
+    @staticmethod
+    def load(path: str) -> "IVFIndex":
+        arrays, meta = B.load_state(path)
+        return IVFIndex(
+            metric=meta["metric"], quantized=meta["quantized"], n=meta["n"],
+            nlist=meta["nlist"], max_list=meta["max_list"],
+            centroids=jnp.asarray(arrays["centroids"]),
+            lists=jnp.asarray(arrays["lists"]),
+            data=jnp.asarray(arrays["data"]),
+            params=B.unpack_quant_params(arrays, meta),
+        )

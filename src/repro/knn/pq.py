@@ -27,9 +27,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quant as Qz
+from repro.knn import base as B
+from repro.knn import registry
 from repro.knn.ivf import kmeans
+from repro.knn.spec import IndexSpec, resolve_build_spec
 
 
+@registry.register("pq")
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class PQIndex:
@@ -43,12 +47,24 @@ class PQIndex:
     @staticmethod
     def build(
         corpus: jax.Array,
+        spec: IndexSpec | str | None = None,
+        *,
         m: int = 8,
         metric: str = "ip",
         lpq_tables: bool = False,
         key: jax.Array | None = None,
         kmeans_iters: int = 8,
     ) -> "PQIndex":
+        spec, p = resolve_build_spec(
+            "pq", spec, metric=metric,
+            m=m, lpq_tables=lpq_tables, kmeans_iters=kmeans_iters,
+        )
+        m = int(p["m"])
+        # "pq64+lpq" / "pq64,lpq8" — the paper's after-the-codebook
+        # composition: int8 ADC lookup tables (codes are already 1 byte)
+        lpq_tables = bool(p["lpq_tables"]) or spec.quant is not None
+        kmeans_iters = int(p["kmeans_iters"])
+        metric = spec.metric
         if key is None:
             key = jax.random.PRNGKey(0)
         corpus = jnp.asarray(corpus, jnp.float32)
@@ -87,8 +103,18 @@ class PQIndex:
             lut = -jnp.sum(diff * diff, -1)
         return lut
 
-    def search(self, queries: jax.Array, k: int):
-        """ADC scan: LUT gather-sum over the code matrix."""
+    def search(
+        self,
+        queries: jax.Array,
+        k: int,
+        params: "B.SearchParams | None" = None,
+    ) -> B.SearchResult:
+        """ADC scan: LUT gather-sum over the code matrix.
+
+        PQ's exhaustive ADC scan has no search-time knob; ``params`` is
+        accepted (and ignored) for protocol uniformity.
+        """
+        del params
         lut = self._luts(queries)                          # [Q, M, 256] f32
 
         if self.lpq_tables:
@@ -112,7 +138,28 @@ class PQIndex:
                 axis=1,
             )
         top_s, top_i = jax.lax.top_k(scores, k)
-        return top_s, top_i.astype(jnp.int32)
+        stats = {"kind": "pq", "m": self.m, "candidates": self.n,
+                 "lpq_tables": self.lpq_tables}
+        return B.SearchResult(top_s, top_i.astype(jnp.int32), stats)
 
     def memory_bytes(self) -> int:
         return int(self.codes.size) + int(self.codebooks.size) * 4
+
+    # ------------------------------------------------------------------
+    def save(self, path: str) -> None:
+        B.save_state(
+            path,
+            {"codebooks": self.codebooks, "codes": self.codes},
+            {"kind": "pq", "metric": self.metric, "m": self.m, "n": self.n,
+             "lpq_tables": self.lpq_tables},
+        )
+
+    @staticmethod
+    def load(path: str) -> "PQIndex":
+        arrays, meta = B.load_state(path)
+        return PQIndex(
+            metric=meta["metric"], m=meta["m"], n=meta["n"],
+            codebooks=jnp.asarray(arrays["codebooks"]),
+            codes=jnp.asarray(arrays["codes"]),
+            lpq_tables=meta["lpq_tables"],
+        )

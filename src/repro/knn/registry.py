@@ -1,0 +1,82 @@
+"""kind -> implementation registry and the ``make_index`` entrypoint.
+
+Index classes self-register at import time::
+
+    @registry.register("ivf")
+    class IVFIndex: ...
+
+Consumers never name a class: ``make_index("ivf256,lpq8", corpus)``
+builds through the registry, ``load_index(path)`` dispatches on the
+``kind`` recorded in the saved state, and the serving loop / benchmarks
+iterate ``kinds()``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.knn.spec import IndexSpec, as_spec
+
+_REGISTRY: dict[str, type] = {}
+
+
+def register(kind: str):
+    """Class decorator: register an Index implementation under ``kind``."""
+
+    def deco(cls):
+        cls.kind = kind
+        _REGISTRY[kind] = cls
+        return cls
+
+    return deco
+
+
+def _ensure_registered() -> None:
+    # the index modules register on import; pull them in on first use so
+    # ``registry`` itself stays import-cycle-free.
+    if _REGISTRY:
+        return
+    from repro.knn import flat, graph_index, hnsw, ivf, pq  # noqa: F401
+
+
+def kinds() -> tuple[str, ...]:
+    _ensure_registered()
+    return tuple(sorted(_REGISTRY))
+
+
+def get_impl(kind: str) -> type:
+    _ensure_registered()
+    if kind not in _REGISTRY:
+        raise KeyError(f"no index registered for kind {kind!r}; have {kinds()}")
+    return _REGISTRY[kind]
+
+
+def make_index(
+    spec: IndexSpec | str,
+    corpus,
+    *,
+    metric: Optional[str] = None,
+    key=None,
+    **overrides,
+):
+    """Build any registered index from an ``IndexSpec`` or factory string.
+
+    ``overrides`` merge into the spec's per-kind build params (e.g.
+    ``ef_construction=80`` for hnsw, ``kmeans_iters=4`` for ivf/pq).
+    ``metric`` is the default for factory strings (a metric fragment
+    wins) and an explicit override for IndexSpec inputs.
+    """
+    resolved = as_spec(spec, metric=metric)
+    if metric is not None and isinstance(spec, IndexSpec):
+        resolved = dataclasses.replace(resolved, metric=metric)
+    if overrides:
+        resolved = resolved.with_overrides(**overrides)
+    return get_impl(resolved.kind).build(corpus, resolved, key=key)
+
+
+def load_index(path: str):
+    """Load a saved index, dispatching on the recorded kind."""
+    from repro.knn import base
+
+    return get_impl(base.load_meta(path)["kind"]).load(path)

@@ -1,0 +1,248 @@
+"""Unified index configuration: ``QuantSpec``, ``IndexSpec`` and the
+FAISS-style factory-string parser.
+
+The paper's central claim is that low-precision quantization is an
+*implementation-level* substitution — "it can be combined with existing
+KNN algorithms".  These spec objects make that composition expressible as
+one API: a single ``QuantSpec`` describes the (Q, phi) family of Eq. 1
+(bits, scheme, clamp width, optionally pre-learned constants) and plugs
+unchanged into any index ``kind``; an ``IndexSpec`` adds the per-kind
+build parameters.  ``parse_factory`` turns FAISS-style strings into specs:
+
+    "flat"                  exhaustive fp32 scan
+    "flat,lpq8"             exhaustive int8 scan (the paper's Table 2 arm)
+    "ivf256,lpq8"           IVF, 256 lists, int8 codes
+    "hnsw32,lpq8@gaussian:3" HNSW M=32, int8 with 3-sigma Gaussian clamp
+    "graph24,lpq8"          NGT-equivalent graph index, degree 24
+    "pq64+lpq"              PQ with 64 subspaces, int8 ADC tables
+    "flat,lpq8,l2"          metric override fragment (ip | l2 | angular)
+
+Grammar: comma-separated fragments.  Exactly one *kind* fragment
+(``flat`` | ``ivf<nlist>`` | ``hnsw<M>`` | ``graph<degree>`` |
+``pq<M>[+lpq]``), at most one *quant* fragment
+(``lpq<bits>[@<scheme>][:<sigmas>]``), at most one *metric* fragment.
+``to_factory`` is the inverse, up to default elision.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Mapping, Optional
+
+from repro.core import quant as Qz
+
+METRICS = ("ip", "l2", "angular")
+
+#: kind -> (numeric build-parameter set by the factory fragment, default)
+KIND_PARAM = {
+    "flat": (None, None),
+    "ivf": ("nlist", 64),
+    "hnsw": ("m", 16),
+    "graph": ("degree", 32),
+    "pq": ("m", 8),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """The paper's quantization family as a reusable configuration.
+
+    ``params`` may carry pre-learned Eq. 1 constants so several index
+    components (or several indexes over the same corpus) share one
+    learn pass; when absent, ``learn`` fits them on the build corpus.
+    """
+
+    bits: int = 8
+    scheme: str = "gaussian"
+    sigmas: float = 1.0
+    params: Optional[Qz.QuantParams] = None
+
+    def learn(self, corpus) -> Qz.QuantParams:
+        """Resolve Eq. 1 constants: reuse pre-learned params or fit."""
+        if self.params is not None:
+            return self.params
+        return Qz.learn_params(
+            corpus, bits=self.bits, scheme=self.scheme, sigmas=self.sigmas
+        )
+
+    def encode(self, x, params: Qz.QuantParams):
+        """Apply Eq. 1 through the kernel path — the single quantize
+        entrypoint every index build/query routes through."""
+        from repro.kernels import ops as K
+
+        return K.quantize(x, params.lo, params.hi, params.zero, bits=params.bits)
+
+    def with_params(self, params: Qz.QuantParams) -> "QuantSpec":
+        return dataclasses.replace(self, params=params)
+
+    def to_fragment(self) -> str:
+        frag = f"lpq{self.bits}"
+        if self.scheme != "gaussian":
+            frag += f"@{self.scheme}"
+        if self.sigmas != 1.0:
+            frag += f":{self.sigmas:g}"
+        return frag
+
+
+def quant_spec_from_kwargs(
+    quantized: bool = False,
+    bits: int = 8,
+    scheme: str | Qz.Scheme = Qz.Scheme.GAUSSIAN,
+    sigmas: float = 1.0,
+    params: Optional[Qz.QuantParams] = None,
+) -> Optional[QuantSpec]:
+    """Adapter from the pre-unification per-index kwargs to a QuantSpec.
+
+    Legacy semantics: ``params`` is only honored when ``quantized=True``
+    (an fp32 build ignores it), exactly as the old per-index builds did.
+    """
+    if not quantized:
+        return None
+    if params is not None:
+        return QuantSpec(
+            bits=params.bits, scheme=params.scheme, sigmas=sigmas, params=params
+        )
+    return QuantSpec(bits=bits, scheme=Qz.Scheme(scheme).value, sigmas=sigmas)
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexSpec:
+    """One config object any index, benchmark or serving path accepts."""
+
+    kind: str = "flat"
+    metric: str = "ip"
+    quant: Optional[QuantSpec] = None
+    params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.kind not in KIND_PARAM:
+            raise ValueError(
+                f"unknown index kind {self.kind!r}; known: {sorted(KIND_PARAM)}"
+            )
+        if self.metric not in METRICS:
+            raise ValueError(f"unknown metric {self.metric!r}; known: {METRICS}")
+
+    def with_overrides(self, **overrides) -> "IndexSpec":
+        """Merge extra build parameters (ef_construction, key knobs...)."""
+        return dataclasses.replace(self, params={**dict(self.params), **overrides})
+
+    def to_factory(self) -> str:
+        """Inverse of ``parse_factory`` (defaults elided)."""
+        pname, pdefault = KIND_PARAM[self.kind]
+        frag = self.kind
+        if pname is not None:
+            frag += str(self.params.get(pname, pdefault))
+        if self.kind == "pq" and self.params.get("lpq_tables"):
+            frag += "+lpq"
+        parts = [frag]
+        if self.quant is not None:
+            parts.append(self.quant.to_fragment())
+        if self.metric != "ip":
+            parts.append(self.metric)
+        return ",".join(parts)
+
+
+_KIND_RE = re.compile(r"^(flat|ivf|hnsw|graph|pq)(\d+)?(\+lpq)?$")
+_QUANT_RE = re.compile(r"^lpq(\d+)(?:@([a-z_0-9]+))?(?::([0-9.]+))?$")
+
+
+def parse_factory(factory: str, metric: str | None = None) -> IndexSpec:
+    """Parse a FAISS-style factory string into an ``IndexSpec``.
+
+    ``metric`` provides the default when the string has no metric fragment.
+    """
+    kind = None
+    params: dict[str, Any] = {}
+    quant = None
+    out_metric = metric or "ip"
+    metric_seen = False
+
+    for raw in factory.split(","):
+        frag = raw.strip().lower()
+        if not frag:
+            continue
+        if frag in METRICS:
+            if metric_seen:
+                raise ValueError(f"duplicate metric fragment in {factory!r}")
+            metric_seen = True
+            out_metric = frag
+            continue
+        mq = _QUANT_RE.match(frag)
+        if mq:
+            if quant is not None:
+                raise ValueError(f"duplicate quant fragment in {factory!r}")
+            bits = int(mq.group(1))
+            scheme = mq.group(2) or "gaussian"
+            Qz.Scheme(scheme)  # validate early
+            sigmas = float(mq.group(3)) if mq.group(3) else 1.0
+            quant = QuantSpec(bits=bits, scheme=scheme, sigmas=sigmas)
+            continue
+        mk = _KIND_RE.match(frag)
+        if mk:
+            if kind is not None:
+                raise ValueError(f"duplicate kind fragment in {factory!r}")
+            kind = mk.group(1)
+            pname, pdefault = KIND_PARAM[kind]
+            if mk.group(2) is not None:
+                if pname is None:
+                    raise ValueError(f"{kind!r} takes no numeric parameter")
+                params[pname] = int(mk.group(2))
+            elif pname is not None:
+                params[pname] = pdefault
+            if mk.group(3):
+                if kind != "pq":
+                    raise ValueError("'+lpq' only composes with pq")
+                params["lpq_tables"] = True
+            continue
+        raise ValueError(f"cannot parse factory fragment {raw!r} in {factory!r}")
+
+    if kind is None:
+        raise ValueError(f"no index kind in factory string {factory!r}")
+    if kind == "pq" and quant is not None:
+        # the paper's composition: LPQ applied after the codebook mapping
+        # step means int8 ADC tables (there is no separate code path for
+        # quantizing PQ codes — they are already 1 byte).  Only the
+        # default int8 fragment is implemented; reject variants rather
+        # than silently substituting int8.
+        if quant != QuantSpec(bits=8, scheme="gaussian", sigmas=1.0):
+            raise ValueError(
+                f"pq only composes with plain 'lpq8' ADC tables, got "
+                f"{quant.to_fragment()!r} in {factory!r}"
+            )
+        params["lpq_tables"] = True
+    return IndexSpec(kind=kind, metric=out_metric, quant=quant, params=params)
+
+
+def resolve_build_spec(
+    kind: str,
+    spec: "IndexSpec | str | None",
+    *,
+    metric: str,
+    quant: Optional[QuantSpec] = None,
+    **defaults,
+) -> tuple[IndexSpec, dict[str, Any]]:
+    """Shared entry adapter for every index ``build``.
+
+    ``spec=None`` means the caller used the legacy kwargs: assemble a spec
+    from ``metric`` / ``quant`` / ``defaults``.  Otherwise coerce factory
+    strings and fill unset per-kind params from ``defaults``.  Returns the
+    resolved spec plus the merged build-parameter dict.
+    """
+    if spec is None:
+        spec = IndexSpec(kind=kind, metric=metric, quant=quant,
+                         params=dict(defaults))
+    else:
+        spec = as_spec(spec, metric=metric)
+        if spec.kind != kind:
+            raise ValueError(f"spec kind {spec.kind!r} routed to {kind!r} build")
+    return spec, {**defaults, **dict(spec.params)}
+
+
+def as_spec(spec: "IndexSpec | str", metric: str | None = None) -> IndexSpec:
+    """Coerce a factory string or pass through an IndexSpec."""
+    if isinstance(spec, IndexSpec):
+        return spec
+    if isinstance(spec, str):
+        return parse_factory(spec, metric=metric)
+    raise TypeError(f"expected IndexSpec or factory string, got {type(spec)!r}")

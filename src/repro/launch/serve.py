@@ -1,88 +1,71 @@
-"""ANN serving loop: batched quantized MIP search over a (sharded) corpus.
+"""ANN serving loop, registry-driven: serve ANY registered index kind.
 
-The production layout (DESIGN.md §4): corpus row-sharded over the mesh,
-queries replicated, shard-local int8 scoring + local top-k inside
-``shard_map``, one k-sized all_gather merge.  On this container the same
-code serves from a host mesh.
+The index is chosen by a FAISS-style factory string (DESIGN.md §3) and
+built through ``repro.knn.make_index``; the request loop only speaks the
+unified ``Index`` protocol — ``search(queries, k, SearchParams)`` — so
+there are no index-specific branches here.  Sharded multi-device serving
+(corpus row-sharded over the mesh, shard-local top-k + one k-sized merge;
+DESIGN.md §4) lives in ``repro.launch.steps.make_retrieval_sharded`` and
+composes with the flat kind at production scale.
 
-    PYTHONPATH=src python -m repro.launch.serve --n 20000 --d 64 --batch 32
+    PYTHONPATH=src python -m repro.launch.serve --index hnsw32,lpq8 \
+        --n 20000 --d 64 --batch 32
+    PYTHONPATH=src python -m repro.launch.serve --index ivf64,lpq8 --nprobe 8
 """
 
 from __future__ import annotations
 
 import argparse
 import time
-from functools import partial
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
 
-from repro.core import distances as D
-from repro.core import quant as Qz
 from repro.data import synthetic
-from repro.knn import topk as T
-
-
-def make_sharded_searcher(mesh: Mesh, n_local: int, k: int, metric: str = "ip"):
-    """Build the shard_map'd search step over a row-sharded code corpus."""
-    axis = mesh.axis_names
-
-    def local_search(q_codes, shard_codes, shard_idx):
-        s = D.scores(q_codes, shard_codes, metric, quantized=True).astype(jnp.float32)
-        loc_s, loc_i = jax.lax.top_k(s, k)
-        return T.distributed_topk(
-            loc_s, loc_i.astype(jnp.int32), k, axis, shard_idx[0] * n_local
-        )
-
-    return shard_map(
-        local_search,
-        mesh=mesh,
-        in_specs=(P(), P(axis, None), P(axis)),
-        out_specs=(P(), P()),
-        check_vma=False,
-    )
+from repro.knn import SearchParams, make_index
 
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--index", default="flat,lpq8@gaussian:3",
+                    help="factory string, e.g. flat,lpq8 / ivf64,lpq8 / "
+                         "hnsw32,lpq8 / graph24,lpq8 / pq8+lpq")
     ap.add_argument("--n", type=int, default=20000)
     ap.add_argument("--d", type=int, default=64)
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--requests", type=int, default=20)
+    ap.add_argument("--nprobe", type=int, default=8)
+    ap.add_argument("--ef-search", type=int, default=100)
+    ap.add_argument("--chunk", type=int, default=16384)
     args = ap.parse_args()
 
-    n_dev = len(jax.devices())
-    mesh = jax.make_mesh((n_dev,), ("data",))
-    corpus, queries, metric = synthetic.load("product", args.n, args.batch * args.requests)
-
-    codes, params = Qz.quantize_corpus(corpus, scheme="gaussian", sigmas=3.0)
-    n_local = args.n // n_dev
-    codes = jax.device_put(
-        codes[: n_local * n_dev], NamedSharding(mesh, P(("data",), None))
+    corpus, queries, _metric = synthetic.load(
+        "product", args.n, args.batch * args.requests
     )
-    shard_idx = jax.device_put(
-        jnp.arange(n_dev, dtype=jnp.int32), NamedSharding(mesh, P(("data",)))
-    )
+    corpus = corpus[:, : args.d]
+    queries = queries[:, : args.d]
 
-    searcher = jax.jit(make_sharded_searcher(mesh, n_local, args.k, metric))
-    qfn = partial(Qz.quantize, params=params)
+    t0 = time.perf_counter()
+    index = make_index(args.index, corpus, key=jax.random.PRNGKey(0))
+    build_s = time.perf_counter() - t0
+    print(f"[serve] index={args.index} kind={index.kind} "
+          f"build={build_s:.2f}s memory={index.memory_bytes() / 1e6:.1f}MB")
 
-    # warmup + serve
-    q0 = qfn(queries[: args.batch])
-    jax.block_until_ready(searcher(q0, codes, shard_idx))
+    sp = SearchParams(chunk=args.chunk, nprobe=args.nprobe,
+                      ef_search=args.ef_search)
+
+    # warmup (compile) + serve
+    jax.block_until_ready(index.search(queries[: args.batch], args.k, sp).ids)
     t0 = time.perf_counter()
     served = 0
     for r in range(args.requests):
-        q = qfn(queries[r * args.batch : (r + 1) * args.batch])
-        s, ids = searcher(q, codes, shard_idx)
-        jax.block_until_ready(ids)
-        served += args.batch
+        q = queries[r * args.batch : (r + 1) * args.batch]
+        res = index.search(q, args.k, sp)
+        jax.block_until_ready(res.ids)
+        served += int(q.shape[0])
     dt = time.perf_counter() - t0
     print(f"[serve] {served} queries in {dt:.3f}s -> {served / dt:.1f} QPS "
-          f"(k={args.k}, corpus={n_local * n_dev}, devices={n_dev})")
+          f"(k={args.k}, corpus={index.n}, kind={index.kind})")
 
 
 if __name__ == "__main__":

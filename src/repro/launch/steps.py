@@ -152,10 +152,10 @@ def make_retrieval_sharded(
     lax.top_k over the sharded N axis makes GSPMD materialize and
     all-gather the FULL [Q, N] score matrix (measured: 480 GB temp /
     240 GB wire at PRODUCT60M scale — EXPERIMENTS.md §Perf C2)."""
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
 
     from repro.core import distances as D
+    from repro.dist.sharding import shard_map
     from repro.knn import topk as T
 
     axes = tuple(a for a in mesh.axis_names if a in ("data", "model"))

@@ -1,0 +1,74 @@
+"""Deterministic fallback for ``hypothesis`` when it is not installed.
+
+The property suites import ``given``/``settings``/``strategies`` from
+hypothesis when available (the ``[test]`` extra in pyproject.toml installs
+it; CI does).  On containers without it, this shim runs each property test
+over a fixed pseudo-random sample of the strategy space — deterministic
+(seeded per test name), so failures are reproducible, but far less
+thorough than real hypothesis.  It implements only the strategy surface
+these suites use: integers, floats, sampled_from.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+_DEFAULT_EXAMPLES = 8
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:  # mirrors `from hypothesis import strategies as st`
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        options = list(options)
+        return _Strategy(lambda rng: rng.choice(options))
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_kw):
+    """Records max_examples on the (already-wrapped) test function."""
+
+    def deco(fn):
+        fn._max_examples = min(max_examples, _DEFAULT_EXAMPLES)
+        return fn
+
+    return deco
+
+
+def given(**strategy_kwargs):
+    """Run the test over a deterministic sample of the strategy space."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = random.Random(zlib.adler32(fn.__name__.encode()))
+            n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+            for _ in range(n):
+                drawn = {k: s.example(rng) for k, s in strategy_kwargs.items()}
+                fn(*args, **drawn, **kwargs)
+
+        # pytest must see a no-arg test, not the strategy params (which it
+        # would otherwise resolve as fixtures)
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        wrapper._max_examples = _DEFAULT_EXAMPLES
+        return wrapper
+
+    return deco

@@ -4,7 +4,11 @@ packing."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # no hypothesis on this container: see pyproject [test]
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import pack as PK
 from repro.core import quant as Qz

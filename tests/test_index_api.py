@@ -1,0 +1,214 @@
+"""Unified index API: one parametrized suite over the whole registry.
+
+Every registered kind must round-trip build -> search -> save/load through
+the same call shape, honor QuantSpec, and return SearchResult with
+consistent shapes/dtypes; plus factory-string parse/round-trip cases.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant as Qz
+from repro.knn import (
+    IndexSpec,
+    QuantSpec,
+    SearchParams,
+    SearchResult,
+    kinds,
+    load_index,
+    make_index,
+    parse_factory,
+)
+
+K = 10
+
+# per-kind factory string (int8 arm) + build overrides kept small for CI
+CASES = {
+    "flat": ("flat,lpq8@gaussian:3", {}),
+    "ivf": ("ivf8,lpq8@gaussian:3", {"kmeans_iters": 4}),
+    "hnsw": ("hnsw8,lpq8@gaussian:3", {"ef_construction": 40, "batch_size": 128}),
+    "graph": ("graph16,lpq8@gaussian:3", {"n_seeds": 16}),
+    "pq": ("pq16+lpq", {"kmeans_iters": 4}),
+}
+
+FP32_CASES = {
+    "flat": "flat",
+    "ivf": "ivf8",
+    "hnsw": "hnsw8",
+    "graph": "graph16",
+    "pq": "pq16",
+}
+
+
+@pytest.fixture(scope="module")
+def corpus_queries():
+    corpus = jax.random.normal(jax.random.PRNGKey(0), (512, 32)) * 0.05
+    queries = jax.random.normal(jax.random.PRNGKey(1), (8, 32)) * 0.05
+    return corpus, queries
+
+
+@pytest.fixture(scope="module")
+def built(corpus_queries):
+    corpus, _q = corpus_queries
+    return {
+        kind: make_index(factory, corpus, key=jax.random.PRNGKey(0), **over)
+        for kind, (factory, over) in CASES.items()
+    }
+
+
+def test_registry_covers_all_cases():
+    assert set(kinds()) == set(CASES) == set(FP32_CASES)
+
+
+@pytest.mark.parametrize("kind", sorted(CASES))
+def test_same_call_shape_everywhere(kind, corpus_queries, built):
+    """The acceptance property: one SearchParams drives every kind."""
+    _corpus, queries = corpus_queries
+    sp = SearchParams(nprobe=8, ef_search=40, chunk=256)
+    res = built[kind].search(queries, K, sp)
+    assert isinstance(res, SearchResult)
+    assert res.scores.shape == (queries.shape[0], K)
+    assert res.ids.shape == (queries.shape[0], K)
+    assert res.scores.dtype == jnp.float32
+    assert res.ids.dtype == jnp.int32
+    assert res.stats["kind"] == kind
+    ids = np.asarray(res.ids)
+    assert ids.min() >= -1 and ids.max() < 512
+    # legacy pair protocol
+    scores, ids2 = res
+    np.testing.assert_array_equal(np.asarray(ids2), np.asarray(res.ids))
+    np.testing.assert_array_equal(np.asarray(res[1]), np.asarray(res.ids))
+
+
+@pytest.mark.parametrize("kind", sorted(CASES))
+def test_quant_spec_honored(kind, corpus_queries, built):
+    """The int8 arm must actually be smaller than the fp32 arm and (for
+    scalar-quantized kinds) hold int8 codes from the shared quant path."""
+    corpus, _q = corpus_queries
+    fp = make_index(FP32_CASES[kind], corpus, key=jax.random.PRNGKey(0),
+                    **CASES[kind][1])
+    q8 = built[kind]
+    if kind == "pq":  # lpq composes on the ADC tables, not the 1B codes
+        assert q8.lpq_tables and not fp.lpq_tables
+        return
+    assert q8.memory_bytes() < fp.memory_bytes()
+    assert q8.params is not None and q8.params.bits == 8
+    payload = q8.codes if kind == "flat" else q8.data
+    assert payload.dtype == jnp.int8
+
+
+@pytest.mark.parametrize("kind", sorted(CASES))
+def test_save_load_roundtrip(kind, corpus_queries, built, tmp_path):
+    _corpus, queries = corpus_queries
+    idx = built[kind]
+    path = str(tmp_path / f"{kind}.npz")
+    idx.save(path)
+    restored = load_index(path)
+    assert restored.kind == kind
+    sp = SearchParams(nprobe=8, ef_search=40)
+    a = idx.search(queries, K, sp)
+    b = restored.search(queries, K, sp)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_allclose(np.asarray(a.scores), np.asarray(b.scores),
+                               rtol=1e-6)
+    assert restored.memory_bytes() == idx.memory_bytes()
+
+
+def test_shared_quant_params_across_kinds(corpus_queries):
+    """Learn Eq. 1 constants once, share them across index components."""
+    corpus, queries = corpus_queries
+    params = Qz.learn_params(corpus, bits=8, scheme="gaussian", sigmas=3.0)
+    quant = QuantSpec(bits=8, scheme="gaussian", sigmas=3.0, params=params)
+    flat = make_index(IndexSpec(kind="flat", quant=quant), corpus)
+    ivf = make_index(IndexSpec(kind="ivf", quant=quant,
+                               params={"nlist": 8}), corpus)
+    assert flat.params is params and ivf.params is params
+    np.testing.assert_array_equal(np.asarray(flat.codes), np.asarray(ivf.data))
+
+
+def test_factory_parse_fields():
+    spec = parse_factory("ivf256,lpq8@global_minmax:2.5,l2")
+    assert spec.kind == "ivf"
+    assert spec.params["nlist"] == 256
+    assert spec.metric == "l2"
+    assert spec.quant == QuantSpec(bits=8, scheme="global_minmax", sigmas=2.5)
+
+    spec = parse_factory("pq64+lpq")
+    assert spec.kind == "pq"
+    assert spec.params == {"m": 64, "lpq_tables": True}
+    assert spec.quant is None
+
+    assert parse_factory("flat").quant is None
+    assert parse_factory("hnsw32,lpq4").quant.bits == 4
+    assert parse_factory("hnsw32").params["m"] == 32
+
+
+@pytest.mark.parametrize(
+    "factory",
+    ["flat", "flat,lpq8@gaussian:3", "ivf256,lpq8", "hnsw32,lpq8",
+     "pq64+lpq", "graph24,lpq8@global_absmax", "flat,lpq4,angular"],
+)
+def test_factory_string_roundtrip(factory):
+    spec = parse_factory(factory)
+    again = parse_factory(spec.to_factory())
+    assert dataclasses.asdict(again) == dataclasses.asdict(spec)
+
+
+@pytest.mark.parametrize(
+    "bad", ["", "lpq8", "flat,bogus", "flat9", "ivf,nope", "flat,lpq8,lpq4",
+            "ivf16,hnsw8", "flat,lpq8@nosuchscheme", "pq8,lpq4",
+            "pq8,lpq8@absmax", "flat,l2,ip"],
+)
+def test_factory_rejects_garbage(bad):
+    with pytest.raises((ValueError, KeyError)):
+        parse_factory(bad)
+
+
+def test_make_index_metric_override(corpus_queries):
+    """metric= is a default for factory strings (fragment wins) and an
+    explicit override for IndexSpec inputs."""
+    corpus, _q = corpus_queries
+    assert make_index("flat", corpus, metric="l2").metric == "l2"
+    assert make_index("flat,angular", corpus, metric="l2").metric == "angular"
+    assert make_index(IndexSpec(kind="flat"), corpus, metric="l2").metric == "l2"
+
+
+def test_search_result_is_a_pytree(corpus_queries, built):
+    """jitted callers could return the old (scores, ids) tuple; the
+    SearchResult replacement must stay a valid jax type."""
+    _corpus, queries = corpus_queries
+    idx = built["flat"]
+    res = jax.jit(lambda q: idx.search(q, K))(queries)
+    assert isinstance(res, SearchResult)
+    assert res.stats["kind"] == "flat"
+    eager = idx.search(queries, K)
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(eager.ids))
+
+
+def test_legacy_params_kwarg_requires_quantized_flag(corpus_queries):
+    """Pre-unification semantics: params= without quantized=True builds
+    fp32 (params was only read when quantized was set)."""
+    from repro.knn import FlatIndex
+
+    corpus, _q = corpus_queries
+    learned = Qz.learn_params(corpus, bits=8, scheme="gaussian", sigmas=3.0)
+    idx = FlatIndex.build(corpus, params=learned)
+    assert not idx.quantized and idx.codes is None
+
+
+def test_quantized_beats_random_recall(corpus_queries, built):
+    """Sanity: every int8 index returns mostly true neighbors on an easy
+    narrow-band corpus (exact-scan ground truth)."""
+    corpus, queries = corpus_queries
+    gt = np.asarray(make_index("flat", corpus).search(queries, K).ids)
+    sp = SearchParams(nprobe=8, ef_search=80)
+    for kind, idx in built.items():
+        ids = np.asarray(idx.search(queries, K, sp).ids)
+        overlap = np.mean([
+            len(set(a) & set(b)) / K for a, b in zip(gt, ids)
+        ])
+        assert overlap > 0.5, (kind, overlap)

@@ -88,8 +88,9 @@ def test_merge_topk():
 
 def test_distributed_topk_matches_global():
     """shard_map distributed top-k == single-host top-k."""
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.dist.sharding import shard_map
 
     n_dev = len(jax.devices())
     mesh = jax.make_mesh((n_dev,), ("data",))

@@ -4,7 +4,11 @@ invariants — Definition 2 and the structural guarantees of Eq. 1."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # no hypothesis on this container: see pyproject [test]
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import quant as Qz
 from repro.core import distances as D
