@@ -1,0 +1,111 @@
+"""Kernel-level microbenchmark for the scoring engine's dispatch table:
+qmip / ql2 x {fp32, int8, int4-packed} x {fused, unfused}, writing the
+perf-trajectory file ``BENCH_kernels.json`` (plus the harness CSV rows).
+
+"Unfused" scores the full [Q, N] matrix then top-ks it (the historical
+hot path); "fused" streams corpus tiles through the running-top-k Pallas
+kernel, never materializing [Q, N].  On this CPU container kernels run in
+interpret mode, so absolute numbers are structural — the file's value is
+the *trajectory* (same shapes, same arms, every CI run) and the
+fused-vs-unfused / packed-vs-int8 ratios.
+
+    PYTHONPATH=src python -m benchmarks.bench_kernels            # full
+    PYTHONPATH=src python -m benchmarks.bench_kernels --smoke    # CI
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core import distances as D
+from repro.core import pack as PK
+from repro.kernels import ops as K
+
+K_TOP = 10
+
+
+def _arms(n: int, d: int, q_rows: int):
+    """(name, fused_fn, unfused_fn) per metric x precision cell."""
+    kq, kx = jax.random.split(jax.random.PRNGKey(0))
+    qf = jax.random.normal(kq, (q_rows, d), jnp.float32)
+    xf = jax.random.normal(kx, (n, d), jnp.float32)
+    q8 = jax.random.randint(kq, (q_rows, d), -128, 128, dtype=jnp.int8)
+    x8 = jax.random.randint(kx, (n, d), -128, 128, dtype=jnp.int8)
+    q4 = jax.random.randint(kq, (q_rows, d), -8, 8, dtype=jnp.int8)
+    x4p = PK.pack_int4(jax.random.randint(kx, (n, d), -8, 8, dtype=jnp.int8))
+
+    def unfused(score):
+        return lambda: jax.lax.top_k(score().astype(jnp.float32), K_TOP)
+
+    cells = []
+    for metric in ("ip", "l2"):
+        fp_score = (lambda m=metric: D.scores(qf, xf, m))
+        i8_score = (lambda m=metric:
+                    K.qmip(q8, x8) if m == "ip" else K.ql2(q8, x8))
+        i4_score = (lambda m=metric:
+                    K.qmip4(q4, x4p) if m == "ip" else K.ql24(q4, x4p))
+        cells += [
+            (f"{metric}/fp32/unfused", unfused(fp_score)),
+            (f"{metric}/fp32/fused",
+             lambda m=metric: K.fused_topk(qf, xf, K_TOP, m)),
+            (f"{metric}/int8/unfused", unfused(i8_score)),
+            (f"{metric}/int8/fused",
+             lambda m=metric: K.fused_topk(q8, x8, K_TOP, m)),
+            (f"{metric}/int4_packed/unfused", unfused(i4_score)),
+            (f"{metric}/int4_packed/fused",
+             lambda m=metric: K.fused_topk(q4, x4p, K_TOP, m, packed=True)),
+        ]
+    return cells
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=8192)
+    ap.add_argument("--d", type=int, default=128)
+    ap.add_argument("--q", type=int, default=32)
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes + 1 repeat (the CI interpret-mode check)")
+    args = ap.parse_args(argv)
+
+    n, d, q_rows = (1024, 64, 8) if args.smoke else (args.n, args.d, args.q)
+    repeats = 1 if args.smoke else 3
+
+    results = {
+        "meta": {
+            "n": n, "d": d, "q": q_rows, "k": K_TOP,
+            "backend": jax.default_backend(),
+            "platform": platform.platform(),
+            "interpret": jax.default_backend() != "tpu",
+            "smoke": bool(args.smoke),
+        },
+        "cells": {},
+    }
+    for name, fn in _arms(n, d, q_rows):
+        sec = timeit(fn, repeats=repeats, warmup=1)
+        results["cells"][name] = {"us_per_call": sec * 1e6}
+        emit(f"bench_kernels/{name}", sec, f"n={n} d={d} q={q_rows}")
+
+    # headline ratios the engine refactor is accountable for (kept apart
+    # from cells so every cell has the same us_per_call schema)
+    cells = results["cells"]
+    results["ratios"] = {
+        f"{metric}/int8/fused_over_unfused":
+            cells[f"{metric}/int8/fused"]["us_per_call"]
+            / max(cells[f"{metric}/int8/unfused"]["us_per_call"], 1e-9)
+        for metric in ("ip", "l2")
+    }
+
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    print(f"[bench_kernels] wrote {args.out} ({len(cells)} cells)")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,7 @@ import sys
 import traceback
 
 from benchmarks import (
+    bench_kernels,
     fig1_distribution,
     fig2_qps_recall,
     kernel_bench,
@@ -27,6 +28,9 @@ SUITES = {
     "table2": table2_exact_recall.main,
     "retrieval": retrieval_bench.main,
     "kernels": kernel_bench.main,
+    # engine dispatch-table microbench (smoke shapes when run via the
+    # orchestrator; invoke the module directly for full sizes)
+    "bench_kernels": lambda: bench_kernels.main(["--smoke"]),
     "table3": table3_graph_recall.main,
     "table1": table1_build_memory.main,
     "fig2": fig2_qps_recall.main,

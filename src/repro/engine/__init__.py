@@ -1,0 +1,26 @@
+# The scoring engine (DESIGN.md §8): CodeStore/PQStore own corpus storage
+# at any precision (fp32 / int8 / bit-packed int4 / PQ codewords) with
+# honest memory accounting; the Scorer owns the whole query hot path —
+# metric x bits kernel dispatch, chunking, padding, invalid-id masking and
+# streaming top-k — so index classes hold structure and call
+# ``engine.topk`` / ``topk_among`` / ``make_score_set`` and nothing else.
+from repro.engine.scorer import (
+    make_score_set,
+    merge_topk,
+    pad_rows,
+    search_stats,
+    topk,
+    topk_among,
+)
+from repro.engine.store import CodeStore, PQStore
+
+__all__ = [
+    "CodeStore",
+    "PQStore",
+    "topk",
+    "topk_among",
+    "make_score_set",
+    "search_stats",
+    "merge_topk",
+    "pad_rows",
+]

@@ -1,0 +1,345 @@
+"""The scoring engine: every index's query hot path in one place.
+
+``topk`` / ``topk_among`` / ``make_score_set`` own metric x bits dispatch,
+chunking, corpus padding, invalid-id masking and streaming top-k, so index
+classes hold *structure* (lists, graphs, codebooks) and delegate every
+score to the engine.  Padding is id-masked here, centrally — the L2
+zero-sentinel hazard (a zero pad row out-scoring real rows under negated
+L2) cannot reach callers, because no caller sees pad rows at all.
+
+Kernel dispatch table (metric x storage):
+
+    storage          ip               l2               angular
+    fp32             fused_topk       fused_topk       scan + angular
+    int8             fused_topk       fused_topk       scan + qangular
+    int4 packed      fused_topk4      fused_topk4      scan + unpack + qangular
+    pq codes         ADC LUT scan     ADC LUT scan     (unsupported)
+
+`fused_topk*` are the streaming Pallas kernels (score tiles + running
+top-k carried in VMEM, no [Q, N] matrix in HBM); the scan paths stream
+`lax.scan` chunks through ``merge_topk`` with the same masking contract.
+
+Row-id bases: shard-local stores carry ``base`` and the engine rebases
+returned ids, so the distributed merge (`knn.topk.distributed_topk`)
+composes without per-caller offset arithmetic.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distances as D
+from repro.core import pack as PK
+from repro.engine.store import CodeStore, PQStore
+from repro.kernels import ops as K
+
+NEG = float(jnp.finfo(jnp.float32).min)
+
+#: corpus rows per fused-kernel tile (reporting; the kernel may shrink it
+#: for small corpora)
+FUSED_TILE = 512
+
+
+ScoreSet = Callable[[jax.Array, jax.Array], jax.Array]
+
+
+# --------------------------------------------------------------------------
+# generic streaming machinery (canonical home; knn.topk re-exports)
+# --------------------------------------------------------------------------
+
+def merge_topk(
+    scores_a: jax.Array,
+    ids_a: jax.Array,
+    scores_b: jax.Array,
+    ids_b: jax.Array,
+    k: int,
+):
+    """Merge two [Q, ka]/[Q, kb] candidate sets into the best k."""
+    s = jnp.concatenate([scores_a, scores_b], axis=-1)
+    i = jnp.concatenate([ids_a, ids_b], axis=-1)
+    top_s, pos = jax.lax.top_k(s, k)
+    top_i = jnp.take_along_axis(i, pos, axis=-1)
+    return top_s, top_i
+
+
+def pad_rows(a: jax.Array, multiple: int) -> tuple[jax.Array, int]:
+    """Zero-pad rows to a multiple; engine paths id-mask the pad rows."""
+    n = a.shape[0]
+    target = ((n + multiple - 1) // multiple) * multiple
+    if target == n:
+        return a, n
+    return jnp.pad(a, ((0, target - n), (0, 0))), n
+
+
+# --------------------------------------------------------------------------
+# stats: uniform per-search accounting for SearchResult.stats
+# --------------------------------------------------------------------------
+
+def search_stats(store, *, candidates: int, chunks: int, rows_read: int) -> dict[str, Any]:
+    """The uniform accounting block every kind reports.
+
+    candidates  rows scored per query (an upper bound for graph walks,
+                whose while-loops stop early on convergence)
+    chunks      corpus tiles / scan chunks touched
+    bytes_read  payload bytes gathered or streamed for the whole batch
+    """
+    return {
+        "candidates": int(candidates),
+        "chunks": int(chunks),
+        "bytes_read": int(rows_read) * store.row_bytes,
+        "bits": int(getattr(store, "bits", 8)),
+        "packed": bool(getattr(store, "packed", False)),
+    }
+
+
+# --------------------------------------------------------------------------
+# score-set closures (graph walks gather rows by id)
+# --------------------------------------------------------------------------
+
+def make_score_set(store: CodeStore, metric: str) -> ScoreSet:
+    """(query [d], ids [m]) -> larger-is-closer [m] f32 over store rows."""
+
+    def score_set(q: jax.Array, ids: jax.Array) -> jax.Array:
+        vecs = store.take(ids)
+        return D.scores(
+            q[None], vecs, metric, quantized=store.quantized
+        )[0].astype(jnp.float32)
+
+    return score_set
+
+
+# --------------------------------------------------------------------------
+# full-corpus streaming top-k
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("k", "metric", "chunk"))
+def _scan_topk(q: jax.Array, store: CodeStore, k: int, metric: str, chunk: int):
+    """Unfused fallback: lax.scan over corpus chunks + merge_topk.
+
+    Used for metrics the fused kernel does not cover (angular needs the
+    per-row norm rescale).  Packed tiles are unpacked chunk-by-chunk — the
+    full-width corpus never materializes.
+    """
+    n = store.n
+    Q = q.shape[0]
+
+    def tile_scores(tile):
+        rows = PK.unpack_int4(tile) if store.packed else tile
+        return D.scores(q, rows, metric, quantized=store.quantized).astype(
+            jnp.float32
+        )
+
+    if n <= chunk:
+        s = tile_scores(store.data)
+        ids = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], s.shape)
+        return merge_topk(
+            jnp.full((Q, k), NEG, jnp.float32), jnp.full((Q, k), -1, jnp.int32),
+            s, ids, k,
+        )
+
+    padded, _ = pad_rows(store.data, chunk)
+    n_chunks = padded.shape[0] // chunk
+    tiles = padded.reshape(n_chunks, chunk, padded.shape[-1])
+
+    init = (jnp.full((Q, k), NEG, jnp.float32), jnp.full((Q, k), -1, jnp.int32))
+
+    def step(carry, inp):
+        best_s, best_i = carry
+        tile, tile_idx = inp
+        s = tile_scores(tile)
+        gid = tile_idx * chunk + jnp.arange(chunk, dtype=jnp.int32)[None, :]
+        ok = gid < n                                   # id-mask at the source
+        s = jnp.where(ok, s, NEG)
+        ids = jnp.where(ok, jnp.broadcast_to(gid, s.shape), -1)
+        return merge_topk(best_s, best_i, s, ids, k), None
+
+    (best_s, best_i), _ = jax.lax.scan(
+        step, init, (tiles, jnp.arange(n_chunks, dtype=jnp.int32))
+    )
+    return best_s, best_i
+
+
+def topk(
+    queries: jax.Array,
+    store: "CodeStore | PQStore",
+    k: int,
+    metric: str,
+    *,
+    chunk: int = 16384,
+    prepared: bool = False,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+):
+    """Exact top-k of the whole store: (scores [Q, k] f32, ids, stats).
+
+    When k > n the tail is padded with (-inf, -1) — the uniform
+    ``SearchResult`` contract.  ``prepared=True`` means ``queries`` are
+    already in the store's code space (skip ``encode_queries``).
+    ``chunk`` sizes the scan chunks on the unfused path and caps the
+    fused kernel's corpus tile (the working-set bound either way).
+    """
+    if isinstance(store, PQStore):
+        if metric == "angular":
+            raise ValueError(
+                "PQ/ADC scoring supports ip and l2 only (see the dispatch "
+                "table in this module's docstring)"
+            )
+        s, i = _topk_pq(queries, store, k, metric, chunk)
+        if s.shape[1] < k:               # uniform [Q, k] contract: -1 pads
+            s = jnp.pad(s, ((0, 0), (0, k - s.shape[1])), constant_values=NEG)
+            i = jnp.pad(i, ((0, 0), (0, k - i.shape[1])), constant_values=-1)
+        n_chunks = max(1, -(-store.n // chunk))
+        stats = search_stats(store, candidates=store.n, chunks=n_chunks,
+                             rows_read=store.n)
+        return s, i, stats
+
+    q = queries if prepared else store.encode_queries(queries)
+    k_eff = min(k, store.n)
+
+    tile = min(FUSED_TILE, max(8, chunk))
+    # The fused Pallas kernel is the TPU hot path (or forced via
+    # interpret=True for CI wiring tests).  Off-TPU, interpret mode is a
+    # parity tool, not a serving path — the XLA streaming scan is ~20x
+    # faster there and keeps the same O(Q * (k + chunk)) working set.
+    # Corpora that fit one tile (IVF centroids, graph seeds) also skip
+    # the kernel: there is nothing to stream.
+    fused = (
+        metric in ("ip", "l2")
+        and use_pallas
+        and store.n > tile
+        and (bool(interpret) or jax.default_backend() == "tpu")
+    )
+    if fused:
+        s, i = K.fused_topk(
+            q, store.data, k_eff, metric, packed=store.packed, bn=tile,
+            interpret=interpret,
+        )
+        chunks = -(-store.n // tile)
+        # the fused grid re-streams the corpus once per BQ-row query tile
+        # (queries are VMEM-resident within a tile, not across tiles)
+        passes = max(1, -(-q.shape[0] // K.fused_query_tile()))
+    else:
+        s, i = _scan_topk(q, store, k_eff, metric, chunk)
+        chunks = max(1, -(-store.n // chunk))
+        passes = 1                       # one scan, all queries resident
+
+    if k_eff < k:                        # uniform [Q, k] contract: -1 pads
+        s = jnp.pad(s, ((0, 0), (0, k - k_eff)), constant_values=NEG)
+        i = jnp.pad(i, ((0, 0), (0, k - k_eff)), constant_values=-1)
+    if store.base:
+        i = jnp.where(i >= 0, i + store.base, -1)
+    stats = search_stats(store, candidates=store.n, chunks=chunks,
+                         rows_read=store.n * passes)
+    return s, i, stats
+
+
+# --------------------------------------------------------------------------
+# candidate-set top-k (IVF fine scoring and friends)
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("k", "metric"))
+def topk_among(
+    q_codes: jax.Array,
+    store: CodeStore,
+    cand_ids: jax.Array,
+    k: int,
+    metric: str,
+):
+    """Top-k restricted to per-query candidate lists.
+
+    q_codes [Q, d_eff] prepared queries; cand_ids [Q, L] (-1 = empty
+    slot).  Gathers store rows (unpacking int4 only for what was
+    gathered), scores, masks empties, returns ([Q, k], [Q, k]).
+    """
+    L = cand_ids.shape[1]
+    k_eff = min(k, L)
+
+    def per_query(qv, ids):
+        ok = ids >= 0
+        rows = store.take(jnp.where(ok, ids, 0))
+        s = D.scores(qv[None], rows, metric, quantized=store.quantized)[0]
+        s = jnp.where(ok, s.astype(jnp.float32), NEG)
+        top_s, pos = jax.lax.top_k(s, k_eff)
+        top_i = jnp.where(top_s > NEG, ids[pos], -1).astype(jnp.int32)
+        return top_s, top_i
+
+    s, i = jax.vmap(per_query)(q_codes, cand_ids)
+    if k_eff < k:
+        s = jnp.pad(s, ((0, 0), (0, k - k_eff)), constant_values=NEG)
+        i = jnp.pad(i, ((0, 0), (0, k - k_eff)), constant_values=-1)
+    if store.base:
+        i = jnp.where(i >= 0, i + store.base, -1)
+    return s, i
+
+
+# --------------------------------------------------------------------------
+# PQ: ADC LUT streaming scan
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("k", "metric", "chunk"))
+def _topk_pq(queries: jax.Array, store: PQStore, k: int, metric: str, chunk: int):
+    """Asymmetric distance computation with a streaming code scan.
+
+    Per-query LUT of query-to-codeword scores, then a gather-sum over the
+    code matrix — chunked with a running top-k, so the [Q, N] ADC score
+    matrix is never materialized for large N.  ``lpq_tables`` is the
+    paper's composition: the LUT entries themselves are int8-quantized
+    (Eq. 1, per-table abs-max) and the scan accumulates integers.
+    """
+    q = jnp.asarray(queries, jnp.float32)
+    Q, d = q.shape
+    ds = d // store.m
+    qs = q.reshape(Q, store.m, ds)
+    if metric == "ip":
+        lut = jnp.einsum("qmd,mkd->qmk", qs, store.codebooks)
+    else:                                               # l2 (negated)
+        diff = qs[:, :, None, :] - store.codebooks[None]
+        lut = -jnp.sum(diff * diff, -1)
+
+    if store.lpq_tables:
+        amax = jnp.maximum(jnp.max(jnp.abs(lut)), 1e-12)
+        lut = jnp.clip(jnp.round(lut / amax * 127.0), -128, 127)
+        lut = lut.astype(jnp.int32)                     # int8-valued
+
+    n = store.n
+    k_eff = min(k, n)
+
+    def adc(tile):                                      # [c, M] -> [Q, c]
+        idx = tile.T[None].astype(jnp.int32)            # [1, M, c]
+        return jnp.sum(
+            jnp.take_along_axis(lut, idx, axis=2), axis=1
+        ).astype(jnp.float32)
+
+    if n <= chunk:
+        s = adc(store.codes)
+        ids = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], s.shape)
+        best = merge_topk(
+            jnp.full((Q, k_eff), NEG, jnp.float32),
+            jnp.full((Q, k_eff), -1, jnp.int32), s, ids, k_eff,
+        )
+    else:
+        padded, _ = pad_rows(store.codes, chunk)
+        n_chunks = padded.shape[0] // chunk
+        tiles = padded.reshape(n_chunks, chunk, store.m)
+
+        def step(carry, inp):
+            tile, tile_idx = inp
+            s = adc(tile)
+            gid = tile_idx * chunk + jnp.arange(chunk, dtype=jnp.int32)[None, :]
+            ok = gid < n
+            s = jnp.where(ok, s, NEG)
+            ids = jnp.where(ok, jnp.broadcast_to(gid, s.shape), -1)
+            return merge_topk(*carry, s, ids, k_eff), None
+
+        best, _ = jax.lax.scan(
+            step,
+            (jnp.full((Q, k_eff), NEG, jnp.float32),
+             jnp.full((Q, k_eff), -1, jnp.int32)),
+            (tiles, jnp.arange(n_chunks, dtype=jnp.int32)),
+        )
+
+    return best

@@ -1,0 +1,186 @@
+"""Corpus storage for the scoring engine: ``CodeStore`` and ``PQStore``.
+
+A ``CodeStore`` owns one corpus payload at any precision the paper's Eq. 1
+family supports — fp32 vectors, int8 codes, or bit-packed int4 codes
+(two per byte, via :mod:`repro.core.pack`) — plus the quantization
+constants and a row-id ``base`` so shard-local stores rebase their ids for
+the distributed merge.  Every byte the index holds for *vector* data lives
+here, so ``memory_bytes()`` is the honest Table-1/2 accounting for every
+index kind (the 4-bit arm really is half the int8 arm).
+
+``PQStore`` is the product-quantization counterpart: 1-byte codewords plus
+the per-subspace codebooks the ADC scan gathers from.
+
+Stores are frozen dataclass-pytrees: jit/vmap-safe, and their static
+fields (n, d, bits, packed, base) ride in the treedef so jitted engine
+entry points specialize per storage layout.
+
+Odd dimensions under packing: int4 packing needs an even dim, so the
+store pads codes with one zero-code column before packing and
+``encode_queries`` appends the matching zero column — code 0 x code 0
+contributes 0 to IP and L2 alike, so scores are unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pack as PK
+from repro.core import quant as Qz
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CodeStore:
+    """One corpus, one precision, one id space."""
+
+    n: int = dataclasses.field(metadata=dict(static=True))
+    d: int = dataclasses.field(metadata=dict(static=True))       # logical dim
+    bits: int = dataclasses.field(metadata=dict(static=True))    # 32 == fp32
+    packed: bool = dataclasses.field(metadata=dict(static=True))
+    data: jax.Array           # [N, d] f32 | [N, d_eff] int | [N, d_eff/2] u8
+    params: Optional[Qz.QuantParams]
+    base: int = dataclasses.field(default=0, metadata=dict(static=True))
+
+    # -- construction ------------------------------------------------------
+    @staticmethod
+    def dense(vectors: jax.Array, base: int = 0) -> "CodeStore":
+        """fp32 storage (the unquantized arm)."""
+        vectors = jnp.asarray(vectors, jnp.float32)
+        n, d = vectors.shape
+        return CodeStore(n=n, d=d, bits=32, packed=False,
+                         data=vectors, params=None, base=base)
+
+    @staticmethod
+    def from_codes(
+        codes: jax.Array,
+        params: Qz.QuantParams,
+        *,
+        pack: bool = False,
+        base: int = 0,
+    ) -> "CodeStore":
+        """Wrap already-encoded integer codes; optionally bit-pack int4."""
+        n, d = codes.shape
+        if pack:
+            assert params.bits == 4, "packing is the 4-bit storage layout"
+            if d % 2:
+                codes = jnp.pad(codes, ((0, 0), (0, 1)))   # zero-code column
+            codes = PK.pack_int4(codes)
+        return CodeStore(n=n, d=d, bits=params.bits, packed=pack,
+                         data=codes, params=params, base=base)
+
+    # -- shape/metadata ----------------------------------------------------
+    @property
+    def quantized(self) -> bool:
+        return self.bits < 32
+
+    @property
+    def d_eff(self) -> int:
+        """Code width after the even-dim pad (== d unless packed odd-d)."""
+        return self.data.shape[1] * 2 if self.packed else self.data.shape[1]
+
+    @property
+    def row_bytes(self) -> int:
+        """Bytes of payload read to score one corpus row."""
+        return int(self.data.shape[1]) * self.data.dtype.itemsize
+
+    def memory_bytes(self) -> int:
+        """Payload + Eq. 1 constants — the Table 1/2 memory column."""
+        total = int(self.data.size) * self.data.dtype.itemsize
+        if self.params is not None:
+            total += 3 * self.d * 4                        # lo / hi / zero f32
+        return total
+
+    # -- views -------------------------------------------------------------
+    def encode_queries(self, queries: jax.Array) -> jax.Array:
+        """h(q) of Definition 2: map queries into the store's code space."""
+        from repro.kernels import ops as K
+
+        if not self.quantized:
+            return jnp.asarray(queries, jnp.float32)
+        p = self.params
+        q = K.quantize(queries, p.lo, p.hi, p.zero, bits=p.bits)
+        if self.packed and self.d_eff != self.d:
+            q = jnp.pad(q, ((0, 0), (0, self.d_eff - self.d)))
+        return q
+
+    def unpacked(self) -> jax.Array:
+        """Full-width payload view ([N, d_eff]); unpacks int4 on the fly."""
+        return PK.unpack_int4(self.data) if self.packed else self.data
+
+    def take(self, ids: jax.Array) -> jax.Array:
+        """Gather rows by id, returned at full width (graph-walk path:
+        gather the *packed* rows, then shift-mask only what was touched)."""
+        rows = self.data[ids]
+        return PK.unpack_int4(rows) if self.packed else rows
+
+    # -- disk round-trip fragments ----------------------------------------
+    def state(self) -> tuple[dict[str, Any], dict[str, Any]]:
+        arrays: dict[str, Any] = {"data": self.data}
+        meta: dict[str, Any] = {
+            "store": {"n": self.n, "d": self.d, "bits": self.bits,
+                      "packed": self.packed, "base": self.base,
+                      "quant": None},
+        }
+        if self.params is not None:
+            arrays.update(q_lo=self.params.lo, q_hi=self.params.hi,
+                          q_zero=self.params.zero)
+            meta["store"]["quant"] = {"bits": self.params.bits,
+                                      "scheme": self.params.scheme}
+        return arrays, meta
+
+    @staticmethod
+    def from_state(arrays: dict[str, Any], meta: dict[str, Any]) -> "CodeStore":
+        sm = meta["store"]
+        params = None
+        if sm["quant"] is not None:
+            params = Qz.QuantParams(
+                lo=jnp.asarray(arrays["q_lo"]),
+                hi=jnp.asarray(arrays["q_hi"]),
+                zero=jnp.asarray(arrays["q_zero"]),
+                bits=int(sm["quant"]["bits"]),
+                scheme=str(sm["quant"]["scheme"]),
+            )
+        return CodeStore(
+            n=int(sm["n"]), d=int(sm["d"]), bits=int(sm["bits"]),
+            packed=bool(sm["packed"]), data=jnp.asarray(arrays["data"]),
+            params=params, base=int(sm["base"]),
+        )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PQStore:
+    """Product-quantization storage: codewords + per-subspace codebooks."""
+
+    n: int = dataclasses.field(metadata=dict(static=True))
+    m: int = dataclasses.field(metadata=dict(static=True))       # subspaces
+    lpq_tables: bool = dataclasses.field(metadata=dict(static=True))
+    codes: jax.Array          # [N, M] uint8
+    codebooks: jax.Array      # [M, 256, d/M] f32
+
+    @property
+    def row_bytes(self) -> int:
+        return self.m                                     # 1 byte / subspace
+
+    def memory_bytes(self) -> int:
+        return int(self.codes.size) + int(self.codebooks.size) * 4
+
+    def state(self) -> tuple[dict[str, Any], dict[str, Any]]:
+        arrays = {"codes": self.codes, "codebooks": self.codebooks}
+        meta = {"store": {"n": self.n, "m": self.m,
+                          "lpq_tables": self.lpq_tables}}
+        return arrays, meta
+
+    @staticmethod
+    def from_state(arrays: dict[str, Any], meta: dict[str, Any]) -> "PQStore":
+        sm = meta["store"]
+        return PQStore(
+            n=int(sm["n"]), m=int(sm["m"]), lpq_tables=bool(sm["lpq_tables"]),
+            codes=jnp.asarray(arrays["codes"]),
+            codebooks=jnp.asarray(arrays["codebooks"]),
+        )

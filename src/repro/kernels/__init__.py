@@ -1,8 +1,9 @@
 # Pallas TPU kernels for the paper's compute hot-spots:
-#   qmip     — fused int8 maximum-inner-product scoring (the query hot path)
-#   ql2      — fused int8 negated squared-L2 scoring
-#   quantize — Eq. 1 clamped-linear fp32 -> int8 corpus compression
+#   qmip/ql2     — fused int8 MIP / negated-L2 scoring (the query hot path)
+#   qmip4/ql24   — int4 unpack-in-kernel variants over bit-packed codes
+#   fused_topk   — streaming corpus scan + running top-k (no [Q, N] in HBM)
+#   quantize     — Eq. 1 clamped-linear fp32 -> int8/int4 corpus compression
 # Each has a pure-jnp oracle in ref.py; ops.py is the public jit'd surface.
-from repro.kernels.ops import qmip, ql2, quantize
+from repro.kernels.ops import fused_topk, qmip, qmip4, ql2, ql24, quantize
 
-__all__ = ["qmip", "ql2", "quantize"]
+__all__ = ["qmip", "qmip4", "ql2", "ql24", "fused_topk", "quantize"]

@@ -18,6 +18,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import fused_topk as _fused
+from repro.kernels import packed as _packed
 from repro.kernels import qmip as _qmip
 from repro.kernels import ql2 as _ql2
 from repro.kernels import quantize as _quantize
@@ -88,6 +90,131 @@ def ql2(
     xp = _pad_rows(x_codes, _round_up(N, bn))
     out = _ql2.ql2_pallas(qp, xp, bq=bq, bn=bn, interpret=interp)
     return out[:Q, :N]
+
+
+def fused_query_tile() -> int:
+    """Query rows per fused-kernel tile — the corpus re-stream granularity
+    (engine stats derive bytes_read from it; one source of truth)."""
+    return _fused.BQ
+
+
+def _split_nibble_queries(q_codes: jax.Array):
+    """[Q, d] int4-valued codes -> the (even, odd) dim halves [Q, d/2]."""
+    assert q_codes.shape[1] % 2 == 0, q_codes.shape
+    return q_codes[:, 0::2], q_codes[:, 1::2]
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def qmip4(
+    q_codes: jax.Array,
+    packed: jax.Array,
+    *,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """int4 MIP scores [Q, N] int32 over bit-packed corpus codes.
+
+    ``q_codes`` are full-width [Q, d] int4-valued int8 (queries stay
+    unpacked — they are tiny); ``packed`` is [N, d/2] uint8.
+    """
+    if not use_pallas:
+        return _ref.qmip4_ref(q_codes, packed)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    Q = q_codes.shape[0]
+    N = packed.shape[0]
+    qe, qo = _split_nibble_queries(q_codes)
+    bq = _pick_tile(Q, _packed.BQ)
+    bn = _pick_tile(N, _packed.BN)
+    qe = _pad_rows(qe, _round_up(Q, bq))
+    qo = _pad_rows(qo, _round_up(Q, bq))
+    xp = _pad_rows(packed, _round_up(N, bn))
+    out = _packed.qmip4_pallas(qe, qo, xp, bq=bq, bn=bn, interpret=interp)
+    return out[:Q, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def ql24(
+    q_codes: jax.Array,
+    packed: jax.Array,
+    *,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """int4 negated squared-L2 scores [Q, N] int32 over packed codes."""
+    if not use_pallas:
+        return _ref.ql24_ref(q_codes, packed)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    Q = q_codes.shape[0]
+    N = packed.shape[0]
+    qe, qo = _split_nibble_queries(q_codes)
+    bq = _pick_tile(Q, _packed.BQ)
+    bn = _pick_tile(N, _packed.BN)
+    qe = _pad_rows(qe, _round_up(Q, bq))
+    qo = _pad_rows(qo, _round_up(Q, bq))
+    xp = _pad_rows(packed, _round_up(N, bn))
+    out = _packed.ql24_pallas(qe, qo, xp, bq=bq, bn=bn, interpret=interp)
+    return out[:Q, :N]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "metric", "packed", "bn", "use_pallas", "interpret"),
+)
+def fused_topk(
+    q: jax.Array,
+    x: jax.Array,
+    k: int,
+    metric: str,
+    *,
+    packed: bool = False,
+    bn: int | None = None,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+):
+    """Streaming fused score + top-k: ([Q, k] f32 scores, [Q, k] i32 ids).
+
+    ``metric`` is ``ip`` or ``l2`` (angular needs norm rescale — engine
+    routes it to the unfused scan).  With ``packed=True``, ``x`` is
+    [N, d/2] uint8 int4 codes and ``q`` full-width [Q, d] int4-valued
+    int8.  ``bn`` caps the corpus tile (the VMEM working-set knob).  The
+    [Q, N] score matrix never reaches HBM on the Pallas path;
+    ``use_pallas=False`` is the XLA reference (materializes scores, used
+    for parity tests and as the shard_map cell fallback).
+    """
+    assert metric in ("ip", "l2"), metric
+    Q = q.shape[0]
+    N = x.shape[0]
+    k = min(k, N)
+    if not use_pallas:
+        if packed:
+            s = _ref.qmip4_ref(q, x) if metric == "ip" else _ref.ql24_ref(q, x)
+        elif jnp.issubdtype(q.dtype, jnp.integer):
+            s = _ref.qmip_ref(q, x) if metric == "ip" else _ref.ql2_ref(q, x)
+        else:
+            from repro.core import distances as D
+
+            s = D.scores(q, x, metric)
+        return _ref.topk_ref(s, k, N)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    bq = _pick_tile(Q, _fused.BQ)
+    bn = _pick_tile(N, min(bn, _fused.BN) if bn else _fused.BN)
+    if packed:
+        qe, qo = _split_nibble_queries(q)
+        qe = _pad_rows(qe, _round_up(Q, bq))
+        qo = _pad_rows(qo, _round_up(Q, bq))
+        xp = _pad_rows(x, _round_up(N, bn))
+        s, i = _fused.fused_topk4_pallas(
+            qe, qo, xp, k=k, metric=metric, n_valid=N,
+            bq=bq, bn=bn, interpret=interp,
+        )
+    else:
+        qp = _pad_rows(q, _round_up(Q, bq))
+        xp = _pad_rows(x, _round_up(N, bn))
+        s, i = _fused.fused_topk_pallas(
+            qp, xp, k=k, metric=metric, n_valid=N,
+            bq=bq, bn=bn, interpret=interp,
+        )
+    return s[:Q], i[:Q]
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "use_pallas", "interpret"))

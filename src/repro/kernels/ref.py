@@ -26,6 +26,40 @@ def ql2_ref(q_codes: jax.Array, x_codes: jax.Array) -> jax.Array:
     return -jnp.sum(diff * diff, axis=-1).astype(jnp.int32)
 
 
+def _unpack_int4_ref(packed: jax.Array) -> jax.Array:
+    """[N, d/2] uint8 -> [N, d] int32 nibbles in [-8, 7] (oracle-local)."""
+    lo = (packed & 0x0F).astype(jnp.int32) - 8
+    hi = ((packed >> 4) & 0x0F).astype(jnp.int32) - 8
+    n, half = packed.shape
+    return jnp.stack([lo, hi], axis=-1).reshape(n, half * 2)
+
+
+def qmip4_ref(q_codes: jax.Array, packed: jax.Array) -> jax.Array:
+    """[Q, d] int x [N, d/2] packed uint8 -> [Q, N] int32 inner products."""
+    return qmip_ref(q_codes, _unpack_int4_ref(packed))
+
+
+def ql24_ref(q_codes: jax.Array, packed: jax.Array) -> jax.Array:
+    """[Q, d] int x [N, d/2] packed uint8 -> [Q, N] int32 negated sq-L2."""
+    return ql2_ref(q_codes, _unpack_int4_ref(packed))
+
+
+def topk_ref(scores: jax.Array, k: int, n_valid: int | None = None):
+    """Exact top-k oracle over a full [Q, N] score matrix.
+
+    Masks columns >= n_valid (padding) by id before selection, returning
+    (-inf, -1) for slots with no valid candidate — the same contract the
+    fused kernel honors.
+    """
+    s = scores.astype(jnp.float32)
+    if n_valid is not None and n_valid < s.shape[1]:
+        col = jnp.arange(s.shape[1])[None, :]
+        s = jnp.where(col < n_valid, s, jnp.finfo(jnp.float32).min)
+    top_s, top_i = jax.lax.top_k(s, k)
+    top_i = jnp.where(top_s > jnp.finfo(jnp.float32).min, top_i, -1)
+    return top_s, top_i.astype(jnp.int32)
+
+
 def quantize_ref(
     x: jax.Array,
     lo: jax.Array,

@@ -3,8 +3,9 @@
 # primary target), an NGT-equivalent graph index and PQ — behind one
 # unified API: QuantSpec/IndexSpec configs, a common Index protocol
 # (build/search/memory_bytes/save/load), a kind registry with FAISS-style
-# factory strings, plus streaming and distributed top-k machinery and
-# graph-construction utilities.
+# factory strings, plus distributed top-k machinery and graph-construction
+# utilities.  Storage and scoring live one layer down in ``repro.engine``
+# (CodeStore/PQStore + the fused Pallas score/top-k hot path).
 from repro.knn.base import Index, SearchParams, SearchResult
 from repro.knn.spec import IndexSpec, QuantSpec, parse_factory
 from repro.knn.flat import FlatIndex

@@ -27,7 +27,6 @@ from typing import Any, Iterator, Optional, Protocol, runtime_checkable
 import jax
 import numpy as np
 
-from repro.core import quant as Qz
 from repro.knn.spec import IndexSpec
 
 
@@ -35,7 +34,9 @@ from repro.knn.spec import IndexSpec
 class SearchParams:
     """Union of every index kind's search-time knobs.
 
-    chunk      streaming tile rows for the exhaustive scan (flat)
+    chunk      exhaustive-scan working-set bound (flat, pq): scan-chunk
+               rows on the unfused path, corpus-tile cap for the fused
+               kernels
     nprobe     probed lists per query (ivf)
     ef_search  beam width of the graph walk (hnsw, graph)
     """
@@ -138,26 +139,6 @@ def load_meta(path: str) -> dict[str, Any]:
         return json.loads(bytes(z[_META_KEY].tobytes()).decode("utf-8"))
 
 
-def pack_quant_params(params: Optional[Qz.QuantParams]) -> tuple[dict, dict]:
-    """(arrays, meta) fragments for an optional QuantParams."""
-    if params is None:
-        return {}, {"quant": None}
-    return (
-        {"q_lo": params.lo, "q_hi": params.hi, "q_zero": params.zero},
-        {"quant": {"bits": params.bits, "scheme": params.scheme}},
-    )
-
-
-def unpack_quant_params(arrays: dict, meta: dict) -> Optional[Qz.QuantParams]:
-    import jax.numpy as jnp
-
-    q = meta.get("quant")
-    if q is None:
-        return None
-    return Qz.QuantParams(
-        lo=jnp.asarray(arrays["q_lo"]),
-        hi=jnp.asarray(arrays["q_hi"]),
-        zero=jnp.asarray(arrays["q_zero"]),
-        bits=int(q["bits"]),
-        scheme=str(q["scheme"]),
-    )
+# Quantization-constant (de)serialization lives with the storage layer:
+# ``engine.CodeStore.state`` / ``from_state`` — index save/load merges the
+# store's fragments into its own npz record.

@@ -1,30 +1,28 @@
 """Exact (exhaustive) nearest-neighbor search — the FAISS-IndexFlat
-equivalent, with the paper's int8 path as a drop-in storage/compute option.
+equivalent, with the paper's low-precision path as a drop-in storage
+option at any width: fp32 vectors, int8 codes (4x smaller), or bit-packed
+int4 codes (8x smaller).
 
 This is the reference the paper's Table 2 uses: exhaustive scan, fp32 vs
-int8 codes, identical top-k logic.  The quantized path stores only int8
-codes (4x smaller than fp32) and scores through the qmip/ql2 Pallas
-kernels (MXU int8 path on TPU, interpret mode on CPU).
+quantized codes, identical top-k logic.  All storage and every score run
+through the engine layer (``engine.CodeStore`` + ``engine.topk``), which
+streams the corpus through the fused Pallas score+top-k kernels.
 
 Registered as kind ``"flat"``; factory strings: ``"flat"``,
-``"flat,lpq8@gaussian:3"``.
+``"flat,lpq8@gaussian:3"``, ``"flat,lpq4"`` (packed int4).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import distances as D
+from repro import engine
 from repro.core import quant as Qz
-from repro.kernels import ops as K
 from repro.knn import base as B
 from repro.knn import registry
-from repro.knn import topk as T
 from repro.knn.spec import IndexSpec, quant_spec_from_kwargs, resolve_build_spec
 
 
@@ -32,14 +30,31 @@ from repro.knn.spec import IndexSpec, quant_spec_from_kwargs, resolve_build_spec
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class FlatIndex:
-    """Exhaustive index over either fp32 vectors or int8 codes."""
+    """Exhaustive index: a metric plus one engine ``CodeStore``."""
 
     metric: str = dataclasses.field(metadata=dict(static=True))
-    quantized: bool = dataclasses.field(metadata=dict(static=True))
-    n: int = dataclasses.field(metadata=dict(static=True))
-    vectors: Optional[jax.Array]        # [N, d] f32 (None when quantized)
-    codes: Optional[jax.Array]          # [N, d] int8 (None when fp32)
-    params: Optional[Qz.QuantParams]
+    store: engine.CodeStore
+
+    # -- legacy views (pre-engine callers and tests) -----------------------
+    @property
+    def quantized(self) -> bool:
+        return self.store.quantized
+
+    @property
+    def n(self) -> int:
+        return self.store.n
+
+    @property
+    def params(self) -> Optional[Qz.QuantParams]:
+        return self.store.params
+
+    @property
+    def codes(self) -> Optional[jax.Array]:
+        return self.store.data if self.store.quantized else None
+
+    @property
+    def vectors(self) -> Optional[jax.Array]:
+        return None if self.store.quantized else self.store.data
 
     # -- construction -----------------------------------------------------
     @staticmethod
@@ -62,27 +77,23 @@ class FlatIndex:
             "flat", spec, metric=metric,
             quant=quant_spec_from_kwargs(quantized, bits, scheme, sigmas, params),
         )
-
-        n = int(corpus.shape[0])
-        if spec.quant is None:
-            return FlatIndex(
-                metric=spec.metric, quantized=False, n=n,
-                vectors=jnp.asarray(corpus, jnp.float32), codes=None, params=None,
-            )
-        qp = spec.quant.learn(corpus)
-        codes = spec.quant.encode(corpus, qp)
-        return FlatIndex(
-            metric=spec.metric, quantized=True, n=n,
-            vectors=None, codes=codes, params=qp,
+        store = (
+            engine.CodeStore.dense(corpus)
+            if spec.quant is None
+            else spec.quant.build_store(corpus)
         )
+        return FlatIndex(metric=spec.metric, store=store)
+
+    @staticmethod
+    def from_store(store: engine.CodeStore, metric: str) -> "FlatIndex":
+        """Wrap an existing store (shared-payload builds, shard-local
+        indexes carrying a row-id base)."""
+        return FlatIndex(metric=metric, store=store)
 
     # -- query ------------------------------------------------------------
     def prepare_queries(self, queries: jax.Array) -> jax.Array:
         """h(q) of Definition 2: queries enter the quantized space too."""
-        if not self.quantized:
-            return jnp.asarray(queries, jnp.float32)
-        p = self.params
-        return K.quantize(queries, p.lo, p.hi, p.zero, bits=p.bits)
+        return self.store.encode_queries(queries)
 
     def search(
         self,
@@ -92,62 +103,35 @@ class FlatIndex:
         *,
         chunk: int | None = None,
     ) -> B.SearchResult:
-        """Exhaustive top-k; streams the corpus in chunks when N > chunk.
+        """Exhaustive streaming top-k through ``engine.topk``.
 
         Returns a ``SearchResult`` (scores [Q, k] f32, ids [Q, k] i32),
         larger-is-closer.
         """
         sp = (params or B.SearchParams()).merged(chunk=chunk)
         q = self.prepare_queries(queries)
-        data = self.codes if self.quantized else self.vectors
-
-        if self.quantized:
-            if self.metric == "ip":
-                score_fn = lambda qq, xx: K.qmip(qq, xx)
-            elif self.metric == "l2":
-                score_fn = lambda qq, xx: K.ql2(qq, xx)
-            else:  # angular: int32 dot + f32 norms
-                score_fn = D.qangular_scores
-        else:
-            score_fn = partial(D.scores, metric=self.metric)
-
-        stats = {"kind": "flat", "candidates": self.n}
-        if self.n <= sp.chunk:
-            s = score_fn(q, data).astype(jnp.float32)
-            k_eff = min(k, self.n)
-            top_s, top_i = jax.lax.top_k(s, k_eff)
-            return B.SearchResult(top_s, top_i.astype(jnp.int32), stats)
-
-        padded, n_valid = T.pad_corpus(data, sp.chunk)
-        s, i = T.chunked_topk(q, padded, k, score_fn, chunk=sp.chunk)
-        s, i = T.mask_invalid(s, i, n_valid)
-        return B.SearchResult(s, i, stats)
+        s, i, stats = engine.topk(
+            q, self.store, k, self.metric, chunk=sp.chunk, prepared=True
+        )
+        return B.SearchResult(s, i, {"kind": "flat", **stats})
 
     # -- accounting (paper Table 1/2 memory column) -------------------------
     def memory_bytes(self) -> int:
-        if self.quantized:
-            d = self.codes.shape[1]
-            # codes + the d-sized constants
-            return self.n * d * 1 + 3 * d * 4
-        d = self.vectors.shape[1]
-        return self.n * d * 4
+        return self.store.memory_bytes()
 
     # -- disk round-trip ---------------------------------------------------
     def save(self, path: str) -> None:
-        q_arrays, q_meta = B.pack_quant_params(self.params)
+        arrays, meta = self.store.state()
         B.save_state(
-            path,
-            {"vectors": self.vectors, "codes": self.codes, **q_arrays},
+            path, arrays,
             {"kind": "flat", "metric": self.metric,
-             "quantized": self.quantized, "n": self.n, **q_meta},
+             "quantized": self.quantized, "n": self.n, **meta},
         )
 
     @staticmethod
     def load(path: str) -> "FlatIndex":
         arrays, meta = B.load_state(path)
         return FlatIndex(
-            metric=meta["metric"], quantized=meta["quantized"], n=meta["n"],
-            vectors=jnp.asarray(arrays["vectors"]) if "vectors" in arrays else None,
-            codes=jnp.asarray(arrays["codes"]) if "codes" in arrays else None,
-            params=B.unpack_quant_params(arrays, meta),
+            metric=meta["metric"],
+            store=engine.CodeStore.from_state(arrays, meta),
         )

@@ -12,9 +12,10 @@ candidates that fall out of the top-ef are dropped, and the walk stops
 when every beam entry has been expanded (or at the iteration cap).
 
 Distances: ``score_set`` computes larger-is-closer scores of a gathered id
-set against the query — fp32 or the paper's int8 integer-domain scoring,
-chosen by the caller.  This is exactly where the paper swaps fp32 for int8
-inside HNSW/NGT.
+set against the query — fp32, the paper's int8 integer-domain scoring, or
+packed-int4 unpack-on-gather, built by ``engine.make_score_set`` over the
+index's ``CodeStore``.  This is exactly where the paper swaps fp32 for
+int8 inside HNSW/NGT.
 """
 
 from __future__ import annotations
@@ -28,19 +29,6 @@ import jax.numpy as jnp
 NEG = jnp.finfo(jnp.float32).min
 
 ScoreSet = Callable[[jax.Array, jax.Array], jax.Array]  # (q [d], ids [m]) -> [m] f32
-
-
-def make_score_set(data: jax.Array, metric: str, quantized: bool) -> ScoreSet:
-    """Build a (query, ids) -> scores closure over the index payload."""
-    from repro.core import distances as D
-
-    def score_set(q: jax.Array, ids: jax.Array) -> jax.Array:
-        vecs = data[ids]                                        # [m, d]
-        return D.scores(q[None], vecs, metric, quantized=quantized)[0].astype(
-            jnp.float32
-        )
-
-    return score_set
 
 
 @partial(jax.jit, static_argnames=("score_set", "ef", "max_iters"))

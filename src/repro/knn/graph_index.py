@@ -4,13 +4,14 @@ NGT ("Neighborhood Graph and Tree", Iwasaki & Miyazaki) couples a kNN
 graph with a VP-tree used only to pick search entry points.  A VP-tree is
 a pointer/branch structure with no TPU analogue, so per DESIGN.md we keep
 the *role* (cheap entry-point selection) and swap the mechanism: a k-means
-centroid table scored with one small matmul — the same coarse-quantizer
+centroid table probed through ``engine.topk`` — the same coarse-quantizer
 trick IVF uses.  The neighborhood graph itself is the exact kNN graph made
 bidirectional and degree-capped (ANNG/ONNG construction), searched with
-the same beam walk as HNSW.
+the same beam walk as HNSW, scoring through the engine's store-aware
+score-set (fp32 / int8 / packed int4 alike).
 
-The quantized variant stores int8 codes and scores in the integer domain —
-the paper's Table 3 experiment.
+The quantized variant stores integer codes and scores in the integer
+domain — the paper's Table 3 experiment.
 """
 
 from __future__ import annotations
@@ -23,9 +24,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import engine
 from repro.core import distances as D
 from repro.core import quant as Qz
-from repro.kernels import ops as K
 from repro.knn import base as B
 from repro.knn import graph as G
 from repro.knn import ivf as IVF
@@ -38,10 +39,8 @@ from repro.knn.spec import IndexSpec, quant_spec_from_kwargs, resolve_build_spec
 @dataclasses.dataclass
 class GraphIndex:
     metric: str
-    quantized: bool
     degree: int
-    data: jax.Array
-    params: Optional[Qz.QuantParams]
+    store: engine.CodeStore
     adj: jax.Array                      # [N, degree] int32, -1 pad
     seeds: jax.Array                    # [n_seeds, d] f32 centroids
     seed_ids: jax.Array                 # [n_seeds] nearest corpus row per centroid
@@ -55,7 +54,19 @@ class GraphIndex:
 
     @property
     def n(self) -> int:
-        return self.data.shape[0]
+        return self.store.n
+
+    @property
+    def quantized(self) -> bool:
+        return self.store.quantized
+
+    @property
+    def data(self) -> jax.Array:
+        return self.store.data
+
+    @property
+    def params(self) -> Optional[Qz.QuantParams]:
+        return self.store.params
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -80,7 +91,6 @@ class GraphIndex:
         degree = int(p["degree"])
         n_seeds = int(p["n_seeds"])
         metric = spec.metric
-        quantized = spec.quant is not None
 
         t0 = time.perf_counter()
         if key is None:
@@ -95,28 +105,27 @@ class GraphIndex:
             corpus = jnp.concatenate([corpus, extra[:, None]], axis=-1)
         n, d = corpus.shape
 
-        params = None
-        data = corpus
-        if quantized:
+        if spec.quant is None:
+            store = engine.CodeStore.dense(corpus)
+        else:
             # constants are learned in the index's own (possibly augmented)
             # space, so pre-learned d-dim params cannot be reused under the
             # MIP->L2 augmentation — drop them and re-fit.
             quant = spec.quant
             if aug and quant.params is not None:
                 quant = dataclasses.replace(quant, params=None)
-            params = quant.learn(corpus)
-            data = quant.encode(corpus, params)
+            store = quant.build_store(corpus)
 
-        # exact kNN graph in the *index's own distance domain* (int8 for the
-        # quantized index — build-time speedup is the paper's Table 1 claim)
-        flat = FlatIndex(
-            metric=internal_metric, quantized=quantized, n=n,
-            vectors=None if quantized else data,
-            codes=data if quantized else None, params=params,
-        )
+        # exact kNN graph in the *index's own distance domain* (integer
+        # codes for the quantized index — build-time speedup is the
+        # paper's Table 1 claim), through the engine-backed flat scan
+        flat = FlatIndex.from_store(store, internal_metric)
         half = max(degree // 2, 1)
-        _, nbr = flat.search(data if not quantized else Qz.dequantize(data, params),
-                             k=half + 1)
+        _, nbr = flat.search(
+            corpus if not store.quantized else Qz.dequantize(
+                store.unpacked()[:, : store.d], store.params),
+            k=half + 1,
+        )
         nbr = np.asarray(nbr)[:, 1:]                       # drop self
 
         # bidirectional + cap (ONNG outdegree adjustment)
@@ -138,8 +147,8 @@ class GraphIndex:
         seed_ids = jnp.argmax(D.l2_scores(cents, corpus), axis=-1).astype(jnp.int32)
 
         idx = GraphIndex(
-            metric=metric, quantized=quantized, degree=degree, data=data,
-            params=params, adj=jnp.asarray(adj), seeds=cents, seed_ids=seed_ids,
+            metric=metric, degree=degree, store=store,
+            adj=jnp.asarray(adj), seeds=cents, seed_ids=seed_ids,
             internal_metric=internal_metric, aug=aug,
         )
         idx.build_seconds = time.perf_counter() - t0
@@ -148,10 +157,7 @@ class GraphIndex:
     # ------------------------------------------------------------------
     def prepare_queries(self, queries: jax.Array) -> jax.Array:
         """queries must already be in the (possibly augmented) index space."""
-        if not self.quantized:
-            return jnp.asarray(queries, jnp.float32)
-        p = self.params
-        return K.quantize(queries, p.lo, p.hi, p.zero, bits=p.bits)
+        return self.store.encode_queries(queries)
 
     def search(
         self,
@@ -169,49 +175,51 @@ class GraphIndex:
                 [qf, jnp.zeros((qf.shape[0], 1), jnp.float32)], axis=-1
             )
         q = self.prepare_queries(qf)
-        score_set = G.make_score_set(self.data, self.internal_metric, self.quantized)
+        score_set = engine.make_score_set(self.store, self.internal_metric)
 
-        # entry points: best seeds by centroid score (the "tree" role)
-        cent_metric = self.internal_metric
-        cs = D.scores(qf, self.seeds, cent_metric)
+        # entry points: best seeds through the engine (the "tree" role)
         n_entry = min(8, self.seeds.shape[0])
-        entry = self.seed_ids[jax.lax.top_k(cs, n_entry)[1]]    # [Q, n_entry]
+        _s, probe, _ = engine.topk(
+            qf, engine.CodeStore.dense(self.seeds), n_entry,
+            self.internal_metric,
+        )
+        entry = self.seed_ids[probe]                            # [Q, n_entry]
 
         ef = max(ef_search, k)
         scores, ids = G.beam_search_batch(
             q, self.adj, entry, score_set=score_set, ef=ef
         )
-        stats = {"kind": "graph", "ef_search": ef, "n_entry": n_entry}
+        cand_bound = n_entry + 8 * ef * self.degree
+        stats = {"kind": "graph", "ef_search": ef, "n_entry": n_entry,
+                 **engine.search_stats(
+                     self.store, candidates=cand_bound, chunks=1,
+                     rows_read=qf.shape[0] * cand_bound)}
         return B.SearchResult(scores[:, :k], ids[:, :k], stats)
 
     def memory_bytes(self) -> int:
-        d = self.data.shape[1]
-        vec = self.n * d * (1 if self.quantized else 4)
         graph = int(self.adj.size) * 4
         seeds = int(self.seeds.size) * 4 + int(self.seed_ids.size) * 4
-        consts = 3 * d * 4 if self.params is not None else 0
-        return vec + graph + seeds + consts
+        return self.store.memory_bytes() + graph + seeds
 
     # ------------------------------------------------------------------
     def save(self, path: str) -> None:
-        q_arrays, q_meta = B.pack_quant_params(self.params)
+        arrays, meta = self.store.state()
         B.save_state(
             path,
-            {"data": self.data, "adj": self.adj, "seeds": self.seeds,
-             "seed_ids": self.seed_ids, **q_arrays},
+            {"adj": self.adj, "seeds": self.seeds,
+             "seed_ids": self.seed_ids, **arrays},
             {"kind": "graph", "metric": self.metric,
              "quantized": self.quantized, "degree": self.degree,
              "internal_metric": self.internal_metric, "aug": self.aug,
-             "build_seconds": self.build_seconds, **q_meta},
+             "build_seconds": self.build_seconds, **meta},
         )
 
     @staticmethod
     def load(path: str) -> "GraphIndex":
         arrays, meta = B.load_state(path)
         return GraphIndex(
-            metric=meta["metric"], quantized=meta["quantized"],
-            degree=meta["degree"], data=jnp.asarray(arrays["data"]),
-            params=B.unpack_quant_params(arrays, meta),
+            metric=meta["metric"], degree=meta["degree"],
+            store=engine.CodeStore.from_state(arrays, meta),
             adj=jnp.asarray(arrays["adj"]),
             seeds=jnp.asarray(arrays["seeds"]),
             seed_ids=jnp.asarray(arrays["seed_ids"]),

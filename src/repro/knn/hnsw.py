@@ -25,8 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import engine
 from repro.core import quant as Qz
-from repro.kernels import ops as K
 from repro.knn import base as B
 from repro.knn import graph as G
 from repro.knn import registry
@@ -37,10 +37,8 @@ from repro.knn.spec import IndexSpec, quant_spec_from_kwargs, resolve_build_spec
 @dataclasses.dataclass
 class HNSWIndex:
     metric: str
-    quantized: bool
     m: int
-    data: jax.Array                      # [N, d] f32 or int8 codes
-    params: Optional[Qz.QuantParams]
+    store: engine.CodeStore              # corpus payload at any precision
     layers: list[jax.Array]              # adj per layer, layer 0 first
     levels: np.ndarray                   # [N] int
     entry: int
@@ -49,16 +47,25 @@ class HNSWIndex:
     # ------------------------------------------------------------------
     @property
     def n(self) -> int:
-        return self.data.shape[0]
+        return self.store.n
+
+    @property
+    def quantized(self) -> bool:
+        return self.store.quantized
+
+    @property
+    def data(self) -> jax.Array:
+        return self.store.data
+
+    @property
+    def params(self) -> Optional[Qz.QuantParams]:
+        return self.store.params
 
     def _score_set(self) -> G.ScoreSet:
-        return G.make_score_set(self.data, self.metric, self.quantized)
+        return engine.make_score_set(self.store, self.metric)
 
     def prepare_queries(self, queries: jax.Array) -> jax.Array:
-        if not self.quantized:
-            return jnp.asarray(queries, jnp.float32)
-        p = self.params
-        return K.quantize(queries, p.lo, p.hi, p.zero, bits=p.bits)
+        return self.store.encode_queries(queries)
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -86,7 +93,6 @@ class HNSWIndex:
         ef_construction = int(p["ef_construction"])
         batch_size = int(p["batch_size"])
         metric = spec.metric
-        quantized = spec.quant is not None
 
         t0 = time.perf_counter()
         if key is None:
@@ -94,11 +100,11 @@ class HNSWIndex:
         corpus = jnp.asarray(corpus, jnp.float32)
         n, d = corpus.shape
 
-        data = corpus
-        params = None
-        if quantized:
-            params = spec.quant.learn(corpus)
-            data = spec.quant.encode(corpus, params)
+        store = (
+            engine.CodeStore.dense(corpus)
+            if spec.quant is None
+            else spec.quant.build_store(corpus)
+        )
 
         # level sampling: floor(-ln U * mL), mL = 1/ln M
         ml = 1.0 / math.log(m)
@@ -109,7 +115,7 @@ class HNSWIndex:
         caps = [2 * m] + [m] * max_level
         adj = [np.full((n, caps[l]), -1, np.int32) for l in range(max_level + 1)]
 
-        score_set = G.make_score_set(data, metric, quantized)
+        score_set = engine.make_score_set(store, metric)
 
         # ---- seed: first few points fully interconnected --------------
         seed_n = min(m + 1, n)
@@ -123,13 +129,13 @@ class HNSWIndex:
             order = np.argsort(-scores)
             return ids[order][:cap]
 
-        qdata = np.asarray(data)
+        qdata = np.asarray(store.unpacked())
 
         # ---- batched incremental inserts ------------------------------
         for start in range(seed_n, n, batch_size):
             stop = min(start + batch_size, n)
             ids = np.arange(start, stop)
-            qs = data[jnp.asarray(ids)]
+            qs = store.take(jnp.asarray(ids))
 
             # per layer from the top: descend with greedy, collect efc
             # candidates at layers <= point level
@@ -184,8 +190,8 @@ class HNSWIndex:
 
         layers = [jnp.asarray(a) for a in adj]
         idx = HNSWIndex(
-            metric=metric, quantized=quantized, m=m, data=data,
-            params=params, layers=layers, levels=levels, entry=entry,
+            metric=metric, m=m, store=store,
+            layers=layers, levels=levels, entry=entry,
         )
         idx.build_seconds = time.perf_counter() - t0
         return idx
@@ -219,28 +225,32 @@ class HNSWIndex:
         scores, ids = G.beam_search_batch(
             q, self.layers[0], entry[:, None], score_set=score_set, ef=ef
         )
-        stats = {"kind": "hnsw", "ef_search": ef, "n_layers": len(self.layers)}
+        # candidate bound: layer-0 beam expands <= 8*ef nodes of degree
+        # <= 2m each (graph-walk while-loops stop early on convergence)
+        cand_bound = ef + 8 * ef * 2 * self.m
+        stats = {"kind": "hnsw", "ef_search": ef, "n_layers": len(self.layers),
+                 **engine.search_stats(
+                     self.store, candidates=cand_bound,
+                     chunks=len(self.layers),
+                     rows_read=nq * cand_bound)}
         return B.SearchResult(scores[:, :k], ids[:, :k], stats)
 
     # ------------------------------------------------------------------
     def memory_bytes(self) -> int:
-        d = self.data.shape[1]
-        vec = self.n * d * (1 if self.quantized else 4)
         graph = sum(int(a.size) * 4 for a in self.layers)  # native pointers
-        consts = 3 * d * 4 if self.params is not None else 0
-        return vec + graph + consts
+        return self.store.memory_bytes() + graph
 
     # ------------------------------------------------------------------
     def save(self, path: str) -> None:
-        q_arrays, q_meta = B.pack_quant_params(self.params)
-        arrays = {"data": self.data, "levels": self.levels, **q_arrays}
+        s_arrays, s_meta = self.store.state()
+        arrays = {"levels": self.levels, **s_arrays}
         for l, adj in enumerate(self.layers):
             arrays[f"layer_{l}"] = adj
         B.save_state(
             path, arrays,
             {"kind": "hnsw", "metric": self.metric, "quantized": self.quantized,
              "m": self.m, "entry": self.entry, "n_layers": len(self.layers),
-             "build_seconds": self.build_seconds, **q_meta},
+             "build_seconds": self.build_seconds, **s_meta},
         )
 
     @staticmethod
@@ -250,9 +260,8 @@ class HNSWIndex:
             jnp.asarray(arrays[f"layer_{l}"]) for l in range(meta["n_layers"])
         ]
         return HNSWIndex(
-            metric=meta["metric"], quantized=meta["quantized"], m=meta["m"],
-            data=jnp.asarray(arrays["data"]),
-            params=B.unpack_quant_params(arrays, meta),
+            metric=meta["metric"], m=meta["m"],
+            store=engine.CodeStore.from_state(arrays, meta),
             layers=layers, levels=np.asarray(arrays["levels"]),
             entry=int(meta["entry"]),
             build_seconds=float(meta.get("build_seconds", 0.0)),

@@ -3,16 +3,17 @@
 HNSW's pointer-chasing traversal is hostile to a systolic machine; the
 cluster-prune-then-scan pattern of IVF maps onto exactly two TPU-friendly
 ops: a (small) dense matmul against the centroid table, and a gathered
-batched matmul over the probed lists.  Both run on the int8 MXU path when
-the index is quantized, so the paper's technique composes with IVF the
-same way it composes with HNSW in §2 of the paper ("can be combined with
-existing indexing-based KNN frameworks").
+batched matmul over the probed lists.  Both run through the engine layer:
+the coarse probe is ``engine.topk`` over a dense centroid store, the fine
+scan is ``engine.topk_among`` over the corpus store — fp32, int8 or
+bit-packed int4 alike, so the paper's technique composes with IVF the
+same way it composes with HNSW in §2 of the paper.
 
 Lists are padded to a fixed length so every shape is static (jit/pjit
-friendly); the pad id -1 scores -inf.
+friendly); pad slots carry id -1 and are masked by the engine.
 
 Registered as kind ``"ivf"``; factory strings: ``"ivf256"``,
-``"ivf256,lpq8"``.
+``"ivf256,lpq8"``, ``"ivf256,lpq4"`` (packed int4).
 """
 
 from __future__ import annotations
@@ -24,9 +25,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import engine
 from repro.core import distances as D
 from repro.core import quant as Qz
-from repro.kernels import ops as K
 from repro.knn import base as B
 from repro.knn import registry
 from repro.knn.spec import IndexSpec, quant_spec_from_kwargs, resolve_build_spec
@@ -67,14 +68,28 @@ def kmeans(
 @dataclasses.dataclass(frozen=True)
 class IVFIndex:
     metric: str = dataclasses.field(metadata=dict(static=True))
-    quantized: bool = dataclasses.field(metadata=dict(static=True))
-    n: int = dataclasses.field(metadata=dict(static=True))
     nlist: int = dataclasses.field(metadata=dict(static=True))
     max_list: int = dataclasses.field(metadata=dict(static=True))
     centroids: jax.Array                 # [nlist, d] f32
     lists: jax.Array                     # [nlist, max_list] i32, -1 pad
-    data: jax.Array                      # [N, d] f32 or int8 codes
-    params: Optional[Qz.QuantParams]
+    store: engine.CodeStore              # corpus payload at any precision
+
+    # -- legacy views ------------------------------------------------------
+    @property
+    def quantized(self) -> bool:
+        return self.store.quantized
+
+    @property
+    def n(self) -> int:
+        return self.store.n
+
+    @property
+    def data(self) -> jax.Array:
+        return self.store.data
+
+    @property
+    def params(self) -> Optional[Qz.QuantParams]:
+        return self.store.params
 
     @staticmethod
     def build(
@@ -101,7 +116,6 @@ class IVFIndex:
 
         if key is None:
             key = jax.random.PRNGKey(0)
-        n = int(corpus.shape[0])
         corpus = jnp.asarray(corpus, jnp.float32)
         cents = kmeans(corpus, nlist, key, iters=kmeans_iters)
         assign = jnp.argmax(D.l2_scores(corpus, cents), axis=-1)
@@ -118,24 +132,19 @@ class IVFIndex:
         for c, b in enumerate(buckets):
             lists[c, : len(b)] = b
 
-        qp = None
-        data = corpus
-        if spec.quant is not None:
-            qp = spec.quant.learn(corpus)
-            data = spec.quant.encode(corpus, qp)
-
+        store = (
+            engine.CodeStore.dense(corpus)
+            if spec.quant is None
+            else spec.quant.build_store(corpus)
+        )
         return IVFIndex(
-            metric=spec.metric, quantized=spec.quant is not None, n=n,
-            nlist=nlist, max_list=max_list, centroids=cents,
-            lists=jnp.asarray(lists), data=data, params=qp,
+            metric=spec.metric, nlist=nlist, max_list=max_list,
+            centroids=cents, lists=jnp.asarray(lists), store=store,
         )
 
     # ------------------------------------------------------------------
     def prepare_queries(self, queries: jax.Array) -> jax.Array:
-        if not self.quantized:
-            return jnp.asarray(queries, jnp.float32)
-        p = self.params
-        return K.quantize(queries, p.lo, p.hi, p.zero, bits=p.bits)
+        return self.store.encode_queries(queries)
 
     def search(
         self,
@@ -154,68 +163,49 @@ class IVFIndex:
         qf = jnp.asarray(queries, jnp.float32)
         qq = self.prepare_queries(queries)
 
-        # 1) coarse: score centroids (always fp32 — tiny)
-        cent_metric = "l2" if self.metric == "l2" else self.metric
-        cs = D.scores(qf, self.centroids, cent_metric)          # [Q, nlist]
-        probe = jax.lax.top_k(cs, nprobe)[1]                    # [Q, nprobe]
+        # 1) coarse: engine top-k over the (tiny, always-fp32) centroid store
+        _cs, probe, _ = engine.topk(
+            qf, engine.CodeStore.dense(self.centroids), nprobe, self.metric
+        )
 
         # 2) gather candidate ids -> [Q, nprobe * max_list]
         cand = self.lists[probe].reshape(qq.shape[0], -1)
-        valid = cand >= 0
-        safe = jnp.where(valid, cand, 0)
 
-        # 3) fine scoring, one query at a time (ragged per query)
-        def per_query(qv, ids, ok):
-            vecs = self.data[ids]                               # [L, d]
-            if self.quantized:
-                if self.metric == "ip":
-                    s = K.qmip(qv[None], vecs)[0]
-                elif self.metric == "l2":
-                    s = K.ql2(qv[None], vecs)[0]
-                else:
-                    s = D.qangular_scores(qv[None], vecs)[0]
-            else:
-                s = D.scores(qv[None], vecs, self.metric)[0]
-            s = jnp.where(ok, s.astype(jnp.float32), jnp.finfo(jnp.float32).min)
-            top_s, pos = jax.lax.top_k(s, k)
-            return top_s, jnp.where(
-                top_s > jnp.finfo(jnp.float32).min, ids[pos], -1
-            ).astype(jnp.int32)
+        # 3) fine scoring + top-k through the engine (gather, unpack-as-
+        #    needed, mask empties, select)
+        scores, ids = engine.topk_among(qq, self.store, cand, k, self.metric)
 
-        scores, ids = jax.vmap(per_query)(qq, safe, valid)
         stats = {"kind": "ivf", "nprobe": nprobe,
-                 "candidates": nprobe * self.max_list}
+                 **engine.search_stats(
+                     self.store,
+                     candidates=nprobe * self.max_list,
+                     chunks=nprobe,
+                     rows_read=qq.shape[0] * nprobe * self.max_list)}
         return B.SearchResult(scores, ids, stats)
 
     def memory_bytes(self) -> int:
-        d = self.data.shape[1]
-        itemsize = 1 if self.quantized else 4
-        base = self.n * d * itemsize
+        base = self.store.memory_bytes()
         base += self.centroids.size * 4 + self.lists.size * 4
-        if self.params is not None:
-            base += 3 * d * 4
         return base
 
     # ------------------------------------------------------------------
     def save(self, path: str) -> None:
-        q_arrays, q_meta = B.pack_quant_params(self.params)
+        arrays, meta = self.store.state()
         B.save_state(
             path,
-            {"centroids": self.centroids, "lists": self.lists,
-             "data": self.data, **q_arrays},
+            {"centroids": self.centroids, "lists": self.lists, **arrays},
             {"kind": "ivf", "metric": self.metric, "quantized": self.quantized,
              "n": self.n, "nlist": self.nlist, "max_list": self.max_list,
-             **q_meta},
+             **meta},
         )
 
     @staticmethod
     def load(path: str) -> "IVFIndex":
         arrays, meta = B.load_state(path)
         return IVFIndex(
-            metric=meta["metric"], quantized=meta["quantized"], n=meta["n"],
-            nlist=meta["nlist"], max_list=meta["max_list"],
+            metric=meta["metric"], nlist=meta["nlist"],
+            max_list=meta["max_list"],
             centroids=jnp.asarray(arrays["centroids"]),
             lists=jnp.asarray(arrays["lists"]),
-            data=jnp.asarray(arrays["data"]),
-            params=B.unpack_quant_params(arrays, meta),
+            store=engine.CodeStore.from_state(arrays, meta),
         )

@@ -7,9 +7,10 @@ the codebook mapping step for calculating the distance computations at
 query time."  Both modes are implemented:
 
   * :class:`PQIndex` — classic PQ: split d into M subspaces, k-means a
-    256-codeword codebook per subspace, store 1-byte codes, score by ADC
-    (asymmetric distance computation: per-query LUT of query-to-codeword
-    distances, then a gather-sum over codes).
+    256-codeword codebook per subspace, store 1-byte codes in an
+    ``engine.PQStore``, score by ADC through ``engine.topk`` (per-query
+    LUT, then a *streaming* gather-sum scan with a running top-k — the
+    [Q, N] ADC score matrix never materializes for large N).
   * ``lpq_tables=True`` — the paper's composition: the ADC lookup tables
     themselves are quantized to int8 with Eq. 1 constants learned over
     the table entries, so the scan accumulates integers (int32) instead
@@ -20,13 +21,11 @@ query time."  Both modes are implemented:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import quant as Qz
+from repro import engine
 from repro.knn import base as B
 from repro.knn import registry
 from repro.knn.ivf import kmeans
@@ -38,11 +37,28 @@ from repro.knn.spec import IndexSpec, resolve_build_spec
 @dataclasses.dataclass(frozen=True)
 class PQIndex:
     metric: str = dataclasses.field(metadata=dict(static=True))
-    m: int = dataclasses.field(metadata=dict(static=True))          # subspaces
-    n: int = dataclasses.field(metadata=dict(static=True))
-    codebooks: jax.Array      # [M, 256, d/M] f32
-    codes: jax.Array          # [N, M] uint8
-    lpq_tables: bool = dataclasses.field(default=False, metadata=dict(static=True))
+    store: engine.PQStore
+
+    # -- legacy views ------------------------------------------------------
+    @property
+    def m(self) -> int:
+        return self.store.m
+
+    @property
+    def n(self) -> int:
+        return self.store.n
+
+    @property
+    def codes(self) -> jax.Array:
+        return self.store.codes
+
+    @property
+    def codebooks(self) -> jax.Array:
+        return self.store.codebooks
+
+    @property
+    def lpq_tables(self) -> bool:
+        return self.store.lpq_tables
 
     @staticmethod
     def build(
@@ -65,6 +81,11 @@ class PQIndex:
         lpq_tables = bool(p["lpq_tables"]) or spec.quant is not None
         kmeans_iters = int(p["kmeans_iters"])
         metric = spec.metric
+        if metric == "angular":
+            raise ValueError(
+                "pq supports ip and l2 only — the ADC lookup tables have "
+                "no per-row norm to rescale by (engine dispatch table)"
+            )
         if key is None:
             key = jax.random.PRNGKey(0)
         corpus = jnp.asarray(corpus, jnp.float32)
@@ -83,83 +104,49 @@ class PQIndex:
             books.append(cb)
             codes.append(jnp.argmin(d2, -1).astype(jnp.uint8))
 
-        return PQIndex(
-            metric=metric, m=m, n=n,
-            codebooks=jnp.stack(books), codes=jnp.stack(codes, 1),
-            lpq_tables=lpq_tables,
+        store = engine.PQStore(
+            n=n, m=m, lpq_tables=lpq_tables,
+            codes=jnp.stack(codes, 1), codebooks=jnp.stack(books),
         )
+        return PQIndex(metric=metric, store=store)
 
     # ------------------------------------------------------------------
-    def _luts(self, queries: jax.Array):
-        """Per-query score tables [Q, M, 256] (larger-is-closer)."""
-        q = jnp.asarray(queries, jnp.float32)
-        Q, d = q.shape
-        ds = d // self.m
-        qs = q.reshape(Q, self.m, ds)
-        if self.metric == "ip":
-            lut = jnp.einsum("qmd,mkd->qmk", qs, self.codebooks)
-        else:  # l2 (negated)
-            diff = qs[:, :, None, :] - self.codebooks[None]
-            lut = -jnp.sum(diff * diff, -1)
-        return lut
-
     def search(
         self,
         queries: jax.Array,
         k: int,
         params: "B.SearchParams | None" = None,
     ) -> B.SearchResult:
-        """ADC scan: LUT gather-sum over the code matrix.
+        """ADC scan through ``engine.topk`` (streaming LUT gather-sum).
 
-        PQ's exhaustive ADC scan has no search-time knob; ``params`` is
-        accepted (and ignored) for protocol uniformity.
+        ``SearchParams.chunk`` sizes the scan tiles; PQ has no other
+        search-time knob.
         """
-        del params
-        lut = self._luts(queries)                          # [Q, M, 256] f32
-
-        if self.lpq_tables:
-            # the paper's composition: quantize the LUT entries (Eq. 1,
-            # per-table abs-max) and accumulate integers
-            amax = jnp.maximum(jnp.max(jnp.abs(lut)), 1e-12)
-            lut_q = jnp.clip(jnp.round(lut / amax * 127.0), -128, 127)
-            lut_q = lut_q.astype(jnp.int32)                # int8-valued
-            scores = jnp.sum(
-                jnp.take_along_axis(
-                    lut_q, self.codes.T.astype(jnp.int32)[None], axis=2
-                ),
-                axis=1,
-            )                                              # [Q, N] int32
-            scores = scores.astype(jnp.float32)
-        else:
-            scores = jnp.sum(
-                jnp.take_along_axis(
-                    lut, self.codes.T.astype(jnp.int32)[None], axis=2
-                ),
-                axis=1,
-            )
-        top_s, top_i = jax.lax.top_k(scores, k)
-        stats = {"kind": "pq", "m": self.m, "candidates": self.n,
-                 "lpq_tables": self.lpq_tables}
-        return B.SearchResult(top_s, top_i.astype(jnp.int32), stats)
+        sp = params or B.SearchParams()
+        s, i, stats = engine.topk(
+            queries, self.store, k, self.metric, chunk=sp.chunk
+        )
+        return B.SearchResult(
+            s, i, {"kind": "pq", "m": self.m, "lpq_tables": self.lpq_tables,
+                   **stats},
+        )
 
     def memory_bytes(self) -> int:
-        return int(self.codes.size) + int(self.codebooks.size) * 4
+        return self.store.memory_bytes()
 
     # ------------------------------------------------------------------
     def save(self, path: str) -> None:
+        arrays, meta = self.store.state()
         B.save_state(
-            path,
-            {"codebooks": self.codebooks, "codes": self.codes},
+            path, arrays,
             {"kind": "pq", "metric": self.metric, "m": self.m, "n": self.n,
-             "lpq_tables": self.lpq_tables},
+             "lpq_tables": self.lpq_tables, **meta},
         )
 
     @staticmethod
     def load(path: str) -> "PQIndex":
         arrays, meta = B.load_state(path)
         return PQIndex(
-            metric=meta["metric"], m=meta["m"], n=meta["n"],
-            codebooks=jnp.asarray(arrays["codebooks"]),
-            codes=jnp.asarray(arrays["codes"]),
-            lpq_tables=meta["lpq_tables"],
+            metric=meta["metric"],
+            store=engine.PQStore.from_state(arrays, meta),
         )

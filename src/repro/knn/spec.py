@@ -51,12 +51,23 @@ class QuantSpec:
     ``params`` may carry pre-learned Eq. 1 constants so several index
     components (or several indexes over the same corpus) share one
     learn pass; when absent, ``learn`` fits them on the build corpus.
+
+    ``packed`` selects bit-packed storage (two 4-bit codes per byte).
+    ``None`` means automatic: 4-bit codes pack (honest width — the
+    ``lpq4`` factory arm), everything else stores at dtype width.  Pass
+    ``packed=False`` to keep int4 codes at int8 width (the unpacked
+    reference arm the parity tests compare against).
     """
 
     bits: int = 8
     scheme: str = "gaussian"
     sigmas: float = 1.0
     params: Optional[Qz.QuantParams] = None
+    packed: Optional[bool] = None
+
+    @property
+    def effective_packed(self) -> bool:
+        return self.bits == 4 if self.packed is None else self.packed
 
     def learn(self, corpus) -> Qz.QuantParams:
         """Resolve Eq. 1 constants: reuse pre-learned params or fit."""
@@ -72,6 +83,22 @@ class QuantSpec:
         from repro.kernels import ops as K
 
         return K.quantize(x, params.lo, params.hi, params.zero, bits=params.bits)
+
+    def build_store(self, corpus, base: int = 0):
+        """learn + encode + (maybe) pack into an ``engine.CodeStore`` —
+        how every index build materializes its corpus payload."""
+        from repro.engine import CodeStore
+
+        if self.bits > 8:
+            raise ValueError(
+                f"the scoring engine supports B <= 8 (got bits={self.bits}): "
+                "wider codes overflow int32 score accumulation"
+            )
+        qp = self.learn(corpus)
+        codes = self.encode(corpus, qp)
+        return CodeStore.from_codes(
+            codes, qp, pack=self.effective_packed, base=base
+        )
 
     def with_params(self, params: Qz.QuantParams) -> "QuantSpec":
         return dataclasses.replace(self, params=params)
@@ -173,6 +200,13 @@ def parse_factory(factory: str, metric: str | None = None) -> IndexSpec:
             if quant is not None:
                 raise ValueError(f"duplicate quant fragment in {factory!r}")
             bits = int(mq.group(1))
+            if not 1 <= bits <= 8:
+                # int16 codes overflow the engine's int32 accumulation
+                # (d * (2^15)^2 > 2^31 already at d=2) — the paper's
+                # low-precision regime is B <= 8
+                raise ValueError(
+                    f"lpq bits must be in [1, 8], got {bits} in {factory!r}"
+                )
             scheme = mq.group(2) or "gaussian"
             Qz.Scheme(scheme)  # validate early
             sigmas = float(mq.group(3)) if mq.group(3) else 1.0

@@ -1,5 +1,13 @@
-"""Top-k machinery: streaming (chunked) top-k over huge corpora and the
-distributed shard-merge used when the corpus is row-sharded over a mesh.
+"""Top-k machinery: the distributed shard-merge used when the corpus is
+row-sharded over a mesh, plus back-compat re-exports of the generic
+streaming helpers whose canonical home is now ``repro.engine.scorer``.
+
+Index classes no longer call anything here — the engine owns chunking,
+padding and invalid-id masking for every kind (scores are id-masked at
+the source, so the historical L2 zero-sentinel hazard — a zero pad row
+out-scoring real rows under negated L2 for callers that forgot to mask —
+cannot occur).  ``chunked_topk`` remains as a generic utility for
+score-fn-shaped callers outside the index layer.
 
 Larger-is-closer convention throughout (matches core.distances).
 """
@@ -12,20 +20,36 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+# canonical implementations live in the engine; re-exported for callers
+# that predate the engine layer
+from repro.engine.scorer import merge_topk, pad_rows
 
-def merge_topk(
-    scores_a: jax.Array,
-    ids_a: jax.Array,
-    scores_b: jax.Array,
-    ids_b: jax.Array,
-    k: int,
-):
-    """Merge two [Q, ka]/[Q, kb] candidate sets into the best k."""
-    s = jnp.concatenate([scores_a, scores_b], axis=-1)
-    i = jnp.concatenate([ids_a, ids_b], axis=-1)
-    top_s, pos = jax.lax.top_k(s, k)
-    top_i = jnp.take_along_axis(i, pos, axis=-1)
-    return top_s, top_i
+__all__ = [
+    "merge_topk",
+    "pad_rows",
+    "pad_corpus",
+    "mask_invalid",
+    "chunked_topk",
+    "distributed_topk",
+]
+
+
+def pad_corpus(corpus: jax.Array, multiple: int):
+    """Pad corpus rows to a multiple; returns (padded, n_valid).
+
+    Back-compat alias of ``engine.pad_rows``.  Padding rows are zeros;
+    every engine path masks them *by id* before any merge, so pad rows
+    can never win — even under L2 where a zero row would otherwise
+    out-score distant real rows.  Callers using this helper directly must
+    apply ``mask_invalid`` (or id-mask themselves) the same way.
+    """
+    return pad_rows(corpus, multiple)
+
+
+def mask_invalid(scores: jax.Array, ids: jax.Array, n_valid: int):
+    """Force padded ids out of any subsequent merge."""
+    bad = ids >= n_valid
+    return jnp.where(bad, jnp.finfo(jnp.float32).min, scores), jnp.where(bad, -1, ids)
 
 
 @partial(jax.jit, static_argnames=("k", "chunk", "score_fn"))
@@ -41,7 +65,10 @@ def chunked_topk(
     ``lax.scan`` over corpus row-chunks carrying a running (scores, ids)
     top-k — the streaming formulation that keeps the working set at
     O(Q * (k + chunk)) regardless of N.  Requires N % chunk == 0 (callers
-    pad with -inf sentinel rows via ``pad_corpus``).
+    pad via ``pad_corpus`` and id-mask the result with ``mask_invalid``).
+
+    Generic score-fn version; the index hot path uses the engine's fused
+    Pallas kernels instead (``engine.topk``).
     """
     Q = queries.shape[0]
     N = corpus.shape[0]
@@ -66,26 +93,6 @@ def chunked_topk(
     return best_s, best_i
 
 
-def pad_corpus(corpus: jax.Array, multiple: int):
-    """Pad corpus rows to a multiple; returns (padded, n_valid).
-
-    Padding rows are zeros — callers must mask ids >= n_valid or rely on
-    sentinel scores (zero vectors score 0 for IP; for L2 they can win, so
-    flat search masks by id).
-    """
-    n = corpus.shape[0]
-    target = ((n + multiple - 1) // multiple) * multiple
-    if target == n:
-        return corpus, n
-    return jnp.pad(corpus, ((0, target - n), (0, 0))), n
-
-
-def mask_invalid(scores: jax.Array, ids: jax.Array, n_valid: int):
-    """Force padded ids out of any subsequent merge."""
-    bad = ids >= n_valid
-    return jnp.where(bad, jnp.finfo(jnp.float32).min, scores), jnp.where(bad, -1, ids)
-
-
 # --------------------------------------------------------------------------
 # Distributed merge (corpus row-sharded over one or more mesh axes)
 # --------------------------------------------------------------------------
@@ -104,6 +111,9 @@ def distributed_topk(
     k entries per query per shard — O(shards * Q * k) bytes, independent of
     corpus size N.  (A butterfly collective_permute halves wire bytes at
     log-depth; see EXPERIMENTS.md §Perf for why all_gather wins at k=100.)
+
+    Shard-local stores built with ``CodeStore(base=offset)`` already
+    return rebased ids from the engine — pass ``shard_offset=0`` there.
     """
     gids = jnp.where(local_ids >= 0, local_ids + shard_offset, -1)
     names = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)

@@ -58,14 +58,22 @@ def main():
     jax.block_until_ready(index.search(queries[: args.batch], args.k, sp).ids)
     t0 = time.perf_counter()
     served = 0
+    stats = {}
+    total_bytes = 0
     for r in range(args.requests):
         q = queries[r * args.batch : (r + 1) * args.batch]
         res = index.search(q, args.k, sp)
         jax.block_until_ready(res.ids)
         served += int(q.shape[0])
+        stats = res.stats
+        total_bytes += int(stats.get("bytes_read", 0))
     dt = time.perf_counter() - t0
     print(f"[serve] {served} queries in {dt:.3f}s -> {served / dt:.1f} QPS "
           f"(k={args.k}, corpus={index.n}, kind={index.kind})")
+    # per-search engine accounting (uniform across kinds): candidates
+    # scored, chunks scanned, payload bytes read — see DESIGN.md §8
+    print(f"[serve] stats/request={stats} "
+          f"bytes_read/session={total_bytes}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,356 @@
+"""Scoring-engine tests: CodeStore storage/accounting, int4 pack round-trip
+and packed-vs-unpacked score parity, fused score+top-k kernel parity vs the
+jnp oracles + ``jax.lax.top_k``, the centralized pad/mask contract (the L2
+zero-sentinel regression), lpq4 factory strings, and the uniform per-search
+stats every kind emits.  Kernels run in interpret mode on CPU."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # no hypothesis on this container: see pyproject [test]
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro import engine
+from repro.core import pack as PK
+from repro.core import quant as Qz
+from repro.core.preserve import recall_at_k
+from repro.kernels import ops as K
+from repro.kernels import ref
+from repro.knn import QuantSpec, SearchParams, make_index
+
+
+# --------------------------------------------------------------------------
+# int4 packing: round-trip + packed-vs-unpacked score parity (properties)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.integers(1, 48),
+       half_d=st.integers(1, 24))
+def test_int4_roundtrip_through_store(seed, n, half_d):
+    key = jax.random.PRNGKey(seed)
+    codes = jax.random.randint(key, (n, half_d * 2), -8, 8, dtype=jnp.int8)
+    params = Qz.QuantParams(
+        lo=jnp.full((half_d * 2,), -1.0), hi=jnp.full((half_d * 2,), 1.0),
+        zero=jnp.zeros((half_d * 2,)), bits=4, scheme="absmax",
+    )
+    store = engine.CodeStore.from_codes(codes, params, pack=True)
+    assert store.data.dtype == jnp.uint8
+    assert store.data.shape == (n, half_d)
+    np.testing.assert_array_equal(np.asarray(store.unpacked()),
+                                  np.asarray(codes))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.integers(1, 64),
+       d=st.integers(1, 40), metric=st.sampled_from(["ip", "l2"]))
+def test_packed_scores_match_unpacked(seed, n, d, metric):
+    """qmip4/ql24 over packed bytes == qmip/ql2 over full-width codes."""
+    d = d * 2  # kernels take the even/odd split; odd-d goes via CodeStore
+    kq, kx = jax.random.split(jax.random.PRNGKey(seed))
+    q = jax.random.randint(kq, (3, d), -8, 8, dtype=jnp.int8)
+    x = jax.random.randint(kx, (n, d), -8, 8, dtype=jnp.int8)
+    packed = PK.pack_int4(x)
+    if metric == "ip":
+        got, want = K.qmip4(q, packed), ref.qmip_ref(q, x)
+    else:
+        got, want = K.ql24(q, packed), ref.ql2_ref(q, x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --------------------------------------------------------------------------
+# fused score+top-k kernel vs oracle scoring + lax.top_k
+# --------------------------------------------------------------------------
+
+FUSED_SHAPES = [
+    (1, 1, 8),          # degenerate
+    (1, 700, 64),       # single query, pad tail
+    (7, 333, 100),      # ragged everything
+    (37, 1000, 96),
+    (9, 513, 128),      # one row over a tile
+]
+
+
+def _assert_topk_consistent(scores, ids, full, k):
+    """Exact score parity; ids must reproduce their reported score (ties
+    may legally reorder between selection algorithms)."""
+    want_s = np.sort(np.asarray(full), axis=1)[:, ::-1][:, :k]
+    np.testing.assert_array_equal(np.asarray(scores), want_s)
+    got_i = np.asarray(ids)
+    got_s = np.asarray(scores)
+    for r in range(got_i.shape[0]):
+        assert (got_i[r] >= 0).all()
+        np.testing.assert_array_equal(np.asarray(full)[r][got_i[r]], got_s[r])
+
+
+@pytest.mark.parametrize("q_rows,n_rows,d", FUSED_SHAPES)
+@pytest.mark.parametrize("metric", ["ip", "l2"])
+def test_fused_topk_matches_ref_int8(q_rows, n_rows, d, metric):
+    kq, kx = jax.random.split(jax.random.PRNGKey(q_rows * 31 + n_rows))
+    q = jax.random.randint(kq, (q_rows, d), -128, 128, dtype=jnp.int8)
+    x = jax.random.randint(kx, (n_rows, d), -128, 128, dtype=jnp.int8)
+    k = min(10, n_rows)
+    s, i = K.fused_topk(q, x, k, metric)
+    full = ref.qmip_ref(q, x) if metric == "ip" else ref.ql2_ref(q, x)
+    _assert_topk_consistent(s, i, full, k)
+    # and against lax.top_k end-to-end (scores sorted identically)
+    ls, _li = jax.lax.top_k(full.astype(jnp.float32), k)
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(ls))
+
+
+@pytest.mark.parametrize("metric", ["ip", "l2"])
+def test_fused_topk_matches_ref_int4_packed(metric):
+    kq, kx = jax.random.split(jax.random.PRNGKey(5))
+    q = jax.random.randint(kq, (6, 50), -8, 8, dtype=jnp.int8)
+    x = jax.random.randint(kx, (777, 50), -8, 8, dtype=jnp.int8)
+    s, i = K.fused_topk(q, PK.pack_int4(x), 17, metric, packed=True)
+    full = ref.qmip_ref(q, x) if metric == "ip" else ref.ql2_ref(q, x)
+    _assert_topk_consistent(s, i, full, 17)
+
+
+def test_fused_topk_fp32_matches_xla():
+    kq, kx = jax.random.split(jax.random.PRNGKey(7))
+    q = jax.random.normal(kq, (5, 48))
+    x = jax.random.normal(kx, (600, 48))
+    for metric in ("ip", "l2"):
+        s, i = K.fused_topk(q, x, 12, metric)
+        ws, _ = K.fused_topk(q, x, 12, metric, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(ws),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_fused_topk_l2_padding_never_wins():
+    """The zero-sentinel regression: every corpus row is far from the
+    origin, so an unmasked zero pad row would out-score all of them under
+    negated L2.  The engine id-masks in-kernel — only valid ids return."""
+    x = jnp.ones((1000, 16), jnp.float32) * 50.0       # pads to 1024 rows
+    q = jnp.ones((4, 16), jnp.float32) * 49.0
+    s, i = K.fused_topk(q, x, 10, "l2")
+    ids = np.asarray(i)
+    assert ids.min() >= 0 and ids.max() < 1000
+    st = engine.CodeStore.dense(x)
+    _s2, i2, _ = engine.topk(q, st, 10, "l2")
+    assert np.asarray(i2).max() < 1000 and np.asarray(i2).min() >= 0
+
+
+# --------------------------------------------------------------------------
+# engine.topk over stores: precision arms agree with exact search
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def corpus_queries():
+    corpus = jax.random.normal(jax.random.PRNGKey(0), (900, 32)) * 0.05
+    queries = jax.random.normal(jax.random.PRNGKey(1), (16, 32)) * 0.05
+    return corpus, queries
+
+
+def test_engine_topk_packed_equals_unpacked(corpus_queries):
+    """Bit-packing is a storage layout, not a math change: identical
+    scores (exact integer parity) from packed and unpacked int4 stores."""
+    corpus, queries = corpus_queries
+    params = Qz.learn_params(corpus, bits=4, scheme="gaussian", sigmas=3.0)
+    codes = Qz.quantize(corpus, params)
+    packed = engine.CodeStore.from_codes(codes, params, pack=True)
+    unpacked = engine.CodeStore.from_codes(codes, params, pack=False)
+    for metric in ("ip", "l2", "angular"):
+        sp, ip_ = engine.topk(queries, packed, 10, metric)[:2]
+        su, iu = engine.topk(queries, unpacked, 10, metric)[:2]
+        np.testing.assert_allclose(np.asarray(sp), np.asarray(su), rtol=1e-6)
+    assert packed.memory_bytes() < 0.6 * unpacked.memory_bytes()
+
+
+def test_engine_fused_path_matches_scan_path(corpus_queries):
+    """interpret=True forces the fused Pallas kernel through engine.topk
+    (the TPU hot path, interpreted); it must agree exactly with the XLA
+    streaming scan the engine uses off-TPU."""
+    corpus, queries = corpus_queries
+    params = Qz.learn_params(corpus, bits=8, scheme="gaussian", sigmas=3.0)
+    store = engine.CodeStore.from_codes(Qz.quantize(corpus, params), params)
+    for metric in ("ip", "l2"):
+        sf, idf, stf = engine.topk(queries, store, 10, metric, chunk=256,
+                                   interpret=True)
+        ss, ids, sts = engine.topk(queries, store, 10, metric, chunk=256)
+        np.testing.assert_array_equal(np.asarray(sf), np.asarray(ss))
+        np.testing.assert_array_equal(np.asarray(idf), np.asarray(ids))
+        assert stf["bytes_read"] > 0 and sts["bytes_read"] > 0
+
+
+def test_engine_store_base_rebases_ids(corpus_queries):
+    """Shard-local stores rebase ids for the distributed merge."""
+    corpus, queries = corpus_queries
+    st = engine.CodeStore.dense(corpus, base=10_000)
+    _s, i, _ = engine.topk(queries, st, 5, "ip")
+    ids = np.asarray(i)
+    assert ids.min() >= 10_000 and ids.max() < 10_000 + corpus.shape[0]
+
+
+def test_engine_odd_dim_packs(corpus_queries):
+    """Odd d packs via the zero-code pad column without score drift."""
+    corpus, queries = corpus_queries
+    corpus = corpus[:, :31]
+    queries = queries[:, :31]
+    params = Qz.learn_params(corpus, bits=4, scheme="gaussian", sigmas=3.0)
+    codes = Qz.quantize(corpus, params)
+    packed = engine.CodeStore.from_codes(codes, params, pack=True)
+    unpacked = engine.CodeStore.from_codes(codes, params, pack=False)
+    assert packed.data.shape == (900, 16)
+    sp = engine.topk(queries, packed, 10, "l2")[0]
+    su = engine.topk(queries, unpacked, 10, "l2")[0]
+    np.testing.assert_allclose(np.asarray(sp), np.asarray(su), rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# lpq4 factory arm: half the lpq8 bytes, recall parity with unpacked int4
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("factory8,factory4", [
+    ("flat,lpq8@gaussian:3", "flat,lpq4@gaussian:3"),
+    ("ivf8,lpq8@gaussian:3", "ivf8,lpq4@gaussian:3"),
+])
+def test_lpq4_memory_halves_vs_lpq8(corpus_queries, factory8, factory4):
+    corpus, _queries = corpus_queries
+    idx8 = make_index(factory8, corpus, key=jax.random.PRNGKey(0),
+                      **({"kmeans_iters": 4} if "ivf" in factory8 else {}))
+    idx4 = make_index(factory4, corpus, key=jax.random.PRNGKey(0),
+                      **({"kmeans_iters": 4} if "ivf" in factory4 else {}))
+    assert idx4.store.packed and idx4.store.bits == 4
+    # payload is exactly half; the shared constants/centroids dilute the
+    # total slightly — stay under 0.65x end to end
+    ratio = idx4.memory_bytes() / idx8.memory_bytes()
+    assert ratio < 0.65, ratio
+
+
+@pytest.mark.parametrize("kind", ["flat", "ivf8"])
+def test_lpq4_recall_parity_with_unpacked_int4(corpus_queries, kind):
+    """Packed lpq4 returns the same neighbors as an unpacked-int4 build
+    (identical integer scores; ties may reorder)."""
+    corpus, queries = corpus_queries
+    gt = np.asarray(make_index(kind.rstrip("8") if kind == "flat" else kind,
+                               corpus).search(queries, 10).ids)
+    packed_idx = make_index(f"{kind},lpq4@gaussian:3", corpus,
+                            key=jax.random.PRNGKey(0))
+    spec_unpacked = QuantSpec(bits=4, scheme="gaussian", sigmas=3.0,
+                              packed=False)
+    from repro.knn import IndexSpec
+
+    params = {"nlist": 8} if kind == "ivf8" else {}
+    unpacked_idx = make_index(
+        IndexSpec(kind="flat" if kind == "flat" else "ivf",
+                  quant=spec_unpacked, params=params),
+        corpus, key=jax.random.PRNGKey(0),
+    )
+    assert not unpacked_idx.store.packed
+    sp = SearchParams(nprobe=8)
+    ids_p = np.asarray(packed_idx.search(queries, 10, sp).ids)
+    ids_u = np.asarray(unpacked_idx.search(queries, 10, sp).ids)
+    parity = float(recall_at_k(jnp.asarray(ids_u), jnp.asarray(ids_p)))
+    assert parity > 0.99, parity
+    # and the 4-bit arm still finds mostly-true neighbors
+    rec = float(recall_at_k(jnp.asarray(gt), jnp.asarray(ids_p)))
+    assert rec > 0.5, rec
+
+
+def test_lpq4_hnsw_and_graph_build_and_search(corpus_queries):
+    """Packed storage behind the graph walks: gather-unpack scoring."""
+    corpus, queries = corpus_queries
+    corpus, queries = corpus[:400], queries[:8]
+    gt = np.asarray(make_index("flat", corpus).search(queries, 10).ids)
+    for factory, over in (
+        ("hnsw8,lpq4@gaussian:3", {"ef_construction": 40, "batch_size": 128}),
+        ("graph16,lpq4@gaussian:3", {"n_seeds": 16}),
+    ):
+        idx = make_index(factory, corpus, key=jax.random.PRNGKey(0), **over)
+        assert idx.store.packed and idx.store.bits == 4
+        ids = np.asarray(idx.search(queries, 10,
+                                    SearchParams(ef_search=80)).ids)
+        overlap = np.mean([len(set(a) & set(b)) / 10 for a, b in zip(gt, ids)])
+        assert overlap > 0.4, (factory, overlap)
+
+
+# --------------------------------------------------------------------------
+# uniform stats + accounting fixes
+# --------------------------------------------------------------------------
+
+def test_stats_uniform_across_kinds(corpus_queries):
+    """Every kind reports the engine accounting block (satellite: real
+    per-search stats surfaced uniformly)."""
+    corpus, queries = corpus_queries
+    cases = {
+        "flat": ("flat,lpq8@gaussian:3", {}),
+        "ivf": ("ivf8,lpq8@gaussian:3", {"kmeans_iters": 4}),
+        "hnsw": ("hnsw8,lpq8@gaussian:3",
+                 {"ef_construction": 40, "batch_size": 128}),
+        "graph": ("graph16,lpq8@gaussian:3", {"n_seeds": 16}),
+        "pq": ("pq16+lpq", {"kmeans_iters": 4}),
+    }
+    sp = SearchParams(nprobe=4, ef_search=40, chunk=256)
+    for kind, (factory, over) in cases.items():
+        idx = make_index(factory, corpus[:512], key=jax.random.PRNGKey(0),
+                         **over)
+        stats = idx.search(queries, 5, sp).stats
+        for field in ("kind", "candidates", "chunks", "bytes_read",
+                      "bits", "packed"):
+            assert field in stats, (kind, field, stats)
+        assert stats["kind"] == kind
+        assert stats["candidates"] > 0 and stats["bytes_read"] > 0
+
+
+def test_flat_memory_bytes_honest_at_4_bits(corpus_queries):
+    """Regression: FlatIndex.memory_bytes hard-coded 1 byte/code, so the
+    4-bit arm misreported Table 1 memory by 2x.  CodeStore accounting
+    reports true packed bytes."""
+    corpus, _q = corpus_queries
+    n, d = corpus.shape
+    idx4 = make_index("flat,lpq4@gaussian:3", corpus)
+    idx8 = make_index("flat,lpq8@gaussian:3", corpus)
+    consts = 3 * d * 4
+    assert idx8.memory_bytes() == n * d + consts
+    assert idx4.memory_bytes() == n * d // 2 + consts
+
+
+def test_topk_pads_uniformly_when_k_exceeds_n(corpus_queries):
+    """Every kind honors the [Q, k] / -1-pad SearchResult contract."""
+    corpus, queries = corpus_queries
+    small = corpus[:6]
+    for factory in ("flat", "flat,lpq4@gaussian:3"):
+        res = make_index(factory, small).search(queries, 10)
+        assert res.ids.shape == (queries.shape[0], 10)
+        assert (np.asarray(res.ids)[:, 6:] == -1).all()
+    res = make_index("pq16", small, kmeans_iters=2).search(queries, 10)
+    assert res.ids.shape == (queries.shape[0], 10)
+    assert (np.asarray(res.ids)[:, 6:] == -1).all()
+
+
+def test_wide_bits_rejected_early(corpus_queries):
+    """B > 8 would overflow the engine's int32 score accumulation
+    (d * (2^15)^2 > 2^31 at d >= 2) — rejected at parse/build, not by a
+    kernel assert deep in the first search."""
+    corpus, _q = corpus_queries
+    with pytest.raises(ValueError, match=r"\[1, 8\]"):
+        make_index("flat,lpq16@gaussian:3", corpus)
+    with pytest.raises(ValueError, match="B <= 8"):
+        QuantSpec(bits=16).build_store(corpus)
+
+
+def test_pq_rejects_angular_at_build(corpus_queries):
+    corpus, _q = corpus_queries
+    with pytest.raises(ValueError, match="ip and l2"):
+        make_index("pq16,angular", corpus[:256], kmeans_iters=2)
+
+
+def test_store_roundtrips_through_save_load(corpus_queries, tmp_path):
+    corpus, queries = corpus_queries
+    idx = make_index("flat,lpq4@gaussian:3", corpus)
+    path = str(tmp_path / "lpq4.npz")
+    idx.save(path)
+    from repro.knn import load_index
+
+    back = load_index(path)
+    assert back.store.packed and back.store.bits == 4
+    a = idx.search(queries, 10)
+    b = back.search(queries, 10)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    assert back.memory_bytes() == idx.memory_bytes()
