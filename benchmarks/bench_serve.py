@@ -1,0 +1,148 @@
+"""Searcher-based serving benchmark: kind × quant × rerank-depth →
+QPS + p95 latency, writing the perf-trajectory file ``BENCH_serve.json``
+(plus the harness CSV rows).
+
+Every arm builds through the factory registry, plans one
+``index.searcher(k, params)`` session, and drains a fixed request queue
+through the compiled buckets — the exact serving path of
+``launch/serve.py``, measured.  The paper's headline (quantized scans
+buy QPS; §3.4 rerank buys the recall back) shows up as the
+lpq8/lpq4-vs-fp32 QPS ratios and the rerank arms' recall column.  On
+this CPU container absolute numbers are structural; the file's value is
+the trajectory (same shapes, same arms, every CI run).
+
+    PYTHONPATH=src python -m benchmarks.bench_serve            # full
+    PYTHONPATH=src python -m benchmarks.bench_serve --smoke    # CI
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, sized
+from repro.core.preserve import recall_at_k
+from repro.data import synthetic
+from repro.knn import SearchParams, make_index
+
+K_TOP = 10
+
+#: (kind fragment, build overrides) — one cheap structure per index family
+KINDS = {
+    "flat": ("flat", {}),
+    "ivf": ("ivf64", {"kmeans_iters": 4}),
+}
+
+#: quant fragment per arm ("" = fp32)
+QUANTS = {"fp32": "", "lpq8": "lpq8@gaussian:3", "lpq4": "lpq4"}
+
+#: rerank candidate depths (0 = no rerank tail)
+RERANK_DEPTHS = (0, 50)
+
+
+def _factory(kind_frag: str, quant_frag: str, depth: int) -> str:
+    parts = [kind_frag]
+    if quant_frag:
+        parts.append(quant_frag + ("+r32" if depth else ""))
+    elif depth:
+        parts.append("r32")
+    return ",".join(parts)
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20000)
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes + flat-only (the CI interpret-mode check)")
+    args = ap.parse_args(argv)
+
+    n = 2048 if args.smoke else sized(args.n)
+    requests = 4 if args.smoke else args.requests
+    kinds = {"flat": KINDS["flat"]} if args.smoke else KINDS
+    depths = (0, 50) if not args.smoke else (0, 32)
+
+    corpus, queries, metric = synthetic.load("product", n, args.batch * requests)
+    corpus = corpus[:, : args.d]
+    queries = queries[:, : args.d]
+    gt = np.asarray(
+        make_index("flat", corpus, metric=metric).search(queries, K_TOP).ids
+    )
+    sp = SearchParams(nprobe=8, ef_search=100)
+
+    results = {
+        "meta": {
+            "n": n, "d": args.d, "batch": args.batch, "k": K_TOP,
+            "requests": requests, "backend": jax.default_backend(),
+            "platform": platform.platform(), "smoke": bool(args.smoke),
+        },
+        "cells": {},
+    }
+
+    for kname, (kind_frag, over) in kinds.items():
+        for qname, quant_frag in QUANTS.items():
+            for depth in depths:
+                if qname == "fp32" and depth:
+                    continue                 # nothing to recover for fp32
+                factory = _factory(kind_frag, quant_frag, depth)
+                name = f"{kname}/{qname}/r{depth}"
+                index = make_index(factory, corpus, metric=metric,
+                                   key=jax.random.PRNGKey(0), **over)
+                searcher = index.searcher(
+                    K_TOP, sp, batch_sizes=(args.batch,),
+                    rerank=depth or False,
+                )
+                jax.block_until_ready(searcher(queries[: args.batch]).ids)
+
+                lat, all_ids = [], []
+                for r in range(requests):
+                    q = queries[r * args.batch : (r + 1) * args.batch]
+                    t0 = time.perf_counter()
+                    res = searcher(q)
+                    jax.block_until_ready(res.ids)
+                    lat.append(time.perf_counter() - t0)
+                    all_ids.append(np.asarray(res.ids))
+                qps = args.batch * requests / sum(lat)
+                p95 = float(np.percentile(lat, 95))
+                rec = float(recall_at_k(gt, np.concatenate(all_ids)))
+                results["cells"][name] = {
+                    "factory": factory, "qps": qps, "p95_ms": p95 * 1e3,
+                    "recall_at_10": rec,
+                    "memory_mb": index.memory_bytes() / 1e6,
+                }
+                emit(f"bench_serve/{name}", sum(lat) / requests,
+                     f"qps={qps:.1f} p95_ms={p95 * 1e3:.2f} recall={rec:.4f}")
+
+    # headline ratios: quantized-scan QPS gain and what rerank costs/buys
+    cells = results["cells"]
+    ratios = {}
+    for kname in kinds:
+        fp = cells.get(f"{kname}/fp32/r0")
+        for qname in ("lpq8", "lpq4"):
+            c = cells.get(f"{kname}/{qname}/r0")
+            if fp and c:
+                ratios[f"{kname}/{qname}_qps_over_fp32"] = c["qps"] / max(fp["qps"], 1e-9)
+        d = depths[-1]
+        base = cells.get(f"{kname}/lpq4/r0")
+        rr = cells.get(f"{kname}/lpq4/r{d}")
+        if base and rr:
+            ratios[f"{kname}/lpq4_rerank_recall_gain"] = (
+                rr["recall_at_10"] - base["recall_at_10"]
+            )
+    results["ratios"] = ratios
+
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    print(f"[bench_serve] wrote {args.out} ({len(cells)} cells)")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,7 @@ import traceback
 
 from benchmarks import (
     bench_kernels,
+    bench_serve,
     fig1_distribution,
     fig2_qps_recall,
     kernel_bench,
@@ -28,9 +29,10 @@ SUITES = {
     "table2": table2_exact_recall.main,
     "retrieval": retrieval_bench.main,
     "kernels": kernel_bench.main,
-    # engine dispatch-table microbench (smoke shapes when run via the
-    # orchestrator; invoke the module directly for full sizes)
+    # engine dispatch-table / Searcher serving benches (smoke shapes when
+    # run via the orchestrator; invoke the modules directly for full sizes)
     "bench_kernels": lambda: bench_kernels.main(["--smoke"]),
+    "bench_serve": lambda: bench_serve.main(["--smoke"]),
     "table3": table3_graph_recall.main,
     "table1": table1_build_memory.main,
     "fig2": fig2_qps_recall.main,

@@ -58,6 +58,19 @@ def main():
         rec = float(recall_at_k(gt, res.ids))
         print(f"  nprobe={nprobe:3d} int8: recall@{args.k}={rec:.4f}")
 
+    print("== Searcher: plan once, serve mixed batches (DESIGN.md §9) ==")
+    lpq4 = make_index("flat,lpq4", corpus, metric=metric)
+    rer = make_index("flat,lpq4+r32", corpus, metric=metric)
+    searcher = rer.searcher(args.k, batch_sizes=(1, 8, 64))
+    for qn in (1, 7, 64):
+        res = searcher(queries[:qn])
+        print(f"  batch={qn:3d} -> bucket={res.stats['bucket']:3d} "
+              f"padded={res.stats['padded_q']}")
+    rec4 = float(recall_at_k(gt, lpq4.searcher(args.k)(queries).ids))
+    rec_r = float(recall_at_k(gt, searcher(queries).ids))
+    print(f"  traces={searcher.trace_counts}  recall lpq4={rec4:.4f} "
+          f"-> lpq4+r32={rec_r:.4f} (quantized scan selects, fp32 orders)")
+
     print("== save / load round-trip ==")
     path = os.path.join(tempfile.mkdtemp(), "ivf.npz")
     ivf.save(path)

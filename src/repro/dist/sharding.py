@@ -43,6 +43,7 @@ __all__ = [
     "named",
     "replicated",
     "dp_axes",
+    "corpus_shards",
     "lm_params_sharding",
     "lm_opt_sharding",
     "lm_grad_specs",
@@ -71,6 +72,18 @@ def replicated(mesh: Mesh, tree: Any):
 def dp_axes(mesh: Mesh) -> tuple[str, ...]:
     """The mesh axes the global batch is sharded over."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def corpus_shards(mesh: Mesh) -> tuple[tuple[str, ...], int]:
+    """Row-sharding rule for serving corpora (DESIGN.md §4/§9).
+
+    A corpus ``CodeStore`` shards its rows over *every* mesh axis —
+    queries are replicated, so there is no reason to leave devices idle —
+    and the Searcher's compiled plan merges shard-local top-k with one
+    k-sized cross-shard pass.  Returns (axes, n_shards).
+    """
+    axes = tuple(mesh.axis_names)
+    return axes, int(mesh.devices.size)
 
 
 def _axes_size(mesh: Mesh, axes: str | tuple[str, ...]) -> int:

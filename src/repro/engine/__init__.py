@@ -8,6 +8,7 @@ from repro.engine.scorer import (
     make_score_set,
     merge_topk,
     pad_rows,
+    rerank_among,
     search_stats,
     topk,
     topk_among,
@@ -19,6 +20,7 @@ __all__ = [
     "PQStore",
     "topk",
     "topk_among",
+    "rerank_among",
     "make_score_set",
     "search_stats",
     "merge_topk",

@@ -277,6 +277,37 @@ def topk_among(
 
 
 # --------------------------------------------------------------------------
+# rerank tail (Searcher §3.4 recall recovery: quantized scan -> exact pass)
+# --------------------------------------------------------------------------
+
+def rerank_among(
+    queries: jax.Array,
+    store: CodeStore,
+    cand_ids: jax.Array,
+    k: int,
+    metric: str,
+):
+    """Re-score candidate ids against a higher-precision store.
+
+    The Searcher's rerank tail: ``cand_ids`` [Q, depth] come from a
+    quantized scan (-1 = empty slot); rows are gathered from the fp32 /
+    int8 ``store`` and re-scored by exact distance, returning the best k.
+    Runs inside the caller's jit (``topk_among`` is the compiled body), so
+    scan → rerank → merge is one executable.  Returns (scores, ids, stats
+    delta) — ``bytes_read`` counts the gathered rerank payload.
+    """
+    q = store.encode_queries(jnp.asarray(queries, jnp.float32))
+    s, i = topk_among(q, store, cand_ids, k, metric)
+    depth = int(cand_ids.shape[1])
+    stats = {
+        "reranked": depth,
+        "rerank_bits": int(store.bits),
+        "rerank_bytes": int(cand_ids.shape[0]) * depth * store.row_bytes,
+    }
+    return s, i, stats
+
+
+# --------------------------------------------------------------------------
 # PQ: ADC LUT streaming scan
 # --------------------------------------------------------------------------
 

@@ -119,35 +119,44 @@ class CodeStore:
         return PK.unpack_int4(rows) if self.packed else rows
 
     # -- disk round-trip fragments ----------------------------------------
-    def state(self) -> tuple[dict[str, Any], dict[str, Any]]:
-        arrays: dict[str, Any] = {"data": self.data}
+    def state(self, prefix: str = "") -> tuple[dict[str, Any], dict[str, Any]]:
+        """Serializable (arrays, meta) fragments.
+
+        ``prefix`` namespaces the array keys and the meta record
+        (``{prefix}store``) so one npz can carry several stores — an
+        index's scan store plus its rerank store (``prefix="rr_"``).
+        """
+        arrays: dict[str, Any] = {f"{prefix}data": self.data}
         meta: dict[str, Any] = {
-            "store": {"n": self.n, "d": self.d, "bits": self.bits,
-                      "packed": self.packed, "base": self.base,
-                      "quant": None},
+            f"{prefix}store": {"n": self.n, "d": self.d, "bits": self.bits,
+                               "packed": self.packed, "base": self.base,
+                               "quant": None},
         }
         if self.params is not None:
-            arrays.update(q_lo=self.params.lo, q_hi=self.params.hi,
-                          q_zero=self.params.zero)
-            meta["store"]["quant"] = {"bits": self.params.bits,
-                                      "scheme": self.params.scheme}
+            arrays.update({f"{prefix}q_lo": self.params.lo,
+                           f"{prefix}q_hi": self.params.hi,
+                           f"{prefix}q_zero": self.params.zero})
+            meta[f"{prefix}store"]["quant"] = {"bits": self.params.bits,
+                                               "scheme": self.params.scheme}
         return arrays, meta
 
     @staticmethod
-    def from_state(arrays: dict[str, Any], meta: dict[str, Any]) -> "CodeStore":
-        sm = meta["store"]
+    def from_state(
+        arrays: dict[str, Any], meta: dict[str, Any], prefix: str = ""
+    ) -> "CodeStore":
+        sm = meta[f"{prefix}store"]
         params = None
         if sm["quant"] is not None:
             params = Qz.QuantParams(
-                lo=jnp.asarray(arrays["q_lo"]),
-                hi=jnp.asarray(arrays["q_hi"]),
-                zero=jnp.asarray(arrays["q_zero"]),
+                lo=jnp.asarray(arrays[f"{prefix}q_lo"]),
+                hi=jnp.asarray(arrays[f"{prefix}q_hi"]),
+                zero=jnp.asarray(arrays[f"{prefix}q_zero"]),
                 bits=int(sm["quant"]["bits"]),
                 scheme=str(sm["quant"]["scheme"]),
             )
         return CodeStore(
             n=int(sm["n"]), d=int(sm["d"]), bits=int(sm["bits"]),
-            packed=bool(sm["packed"]), data=jnp.asarray(arrays["data"]),
+            packed=bool(sm["packed"]), data=jnp.asarray(arrays[f"{prefix}data"]),
             params=params, base=int(sm["base"]),
         )
 

@@ -3,11 +3,14 @@
 # primary target), an NGT-equivalent graph index and PQ — behind one
 # unified API: QuantSpec/IndexSpec configs, a common Index protocol
 # (build/search/memory_bytes/save/load), a kind registry with FAISS-style
-# factory strings, plus distributed top-k machinery and graph-construction
-# utilities.  Storage and scoring live one layer down in ``repro.engine``
-# (CodeStore/PQStore + the fused Pallas score/top-k hot path).
+# factory strings, the Searcher query-plan layer (compiled / sharded /
+# rerank-capable search sessions, DESIGN.md §9), plus distributed top-k
+# machinery and graph-construction utilities.  Storage and scoring live
+# one layer down in ``repro.engine`` (CodeStore/PQStore + the fused
+# Pallas score/top-k hot path).
 from repro.knn.base import Index, SearchParams, SearchResult
 from repro.knn.spec import IndexSpec, QuantSpec, parse_factory
+from repro.knn.searcher import Rerank, Searcher
 from repro.knn.flat import FlatIndex
 from repro.knn.ivf import IVFIndex, kmeans
 from repro.knn.hnsw import HNSWIndex
@@ -21,6 +24,8 @@ __all__ = [
     "Index",
     "SearchParams",
     "SearchResult",
+    "Searcher",
+    "Rerank",
     "IndexSpec",
     "QuantSpec",
     "parse_factory",

@@ -49,6 +49,17 @@ class SearchParams:
         live = {k: v for k, v in overrides.items() if v is not None}
         return dataclasses.replace(self, **live) if live else self
 
+    def validate(self) -> "SearchParams":
+        """Reject nonsense knobs at plan time (clear ``ValueError``s now
+        instead of kernel-shape errors deep inside a trace)."""
+        for name in ("chunk", "nprobe", "ef_search"):
+            v = getattr(self, name)
+            if not isinstance(v, int) or isinstance(v, bool) or v <= 0:
+                raise ValueError(
+                    f"SearchParams.{name} must be a positive int, got {v!r}"
+                )
+        return self
+
 
 @dataclasses.dataclass
 class SearchResult:
@@ -82,7 +93,14 @@ jax.tree_util.register_pytree_node(
 
 @runtime_checkable
 class Index(Protocol):
-    """Structural protocol every registered index satisfies."""
+    """Structural protocol every registered index satisfies.
+
+    The query side is plan-then-execute (DESIGN.md §9): ``plan`` freezes
+    k + SearchParams into a pure runner, ``searcher`` wraps that runner in
+    the compiled/bucketed/rerank-capable ``Searcher`` handle, and
+    ``search`` is sugar — a one-shot searcher call — kept for every
+    pre-plan call site.
+    """
 
     kind: str
 
@@ -91,6 +109,12 @@ class Index(Protocol):
         ...
 
     def search(self, queries, k: int, params: Optional[SearchParams] = None) -> SearchResult:
+        ...
+
+    def plan(self, k: int, params: Optional[SearchParams] = None, *, mesh=None):
+        ...
+
+    def searcher(self, k: int, params: Optional[SearchParams] = None, **kwargs):
         ...
 
     def memory_bytes(self) -> int:

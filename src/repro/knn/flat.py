@@ -23,17 +23,24 @@ from repro import engine
 from repro.core import quant as Qz
 from repro.knn import base as B
 from repro.knn import registry
-from repro.knn.spec import IndexSpec, quant_spec_from_kwargs, resolve_build_spec
+from repro.knn.spec import (
+    IndexSpec,
+    build_rerank_store,
+    quant_spec_from_kwargs,
+    resolve_build_spec,
+)
 
 
 @registry.register("flat")
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class FlatIndex:
-    """Exhaustive index: a metric plus one engine ``CodeStore``."""
+    """Exhaustive index: a metric plus one engine ``CodeStore`` (plus an
+    optional higher-precision rerank store for ``+rN`` builds)."""
 
     metric: str = dataclasses.field(metadata=dict(static=True))
     store: engine.CodeStore
+    rerank_store: Optional[engine.CodeStore] = None
 
     # -- legacy views (pre-engine callers and tests) -----------------------
     @property
@@ -82,7 +89,8 @@ class FlatIndex:
             if spec.quant is None
             else spec.quant.build_store(corpus)
         )
-        return FlatIndex(metric=spec.metric, store=store)
+        return FlatIndex(metric=spec.metric, store=store,
+                         rerank_store=build_rerank_store(spec, corpus))
 
     @staticmethod
     def from_store(store: engine.CodeStore, metric: str) -> "FlatIndex":
@@ -95,6 +103,40 @@ class FlatIndex:
         """h(q) of Definition 2: queries enter the quantized space too."""
         return self.store.encode_queries(queries)
 
+    def plan(
+        self,
+        k: int,
+        params: Optional[B.SearchParams] = None,
+        *,
+        mesh=None,
+    ):
+        """Freeze (k, params) into a pure runner (DESIGN.md §9).
+
+        With a mesh, the runner row-shards the store and fuses the
+        shard-local top-k with one cross-shard merge — the flat kind is
+        the row-shardable scan the sharded Searcher compiles.
+        """
+        sp = params or B.SearchParams()
+        if mesh is not None:
+            from repro.knn.searcher import sharded_scan_plan
+
+            return sharded_scan_plan(self.store, self.metric, k, mesh,
+                                     chunk=sp.chunk)
+
+        def run(queries: jax.Array) -> B.SearchResult:
+            q = self.prepare_queries(queries)
+            s, i, stats = engine.topk(
+                q, self.store, k, self.metric, chunk=sp.chunk, prepared=True
+            )
+            return B.SearchResult(s, i, {"kind": "flat", **stats})
+
+        return run
+
+    def searcher(self, k: int, params: Optional[B.SearchParams] = None, **kw):
+        from repro.knn.searcher import Searcher
+
+        return Searcher(self, k, params, **kw)
+
     def search(
         self,
         queries: jax.Array,
@@ -103,25 +145,27 @@ class FlatIndex:
         *,
         chunk: int | None = None,
     ) -> B.SearchResult:
-        """Exhaustive streaming top-k through ``engine.topk``.
+        """One-shot plan-and-run (scores [Q, k] f32, ids [Q, k] i32,
+        larger-is-closer); ``searcher()`` is the compiled session."""
+        from repro.knn import searcher as S
 
-        Returns a ``SearchResult`` (scores [Q, k] f32, ids [Q, k] i32),
-        larger-is-closer.
-        """
         sp = (params or B.SearchParams()).merged(chunk=chunk)
-        q = self.prepare_queries(queries)
-        s, i, stats = engine.topk(
-            q, self.store, k, self.metric, chunk=sp.chunk, prepared=True
-        )
-        return B.SearchResult(s, i, {"kind": "flat", **stats})
+        return S.one_shot(self, queries, k, sp)
 
     # -- accounting (paper Table 1/2 memory column) -------------------------
     def memory_bytes(self) -> int:
-        return self.store.memory_bytes()
+        total = self.store.memory_bytes()
+        if self.rerank_store is not None:
+            total += self.rerank_store.memory_bytes()
+        return total
 
     # -- disk round-trip ---------------------------------------------------
     def save(self, path: str) -> None:
         arrays, meta = self.store.state()
+        if self.rerank_store is not None:
+            rr_a, rr_m = self.rerank_store.state(prefix="rr_")
+            arrays.update(rr_a)
+            meta.update(rr_m)
         B.save_state(
             path, arrays,
             {"kind": "flat", "metric": self.metric,
@@ -131,7 +175,10 @@ class FlatIndex:
     @staticmethod
     def load(path: str) -> "FlatIndex":
         arrays, meta = B.load_state(path)
+        rr = (engine.CodeStore.from_state(arrays, meta, prefix="rr_")
+              if "rr_store" in meta else None)
         return FlatIndex(
             metric=meta["metric"],
             store=engine.CodeStore.from_state(arrays, meta),
+            rerank_store=rr,
         )

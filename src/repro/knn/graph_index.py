@@ -32,7 +32,12 @@ from repro.knn import graph as G
 from repro.knn import ivf as IVF
 from repro.knn import registry
 from repro.knn.flat import FlatIndex
-from repro.knn.spec import IndexSpec, quant_spec_from_kwargs, resolve_build_spec
+from repro.knn.spec import (
+    IndexSpec,
+    build_rerank_store,
+    quant_spec_from_kwargs,
+    resolve_build_spec,
+)
 
 
 @registry.register("graph")
@@ -45,6 +50,9 @@ class GraphIndex:
     seeds: jax.Array                    # [n_seeds, d] f32 centroids
     seed_ids: jax.Array                 # [n_seeds] nearest corpus row per centroid
     build_seconds: float = 0.0
+    # rerank store lives in the ORIGINAL (un-augmented) space: the walk
+    # runs on the internal metric, the rerank tail on the user's metric
+    rerank_store: Optional[engine.CodeStore] = None
     # MIP -> L2 reduction (Bachrach et al. [6], cited by the paper): graph
     # walks on inner product suffer hub capture; augmenting vectors with
     # sqrt(M^2 - ||x||^2) makes L2 ordering == IP ordering, and the graph
@@ -96,6 +104,7 @@ class GraphIndex:
         if key is None:
             key = jax.random.PRNGKey(0)
         corpus = jnp.asarray(corpus, jnp.float32)
+        user_corpus = corpus                 # pre-augmentation, for rerank
 
         aug = metric == "ip"
         internal_metric = "l2" if aug else metric
@@ -150,6 +159,7 @@ class GraphIndex:
             metric=metric, degree=degree, store=store,
             adj=jnp.asarray(adj), seeds=cents, seed_ids=seed_ids,
             internal_metric=internal_metric, aug=aug,
+            rerank_store=build_rerank_store(spec, user_corpus),
         )
         idx.build_seconds = time.perf_counter() - t0
         return idx
@@ -159,6 +169,61 @@ class GraphIndex:
         """queries must already be in the (possibly augmented) index space."""
         return self.store.encode_queries(queries)
 
+    def plan(
+        self,
+        k: int,
+        params: Optional[B.SearchParams] = None,
+        *,
+        mesh=None,
+    ):
+        """Freeze (k, ef) into a pure seed-probe + beam-walk runner.
+
+        Queries enter in user space; the runner applies the MIP->L2
+        augmentation internally, so the Searcher's rerank tail (user
+        metric, un-augmented store) composes directly on the walked ids.
+        """
+        if mesh is not None:
+            raise ValueError(
+                "sharded searcher plans are flat-only (row-shardable scan); "
+                "the graph walk needs the whole adjacency on every shard"
+            )
+        sp = params or B.SearchParams()
+        ef = max(sp.ef_search, k)
+        score_set = engine.make_score_set(self.store, self.internal_metric)
+        n_entry = min(8, self.seeds.shape[0])
+
+        def run(queries: jax.Array) -> B.SearchResult:
+            qf = jnp.asarray(queries, jnp.float32)
+            if self.aug:
+                qf = jnp.concatenate(
+                    [qf, jnp.zeros((qf.shape[0], 1), jnp.float32)], axis=-1
+                )
+            q = self.prepare_queries(qf)
+
+            # entry points: best seeds through the engine (the "tree" role)
+            _s, probe, _ = engine.topk(
+                qf, engine.CodeStore.dense(self.seeds), n_entry,
+                self.internal_metric,
+            )
+            entry = self.seed_ids[probe]                        # [Q, n_entry]
+
+            scores, ids = G.beam_search_batch(
+                q, self.adj, entry, score_set=score_set, ef=ef
+            )
+            cand_bound = n_entry + 8 * ef * self.degree
+            stats = {"kind": "graph", "ef_search": ef, "n_entry": n_entry,
+                     **engine.search_stats(
+                         self.store, candidates=cand_bound, chunks=1,
+                         rows_read=qf.shape[0] * cand_bound)}
+            return B.SearchResult(scores[:, :k], ids[:, :k], stats)
+
+        return run
+
+    def searcher(self, k: int, params: Optional[B.SearchParams] = None, **kw):
+        from repro.knn.searcher import Searcher
+
+        return Searcher(self, k, params, **kw)
+
     def search(
         self,
         queries: jax.Array,
@@ -167,43 +232,26 @@ class GraphIndex:
         *,
         ef_search: int | None = None,
     ) -> B.SearchResult:
+        from repro.knn import searcher as S
+
         sp = (params or B.SearchParams()).merged(ef_search=ef_search)
-        ef_search = sp.ef_search
-        qf = jnp.asarray(queries, jnp.float32)
-        if self.aug:
-            qf = jnp.concatenate(
-                [qf, jnp.zeros((qf.shape[0], 1), jnp.float32)], axis=-1
-            )
-        q = self.prepare_queries(qf)
-        score_set = engine.make_score_set(self.store, self.internal_metric)
-
-        # entry points: best seeds through the engine (the "tree" role)
-        n_entry = min(8, self.seeds.shape[0])
-        _s, probe, _ = engine.topk(
-            qf, engine.CodeStore.dense(self.seeds), n_entry,
-            self.internal_metric,
-        )
-        entry = self.seed_ids[probe]                            # [Q, n_entry]
-
-        ef = max(ef_search, k)
-        scores, ids = G.beam_search_batch(
-            q, self.adj, entry, score_set=score_set, ef=ef
-        )
-        cand_bound = n_entry + 8 * ef * self.degree
-        stats = {"kind": "graph", "ef_search": ef, "n_entry": n_entry,
-                 **engine.search_stats(
-                     self.store, candidates=cand_bound, chunks=1,
-                     rows_read=qf.shape[0] * cand_bound)}
-        return B.SearchResult(scores[:, :k], ids[:, :k], stats)
+        return S.one_shot(self, queries, k, sp)
 
     def memory_bytes(self) -> int:
         graph = int(self.adj.size) * 4
         seeds = int(self.seeds.size) * 4 + int(self.seed_ids.size) * 4
-        return self.store.memory_bytes() + graph + seeds
+        total = self.store.memory_bytes() + graph + seeds
+        if self.rerank_store is not None:
+            total += self.rerank_store.memory_bytes()
+        return total
 
     # ------------------------------------------------------------------
     def save(self, path: str) -> None:
         arrays, meta = self.store.state()
+        if self.rerank_store is not None:
+            rr_a, rr_m = self.rerank_store.state(prefix="rr_")
+            arrays.update(rr_a)
+            meta.update(rr_m)
         B.save_state(
             path,
             {"adj": self.adj, "seeds": self.seeds,
@@ -225,4 +273,6 @@ class GraphIndex:
             seed_ids=jnp.asarray(arrays["seed_ids"]),
             build_seconds=float(meta.get("build_seconds", 0.0)),
             internal_metric=meta["internal_metric"], aug=meta["aug"],
+            rerank_store=(engine.CodeStore.from_state(arrays, meta, prefix="rr_")
+                          if "rr_store" in meta else None),
         )

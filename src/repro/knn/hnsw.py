@@ -30,7 +30,12 @@ from repro.core import quant as Qz
 from repro.knn import base as B
 from repro.knn import graph as G
 from repro.knn import registry
-from repro.knn.spec import IndexSpec, quant_spec_from_kwargs, resolve_build_spec
+from repro.knn.spec import (
+    IndexSpec,
+    build_rerank_store,
+    quant_spec_from_kwargs,
+    resolve_build_spec,
+)
 
 
 @registry.register("hnsw")
@@ -43,6 +48,7 @@ class HNSWIndex:
     levels: np.ndarray                   # [N] int
     entry: int
     build_seconds: float = 0.0
+    rerank_store: Optional[engine.CodeStore] = None
 
     # ------------------------------------------------------------------
     @property
@@ -192,11 +198,67 @@ class HNSWIndex:
         idx = HNSWIndex(
             metric=metric, m=m, store=store,
             layers=layers, levels=levels, entry=entry,
+            rerank_store=build_rerank_store(spec, corpus),
         )
         idx.build_seconds = time.perf_counter() - t0
         return idx
 
     # ------------------------------------------------------------------
+    def plan(
+        self,
+        k: int,
+        params: Optional[B.SearchParams] = None,
+        *,
+        mesh=None,
+    ):
+        """Freeze (k, ef) into a pure layered-descent + beam runner.
+
+        The graph walk itself is not row-shardable (pointer chasing needs
+        the whole adjacency); the Searcher composes a compiled rerank
+        tail after the beam instead.
+        """
+        if mesh is not None:
+            raise ValueError(
+                "sharded searcher plans are flat-only (row-shardable scan); "
+                "the hnsw walk needs the whole graph on every shard"
+            )
+        sp = params or B.SearchParams()
+        ef = max(sp.ef_search, k)
+        score_set = self._score_set()
+
+        def run(queries: jax.Array) -> B.SearchResult:
+            q = self.prepare_queries(queries)
+            nq = q.shape[0]
+
+            entry = jnp.full((nq,), self.entry, jnp.int32)
+            # upper layers: greedy ef=1 descent
+            for l in range(len(self.layers) - 1, 0, -1):
+                adj_l = self.layers[l]
+                entry = jax.vmap(
+                    lambda qq, ee: G.greedy_descent(qq, adj_l, ee, score_set)[0]
+                )(q, entry)
+
+            scores, ids = G.beam_search_batch(
+                q, self.layers[0], entry[:, None], score_set=score_set, ef=ef
+            )
+            # candidate bound: layer-0 beam expands <= 8*ef nodes of degree
+            # <= 2m each (graph-walk while-loops stop early on convergence)
+            cand_bound = ef + 8 * ef * 2 * self.m
+            stats = {"kind": "hnsw", "ef_search": ef,
+                     "n_layers": len(self.layers),
+                     **engine.search_stats(
+                         self.store, candidates=cand_bound,
+                         chunks=len(self.layers),
+                         rows_read=nq * cand_bound)}
+            return B.SearchResult(scores[:, :k], ids[:, :k], stats)
+
+        return run
+
+    def searcher(self, k: int, params: Optional[B.SearchParams] = None, **kw):
+        from repro.knn.searcher import Searcher
+
+        return Searcher(self, k, params, **kw)
+
     def search(
         self,
         queries: jax.Array,
@@ -205,44 +267,27 @@ class HNSWIndex:
         *,
         ef_search: int | None = None,
     ) -> B.SearchResult:
-        """Layered descent + layer-0 beam; returns a ``SearchResult``
-        (scores, ids) [Q, k]."""
+        """One-shot plan-and-run: layered descent + layer-0 beam."""
+        from repro.knn import searcher as S
+
         sp = (params or B.SearchParams()).merged(ef_search=ef_search)
-        ef_search = sp.ef_search
-        q = self.prepare_queries(queries)
-        score_set = self._score_set()
-        nq = q.shape[0]
-
-        entry = jnp.full((nq,), self.entry, jnp.int32)
-        # upper layers: greedy ef=1 descent
-        for l in range(len(self.layers) - 1, 0, -1):
-            adj_l = self.layers[l]
-            entry = jax.vmap(
-                lambda qq, ee: G.greedy_descent(qq, adj_l, ee, score_set)[0]
-            )(q, entry)
-
-        ef = max(ef_search, k)
-        scores, ids = G.beam_search_batch(
-            q, self.layers[0], entry[:, None], score_set=score_set, ef=ef
-        )
-        # candidate bound: layer-0 beam expands <= 8*ef nodes of degree
-        # <= 2m each (graph-walk while-loops stop early on convergence)
-        cand_bound = ef + 8 * ef * 2 * self.m
-        stats = {"kind": "hnsw", "ef_search": ef, "n_layers": len(self.layers),
-                 **engine.search_stats(
-                     self.store, candidates=cand_bound,
-                     chunks=len(self.layers),
-                     rows_read=nq * cand_bound)}
-        return B.SearchResult(scores[:, :k], ids[:, :k], stats)
+        return S.one_shot(self, queries, k, sp)
 
     # ------------------------------------------------------------------
     def memory_bytes(self) -> int:
         graph = sum(int(a.size) * 4 for a in self.layers)  # native pointers
-        return self.store.memory_bytes() + graph
+        total = self.store.memory_bytes() + graph
+        if self.rerank_store is not None:
+            total += self.rerank_store.memory_bytes()
+        return total
 
     # ------------------------------------------------------------------
     def save(self, path: str) -> None:
         s_arrays, s_meta = self.store.state()
+        if self.rerank_store is not None:
+            rr_a, rr_m = self.rerank_store.state(prefix="rr_")
+            s_arrays = {**s_arrays, **rr_a}
+            s_meta = {**s_meta, **rr_m}
         arrays = {"levels": self.levels, **s_arrays}
         for l, adj in enumerate(self.layers):
             arrays[f"layer_{l}"] = adj
@@ -265,4 +310,6 @@ class HNSWIndex:
             layers=layers, levels=np.asarray(arrays["levels"]),
             entry=int(meta["entry"]),
             build_seconds=float(meta.get("build_seconds", 0.0)),
+            rerank_store=(engine.CodeStore.from_state(arrays, meta, prefix="rr_")
+                          if "rr_store" in meta else None),
         )

@@ -30,7 +30,12 @@ from repro.core import distances as D
 from repro.core import quant as Qz
 from repro.knn import base as B
 from repro.knn import registry
-from repro.knn.spec import IndexSpec, quant_spec_from_kwargs, resolve_build_spec
+from repro.knn.spec import (
+    IndexSpec,
+    build_rerank_store,
+    quant_spec_from_kwargs,
+    resolve_build_spec,
+)
 
 
 # --------------------------------------------------------------------------
@@ -73,6 +78,7 @@ class IVFIndex:
     centroids: jax.Array                 # [nlist, d] f32
     lists: jax.Array                     # [nlist, max_list] i32, -1 pad
     store: engine.CodeStore              # corpus payload at any precision
+    rerank_store: Optional[engine.CodeStore] = None
 
     # -- legacy views ------------------------------------------------------
     @property
@@ -140,11 +146,60 @@ class IVFIndex:
         return IVFIndex(
             metric=spec.metric, nlist=nlist, max_list=max_list,
             centroids=cents, lists=jnp.asarray(lists), store=store,
+            rerank_store=build_rerank_store(spec, corpus),
         )
 
     # ------------------------------------------------------------------
     def prepare_queries(self, queries: jax.Array) -> jax.Array:
         return self.store.encode_queries(queries)
+
+    def plan(
+        self,
+        k: int,
+        params: Optional[B.SearchParams] = None,
+        *,
+        mesh=None,
+    ):
+        """Freeze (k, nprobe) into a pure probe-then-fine-score runner."""
+        if mesh is not None:
+            raise ValueError(
+                "sharded searcher plans are flat-only (row-shardable scan); "
+                "shard the ivf kind by list assignment in a future PR"
+            )
+        sp = params or B.SearchParams()
+        nprobe = min(sp.nprobe, self.nlist)
+
+        def run(queries: jax.Array) -> B.SearchResult:
+            qf = jnp.asarray(queries, jnp.float32)
+            qq = self.prepare_queries(queries)
+
+            # 1) coarse: engine top-k over the (tiny, always-fp32)
+            #    centroid store
+            _cs, probe, _ = engine.topk(
+                qf, engine.CodeStore.dense(self.centroids), nprobe, self.metric
+            )
+
+            # 2) gather candidate ids -> [Q, nprobe * max_list]
+            cand = self.lists[probe].reshape(qq.shape[0], -1)
+
+            # 3) fine scoring + top-k through the engine (gather, unpack-
+            #    as-needed, mask empties, select)
+            scores, ids = engine.topk_among(qq, self.store, cand, k, self.metric)
+
+            stats = {"kind": "ivf", "nprobe": nprobe,
+                     **engine.search_stats(
+                         self.store,
+                         candidates=nprobe * self.max_list,
+                         chunks=nprobe,
+                         rows_read=qq.shape[0] * nprobe * self.max_list)}
+            return B.SearchResult(scores, ids, stats)
+
+        return run
+
+    def searcher(self, k: int, params: Optional[B.SearchParams] = None, **kw):
+        from repro.knn.searcher import Searcher
+
+        return Searcher(self, k, params, **kw)
 
     def search(
         self,
@@ -154,43 +209,27 @@ class IVFIndex:
         *,
         nprobe: int | None = None,
     ) -> B.SearchResult:
-        """Probe the nprobe best lists per query, exact-score the members.
+        """One-shot plan-and-run: probe the nprobe best lists per query,
+        exact-score the members.  Returns ``SearchResult`` [Q, k]."""
+        from repro.knn import searcher as S
 
-        Returns a ``SearchResult`` (scores [Q, k] f32, ids [Q, k] i32).
-        """
         sp = (params or B.SearchParams()).merged(nprobe=nprobe)
-        nprobe = min(sp.nprobe, self.nlist)
-        qf = jnp.asarray(queries, jnp.float32)
-        qq = self.prepare_queries(queries)
-
-        # 1) coarse: engine top-k over the (tiny, always-fp32) centroid store
-        _cs, probe, _ = engine.topk(
-            qf, engine.CodeStore.dense(self.centroids), nprobe, self.metric
-        )
-
-        # 2) gather candidate ids -> [Q, nprobe * max_list]
-        cand = self.lists[probe].reshape(qq.shape[0], -1)
-
-        # 3) fine scoring + top-k through the engine (gather, unpack-as-
-        #    needed, mask empties, select)
-        scores, ids = engine.topk_among(qq, self.store, cand, k, self.metric)
-
-        stats = {"kind": "ivf", "nprobe": nprobe,
-                 **engine.search_stats(
-                     self.store,
-                     candidates=nprobe * self.max_list,
-                     chunks=nprobe,
-                     rows_read=qq.shape[0] * nprobe * self.max_list)}
-        return B.SearchResult(scores, ids, stats)
+        return S.one_shot(self, queries, k, sp)
 
     def memory_bytes(self) -> int:
         base = self.store.memory_bytes()
         base += self.centroids.size * 4 + self.lists.size * 4
+        if self.rerank_store is not None:
+            base += self.rerank_store.memory_bytes()
         return base
 
     # ------------------------------------------------------------------
     def save(self, path: str) -> None:
         arrays, meta = self.store.state()
+        if self.rerank_store is not None:
+            rr_a, rr_m = self.rerank_store.state(prefix="rr_")
+            arrays.update(rr_a)
+            meta.update(rr_m)
         B.save_state(
             path,
             {"centroids": self.centroids, "lists": self.lists, **arrays},
@@ -208,4 +247,6 @@ class IVFIndex:
             centroids=jnp.asarray(arrays["centroids"]),
             lists=jnp.asarray(arrays["lists"]),
             store=engine.CodeStore.from_state(arrays, meta),
+            rerank_store=(engine.CodeStore.from_state(arrays, meta, prefix="rr_")
+                          if "rr_store" in meta else None),
         )

@@ -21,6 +21,7 @@ query time."  Both modes are implemented:
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +30,7 @@ from repro import engine
 from repro.knn import base as B
 from repro.knn import registry
 from repro.knn.ivf import kmeans
-from repro.knn.spec import IndexSpec, resolve_build_spec
+from repro.knn.spec import IndexSpec, build_rerank_store, resolve_build_spec
 
 
 @registry.register("pq")
@@ -38,6 +39,7 @@ from repro.knn.spec import IndexSpec, resolve_build_spec
 class PQIndex:
     metric: str = dataclasses.field(metadata=dict(static=True))
     store: engine.PQStore
+    rerank_store: Optional[engine.CodeStore] = None
 
     # -- legacy views ------------------------------------------------------
     @property
@@ -108,35 +110,70 @@ class PQIndex:
             n=n, m=m, lpq_tables=lpq_tables,
             codes=jnp.stack(codes, 1), codebooks=jnp.stack(books),
         )
-        return PQIndex(metric=metric, store=store)
+        return PQIndex(metric=metric, store=store,
+                       rerank_store=build_rerank_store(spec, corpus))
 
     # ------------------------------------------------------------------
+    def plan(
+        self,
+        k: int,
+        params: "B.SearchParams | None" = None,
+        *,
+        mesh=None,
+    ):
+        """Freeze (k, chunk) into a pure ADC-scan runner.  A rerank tail
+        over a ``"pq16+lpq,r32"`` build is the classic PQ+refine pattern."""
+        if mesh is not None:
+            raise ValueError(
+                "sharded searcher plans are flat-only (row-shardable scan); "
+                "shard the pq kind by code rows in a future PR"
+            )
+        sp = params or B.SearchParams()
+
+        def run(queries: jax.Array) -> B.SearchResult:
+            s, i, stats = engine.topk(
+                queries, self.store, k, self.metric, chunk=sp.chunk
+            )
+            return B.SearchResult(
+                s, i, {"kind": "pq", "m": self.m,
+                       "lpq_tables": self.lpq_tables, **stats},
+            )
+
+        return run
+
+    def searcher(self, k: int, params: "B.SearchParams | None" = None, **kw):
+        from repro.knn.searcher import Searcher
+
+        return Searcher(self, k, params, **kw)
+
     def search(
         self,
         queries: jax.Array,
         k: int,
         params: "B.SearchParams | None" = None,
     ) -> B.SearchResult:
-        """ADC scan through ``engine.topk`` (streaming LUT gather-sum).
+        """One-shot plan-and-run ADC scan (streaming LUT gather-sum).
 
         ``SearchParams.chunk`` sizes the scan tiles; PQ has no other
         search-time knob.
         """
-        sp = params or B.SearchParams()
-        s, i, stats = engine.topk(
-            queries, self.store, k, self.metric, chunk=sp.chunk
-        )
-        return B.SearchResult(
-            s, i, {"kind": "pq", "m": self.m, "lpq_tables": self.lpq_tables,
-                   **stats},
-        )
+        from repro.knn import searcher as S
+
+        return S.one_shot(self, queries, k, params)
 
     def memory_bytes(self) -> int:
-        return self.store.memory_bytes()
+        total = self.store.memory_bytes()
+        if self.rerank_store is not None:
+            total += self.rerank_store.memory_bytes()
+        return total
 
     # ------------------------------------------------------------------
     def save(self, path: str) -> None:
         arrays, meta = self.store.state()
+        if self.rerank_store is not None:
+            rr_a, rr_m = self.rerank_store.state(prefix="rr_")
+            arrays = {**arrays, **rr_a}
+            meta = {**meta, **rr_m}
         B.save_state(
             path, arrays,
             {"kind": "pq", "metric": self.metric, "m": self.m, "n": self.n,
@@ -149,4 +186,6 @@ class PQIndex:
         return PQIndex(
             metric=meta["metric"],
             store=engine.PQStore.from_state(arrays, meta),
+            rerank_store=(engine.CodeStore.from_state(arrays, meta, prefix="rr_")
+                          if "rr_store" in meta else None),
         )

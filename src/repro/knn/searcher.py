@@ -1,0 +1,388 @@
+"""The Searcher: compiled, sharded, rerank-capable search sessions
+(DESIGN.md §9) — the query-plan API behind every index kind.
+
+The paper's throughput claim is a *serving-time* claim, but an eager
+``index.search()`` re-resolves dispatch and re-pads shapes on every
+request.  ``index.searcher(k, params, ...)`` separates plan time from
+query time, the way PR 1 separated build time:
+
+  * **plan once** — kind/metric/bits/packed dispatch is resolved and
+    ``SearchParams`` frozen into a pure runner (``index.plan(k, sp)``);
+    invalid plans (k <= 0, k > n, chunk <= 0, nprobe <= 0) fail here with
+    ``ValueError``s, not kernel-shape errors mid-trace.
+  * **compile per bucket** — the runner is jitted once per padded
+    batch-size bucket (default 1/8/32/256), so arbitrary request sizes
+    hit a small, fixed set of compiled shapes; ``trace_counts`` exposes
+    the compilation ledger the tests assert on.
+  * **shard natively** — given a mesh, the flat scan row-shards its
+    ``CodeStore`` over every mesh axis (``dist.sharding.corpus_shards``)
+    and fuses shard-local top-k with one k-sized cross-shard merge
+    *inside* the compiled function (O(shards·Q·k) wire, DESIGN.md §4).
+  * **rerank** — an optional ``Rerank(depth, store)`` tail re-scores the
+    quantized top-``depth`` candidates against an fp32/int8 store by
+    gathered-row exact distance in the same jit (the paper's §3.4 recall
+    recovery; ``"flat,lpq4+r32"`` builds the store at index time).
+  * **account** — every result's stats carry the engine block plus
+    ``{bucket, padded_q, shards, reranked}``.
+
+``Index.search`` is a thin one-shot searcher (``one_shot``), so every
+pre-plan call site keeps working unchanged.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Callable, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro import engine
+from repro.knn import base as B
+
+__all__ = ["Searcher", "Rerank", "one_shot", "sharded_scan_plan",
+           "DEFAULT_BATCH_SIZES", "DEFAULT_RERANK_DEPTH"]
+
+#: padded batch-size buckets a plan compiles for (smallest covering
+#: bucket is picked per request; oversize requests run in max-bucket
+#: slices)
+DEFAULT_BATCH_SIZES = (1, 8, 32, 256)
+
+NEG = float(jnp.finfo(jnp.float32).min)
+
+PlanFn = Callable[[jax.Array], B.SearchResult]
+
+
+def DEFAULT_RERANK_DEPTH(k: int, n: int) -> int:
+    """Candidate depth when a rerank store exists but no depth is given:
+    4k (clamped to [k, n]) — deep enough that the exact pass can repair
+    low-bit scan inversions, shallow enough that the gather stays O(Q·k)."""
+    return max(k, min(n, 4 * k))
+
+
+@dataclasses.dataclass(frozen=True)
+class Rerank:
+    """Rerank stage config: re-score the quantized top-``depth`` against
+    ``store`` (an fp32 or int8 ``engine.CodeStore``) by exact distance."""
+
+    depth: int
+    store: engine.CodeStore
+
+
+def _query_dim(index) -> Optional[int]:
+    """Expected query width, for plan-time shape validation."""
+    store = getattr(index, "store", None)
+    if isinstance(store, engine.CodeStore):
+        # the graph kind's MIP->L2 augmentation adds one internal column
+        return store.d - 1 if getattr(index, "aug", False) else store.d
+    if isinstance(store, engine.PQStore):
+        return int(store.codebooks.shape[0] * store.codebooks.shape[2])
+    return None
+
+
+def _resolve_rerank(index, k: int, n: int, rerank) -> Optional[Rerank]:
+    """Normalize the ``rerank=`` argument against the index's own store.
+
+    None  -> the index's ``+rN`` store at default depth (or no rerank)
+    False -> explicitly off, even for a ``+rN`` index
+    int   -> depth override over the index's ``+rN`` store
+    Rerank -> fully explicit (store must cover the same id space)
+    """
+    if rerank is False:
+        return None
+    own = getattr(index, "rerank_store", None)
+    if rerank is None or rerank is True:
+        if own is None:
+            if rerank is True:
+                raise ValueError(
+                    "rerank=True but the index holds no rerank store — "
+                    "build with a '+r32'/'+r8' factory suffix or pass "
+                    "Rerank(depth, store)"
+                )
+            return None
+        return Rerank(DEFAULT_RERANK_DEPTH(k, n), own)
+    if isinstance(rerank, int):
+        if own is None:
+            raise ValueError(
+                f"rerank depth {rerank} given but the index holds no rerank "
+                "store — build with a '+r32'/'+r8' factory suffix or pass "
+                "Rerank(depth, store)"
+            )
+        rerank = Rerank(int(rerank), own)
+    if not isinstance(rerank, Rerank):
+        raise TypeError(
+            f"rerank must be None/False/int depth/Rerank, got {type(rerank)!r}"
+        )
+    if not isinstance(rerank.store, engine.CodeStore):
+        raise TypeError("Rerank.store must be an engine.CodeStore")
+    if rerank.store.n != n:
+        raise ValueError(
+            f"rerank store covers {rerank.store.n} rows but the index holds "
+            f"{n} — the stores must share one id space"
+        )
+    if rerank.depth <= 0:
+        raise ValueError(f"rerank depth must be positive, got {rerank.depth}")
+    # clamp to the useful band: >= k (the tail must be able to fill the
+    # result) and <= n (deeper gathers than the corpus are pure waste)
+    return dataclasses.replace(rerank, depth=max(k, min(rerank.depth, n)))
+
+
+# --------------------------------------------------------------------------
+# sharded flat scan: the row-sharded plan body (used by FlatIndex.plan)
+# --------------------------------------------------------------------------
+
+def sharded_scan_plan(
+    store: engine.CodeStore, metric: str, k: int, mesh, chunk: int = 16384
+) -> PlanFn:
+    """Row-shard a ``CodeStore`` scan over a mesh (DESIGN.md §4/§9).
+
+    Queries replicate; corpus rows shard over every mesh axis; each shard
+    streams its slice in ``chunk``-row tiles (unpacking int4 tile by
+    tile) with a running local top-k — the same O(Q·(k+chunk)) working
+    set as the unsharded scan, never a [Q, N_loc] score matrix — with pad
+    rows id-masked at the source, and ``distributed_topk`` merges the
+    per-shard candidates with one k-sized all_gather.  The whole thing is
+    a pure function of the query batch, so the Searcher compiles
+    scan -> local top-k -> cross-shard merge (-> rerank) as one unit.
+    """
+    from repro.core import distances as D
+    from repro.core import pack as PK
+    from repro.dist.sharding import P, corpus_shards, shard_map
+    from repro.knn.topk import distributed_topk
+
+    if store.base:
+        raise ValueError("sharded plans require a base-0 store (the plan "
+                         "owns the global id space)")
+    axes, n_shards = corpus_shards(mesh)
+    n = store.n
+    rows_per = -(-n // n_shards)
+    pad = n_shards * rows_per - n
+    k_merge = min(k, n)
+    k_local = min(k_merge, rows_per)
+    tile_rows = min(chunk, rows_per)
+    n_tiles = -(-rows_per // tile_rows)
+    data = jnp.pad(store.data, ((0, pad), (0, 0))) if pad else store.data
+    shard_idx = jnp.arange(n_shards, dtype=jnp.int32)
+
+    def local(q, shard, idx):
+        gid0 = idx[0] * rows_per
+        Q = q.shape[0]
+        tile_pad = n_tiles * tile_rows - rows_per
+        if tile_pad:
+            shard = jnp.pad(shard, ((0, tile_pad), (0, 0)))
+        tiles = shard.reshape(n_tiles, tile_rows, shard.shape[-1])
+
+        def step(carry, inp):
+            tile, t = inp
+            rows = PK.unpack_int4(tile) if store.packed else tile
+            s = D.scores(q, rows, metric, quantized=store.quantized)
+            s = s.astype(jnp.float32)
+            lrow = t * tile_rows + jnp.arange(tile_rows, dtype=jnp.int32)
+            gid = gid0 + lrow
+            # id-mask at the source: both the shard's own tile-pad rows
+            # (lrow >= rows_per — their gids alias the NEXT shard's rows)
+            # and the global tail pad (gid >= n)
+            ok = (lrow < rows_per) & (gid < n)
+            s = jnp.where(ok[None, :], s, NEG)
+            ids = jnp.where(ok[None, :], jnp.broadcast_to(gid[None], s.shape), -1)
+            return engine.merge_topk(*carry, s, ids, k_local), None
+
+        init = (jnp.full((Q, k_local), NEG, jnp.float32),
+                jnp.full((Q, k_local), -1, jnp.int32))
+        (ls, li), _ = jax.lax.scan(
+            step, init, (tiles, jnp.arange(n_tiles, dtype=jnp.int32))
+        )
+        return distributed_topk(ls, li, k_merge, axes, 0)
+
+    inner = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(), P(axes, None), P(axes)),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+
+    def run(queries: jax.Array) -> B.SearchResult:
+        q = store.encode_queries(queries)
+        s, i = inner(q, data, shard_idx)
+        if k_merge < k:                  # uniform [Q, k] contract: -1 pads
+            s = jnp.pad(s, ((0, 0), (0, k - k_merge)), constant_values=NEG)
+            i = jnp.pad(i, ((0, 0), (0, k - k_merge)), constant_values=-1)
+        stats = engine.search_stats(store, candidates=n,
+                                    chunks=n_shards * n_tiles, rows_read=n)
+        return B.SearchResult(s, i, {"kind": "flat", **stats})
+
+    return run
+
+
+# --------------------------------------------------------------------------
+# the Searcher handle
+# --------------------------------------------------------------------------
+
+class Searcher:
+    """A planned search session: ``index.searcher(k, params)(queries)``.
+
+    Construction *is* plan time: arguments are validated, the rerank
+    stage resolved, the per-kind runner built (``index.plan``) and the
+    jit wrapper created.  Calls execute: the request is sliced into
+    batch-size buckets, padded, run through the compiled executable for
+    that bucket, and stitched back with uniform accounting.
+
+    ``batch_sizes=None`` is the one-shot mode ``Index.search`` uses: no
+    padding, no extra jit wrapper — exactly the historical eager call.
+    """
+
+    def __init__(
+        self,
+        index,
+        k: int,
+        params: Optional[B.SearchParams] = None,
+        *,
+        batch_sizes: Optional[Sequence[int]] = DEFAULT_BATCH_SIZES,
+        shards=None,
+        rerank: Union[None, bool, int, Rerank] = None,
+        strict: bool = True,
+    ):
+        if not isinstance(k, int) or isinstance(k, bool) or k <= 0:
+            raise ValueError(f"k must be a positive int, got {k!r}")
+        n = int(index.n)
+        if strict and k > n:
+            raise ValueError(
+                f"k={k} exceeds the corpus size n={n}; a plan cannot return "
+                "more neighbors than the index holds"
+            )
+        sp = (params or B.SearchParams()).validate()
+        if batch_sizes is not None:
+            batch_sizes = tuple(sorted(set(int(b) for b in batch_sizes)))
+            if not batch_sizes or batch_sizes[0] <= 0:
+                raise ValueError(
+                    f"batch_sizes must be positive ints, got {batch_sizes!r}"
+                )
+
+        self.index = index
+        self.k = k
+        self.params = sp
+        self.batch_sizes = batch_sizes
+        self.mesh = shards
+        self.rerank = _resolve_rerank(index, k, n, rerank)
+        self._qdim = _query_dim(index)
+        self._counts: collections.Counter = collections.Counter()
+
+        n_shards = int(shards.devices.size) if shards is not None else 1
+        self._extras = {"shards": n_shards}
+
+        k_inner = self.rerank.depth if self.rerank is not None else k
+        inner = index.plan(k_inner, sp, mesh=shards)
+        rr = self.rerank
+        metric = index.metric
+
+        def run(queries: jax.Array) -> B.SearchResult:
+            self._counts[int(queries.shape[0])] += 1   # fires once per trace
+            res = inner(queries)
+            stats = dict(res.stats)
+            s, i = res.scores, res.ids
+            if rr is not None:
+                s, i, rstats = engine.rerank_among(
+                    queries, rr.store, i, k, metric
+                )
+                stats.update(rstats)
+                stats["bytes_read"] = (
+                    stats.get("bytes_read", 0) + rstats["rerank_bytes"]
+                )
+            else:
+                stats["reranked"] = 0
+            return B.SearchResult(s, i, stats)
+
+        self._run = run
+        self._jitted = jax.jit(run) if batch_sizes is not None else run
+
+    # -- accounting --------------------------------------------------------
+    @property
+    def trace_counts(self) -> dict[int, int]:
+        """bucket size -> number of times the runner was (re)traced."""
+        return dict(self._counts)
+
+    @property
+    def n_shards(self) -> int:
+        return self._extras["shards"]
+
+    def buckets_for(self, q_len: int) -> tuple[int, ...]:
+        """The compile buckets a ``q_len``-query request will execute in
+        (one per slice) — callers warm these before timing (serve.py)."""
+        if self.batch_sizes is None:
+            return (q_len,)
+        out = []
+        max_b = self.batch_sizes[-1]
+        while q_len > 0:
+            rows = min(q_len, max_b)
+            out.append(next(b for b in self.batch_sizes if b >= rows))
+            q_len -= rows
+        return tuple(out)
+
+    # -- execution ---------------------------------------------------------
+    def _validate_queries(self, queries) -> jax.Array:
+        q = jnp.asarray(queries)
+        if q.ndim != 2:
+            raise ValueError(
+                f"queries must be [Q, d], got shape {tuple(q.shape)}"
+            )
+        if q.shape[0] == 0:
+            raise ValueError("empty query batch: queries.shape[0] == 0")
+        if self._qdim is not None and int(q.shape[1]) != self._qdim:
+            raise ValueError(
+                f"query dim {int(q.shape[1])} != index dim {self._qdim}"
+            )
+        return q
+
+    def __call__(self, queries) -> B.SearchResult:
+        q = self._validate_queries(queries)
+        if self.batch_sizes is None:                       # one-shot mode
+            res = self._run(q)
+            return B.SearchResult(res.scores, res.ids, {
+                **res.stats, **self._extras,
+                "bucket": int(q.shape[0]), "padded_q": 0,
+            })
+
+        total = int(q.shape[0])
+        max_b = self.batch_sizes[-1]
+        parts_s, parts_i = [], []
+        padded_q = 0
+        # batch-cumulative keys sum across slices; the remaining stats
+        # (candidates/chunks/reranked: per-query by the engine contract,
+        # identical in every slice) carry over from the last one
+        summed = {"bytes_read": 0, "rerank_bytes": 0}
+        stats: dict[str, Any] = {}
+        bucket = max_b
+        start = 0
+        while start < total:
+            stop = min(start + max_b, total)
+            sl = q[start:stop]
+            rows = stop - start
+            bucket = next(b for b in self.batch_sizes if b >= rows)
+            if bucket > rows:
+                sl = jnp.pad(sl, ((0, bucket - rows), (0, 0)))
+            res = self._jitted(sl)
+            parts_s.append(res.scores[:rows])
+            parts_i.append(res.ids[:rows])
+            padded_q += bucket - rows
+            for key in summed:
+                summed[key] += int(res.stats.get(key, 0))
+            stats = dict(res.stats)
+            start = stop
+
+        s = parts_s[0] if len(parts_s) == 1 else jnp.concatenate(parts_s)
+        i = parts_i[0] if len(parts_i) == 1 else jnp.concatenate(parts_i)
+        stats.update(self._extras)
+        stats.update(bucket=bucket, padded_q=padded_q,
+                     bytes_read=summed["bytes_read"])
+        if summed["rerank_bytes"]:
+            stats["rerank_bytes"] = summed["rerank_bytes"]
+        return B.SearchResult(s, i, stats)
+
+
+def one_shot(index, queries, k: int, params: Optional[B.SearchParams]) -> B.SearchResult:
+    """The eager path ``Index.search`` delegates to: a non-strict (k > n
+    keeps the historical pad-with--1 contract), unbucketed, unsharded
+    searcher built and called once."""
+    return Searcher(index, k, params, batch_sizes=None, strict=False)(queries)

@@ -16,12 +16,18 @@ build parameters.  ``parse_factory`` turns FAISS-style strings into specs:
     "graph24,lpq8"          NGT-equivalent graph index, degree 24
     "pq64+lpq"              PQ with 64 subspaces, int8 ADC tables
     "flat,lpq8,l2"          metric override fragment (ip | l2 | angular)
+    "flat,lpq4+r32"         packed int4 scan + fp32 rerank tail (§3.4
+                            recall recovery; DESIGN.md §9)
+    "pq16+lpq,r32"          standalone rerank fragment for kinds whose
+                            quant rides elsewhere (PQ ADC tables)
 
 Grammar: comma-separated fragments.  Exactly one *kind* fragment
 (``flat`` | ``ivf<nlist>`` | ``hnsw<M>`` | ``graph<degree>`` |
 ``pq<M>[+lpq]``), at most one *quant* fragment
-(``lpq<bits>[@<scheme>][:<sigmas>]``), at most one *metric* fragment.
-``to_factory`` is the inverse, up to default elision.
+(``lpq<bits>[@<scheme>][:<sigmas>][+r<rbits>]``), at most one *metric*
+fragment, at most one *rerank* fragment (``r<rbits>``, rbits in {8, 32} —
+the precision of the exact re-scoring store the Searcher's rerank tail
+gathers from).  ``to_factory`` is the inverse, up to default elision.
 """
 
 from __future__ import annotations
@@ -133,14 +139,25 @@ def quant_spec_from_kwargs(
     return QuantSpec(bits=bits, scheme=Qz.Scheme(scheme).value, sigmas=sigmas)
 
 
+#: precisions a rerank store may hold: fp32 exact or int8 codes
+RERANK_BITS = (8, 32)
+
+
 @dataclasses.dataclass(frozen=True)
 class IndexSpec:
-    """One config object any index, benchmark or serving path accepts."""
+    """One config object any index, benchmark or serving path accepts.
+
+    ``rerank_bits`` asks the build to keep a second, higher-precision
+    ``CodeStore`` of the corpus (32 = fp32, 8 = int8) that the Searcher's
+    rerank tail re-scores quantized candidates against — the paper's §3.4
+    recall-recovery pattern as a first-class config (``"flat,lpq4+r32"``).
+    """
 
     kind: str = "flat"
     metric: str = "ip"
     quant: Optional[QuantSpec] = None
     params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    rerank_bits: Optional[int] = None
 
     def __post_init__(self):
         if self.kind not in KIND_PARAM:
@@ -149,6 +166,11 @@ class IndexSpec:
             )
         if self.metric not in METRICS:
             raise ValueError(f"unknown metric {self.metric!r}; known: {METRICS}")
+        if self.rerank_bits is not None and self.rerank_bits not in RERANK_BITS:
+            raise ValueError(
+                f"rerank_bits must be one of {RERANK_BITS} (got "
+                f"{self.rerank_bits!r}): the rerank store is fp32 or int8"
+            )
 
     def with_overrides(self, **overrides) -> "IndexSpec":
         """Merge extra build parameters (ef_construction, key knobs...)."""
@@ -164,14 +186,22 @@ class IndexSpec:
             frag += "+lpq"
         parts = [frag]
         if self.quant is not None:
-            parts.append(self.quant.to_fragment())
+            qfrag = self.quant.to_fragment()
+            if self.rerank_bits is not None:
+                qfrag += f"+r{self.rerank_bits}"
+            parts.append(qfrag)
+        elif self.rerank_bits is not None:
+            parts.append(f"r{self.rerank_bits}")
         if self.metric != "ip":
             parts.append(self.metric)
         return ",".join(parts)
 
 
 _KIND_RE = re.compile(r"^(flat|ivf|hnsw|graph|pq)(\d+)?(\+lpq)?$")
-_QUANT_RE = re.compile(r"^lpq(\d+)(?:@([a-z_0-9]+))?(?::([0-9.]+))?$")
+_QUANT_RE = re.compile(
+    r"^lpq(\d+)(?:@([a-z_0-9]+))?(?::([0-9.]+))?(?:\+r(\d+))?$"
+)
+_RERANK_RE = re.compile(r"^r(\d+)$")
 
 
 def parse_factory(factory: str, metric: str | None = None) -> IndexSpec:
@@ -182,8 +212,21 @@ def parse_factory(factory: str, metric: str | None = None) -> IndexSpec:
     kind = None
     params: dict[str, Any] = {}
     quant = None
+    rerank_bits: Optional[int] = None
     out_metric = metric or "ip"
     metric_seen = False
+
+    def _set_rerank(bits_str: str) -> None:
+        nonlocal rerank_bits
+        if rerank_bits is not None:
+            raise ValueError(f"duplicate rerank fragment in {factory!r}")
+        rbits = int(bits_str)
+        if rbits not in RERANK_BITS:
+            raise ValueError(
+                f"rerank precision must be one of {RERANK_BITS} "
+                f"(fp32 or int8 store), got r{rbits} in {factory!r}"
+            )
+        rerank_bits = rbits
 
     for raw in factory.split(","):
         frag = raw.strip().lower()
@@ -211,6 +254,12 @@ def parse_factory(factory: str, metric: str | None = None) -> IndexSpec:
             Qz.Scheme(scheme)  # validate early
             sigmas = float(mq.group(3)) if mq.group(3) else 1.0
             quant = QuantSpec(bits=bits, scheme=scheme, sigmas=sigmas)
+            if mq.group(4):
+                _set_rerank(mq.group(4))
+            continue
+        mr = _RERANK_RE.match(frag)
+        if mr:
+            _set_rerank(mr.group(1))
             continue
         mk = _KIND_RE.match(frag)
         if mk:
@@ -245,7 +294,8 @@ def parse_factory(factory: str, metric: str | None = None) -> IndexSpec:
                 f"{quant.to_fragment()!r} in {factory!r}"
             )
         params["lpq_tables"] = True
-    return IndexSpec(kind=kind, metric=out_metric, quant=quant, params=params)
+    return IndexSpec(kind=kind, metric=out_metric, quant=quant, params=params,
+                     rerank_bits=rerank_bits)
 
 
 def resolve_build_spec(
@@ -271,6 +321,23 @@ def resolve_build_spec(
         if spec.kind != kind:
             raise ValueError(f"spec kind {spec.kind!r} routed to {kind!r} build")
     return spec, {**defaults, **dict(spec.params)}
+
+
+def build_rerank_store(spec: IndexSpec, corpus):
+    """Materialize the spec's rerank store (None when not requested).
+
+    fp32 (r32) keeps the corpus verbatim; int8 (r8) learns its own Eq. 1
+    constants — the rerank arm's accuracy must not inherit the scan arm's
+    aggressive clamp.  Every kind's build calls this after
+    ``resolve_build_spec`` so ``"<kind>,lpq4+r32"`` works uniformly.
+    """
+    if spec.rerank_bits is None:
+        return None
+    from repro.engine import CodeStore
+
+    if spec.rerank_bits == 32:
+        return CodeStore.dense(corpus)
+    return QuantSpec(bits=8).build_store(corpus)
 
 
 def as_spec(spec: "IndexSpec | str", metric: str | None = None) -> IndexSpec:

@@ -1,33 +1,54 @@
-"""ANN serving loop, registry-driven: serve ANY registered index kind.
+"""ANN serving loop, rebuilt on the Searcher query-plan API (DESIGN.md §9).
 
-The index is chosen by a FAISS-style factory string (DESIGN.md §3) and
-built through ``repro.knn.make_index``; the request loop only speaks the
-unified ``Index`` protocol — ``search(queries, k, SearchParams)`` — so
-there are no index-specific branches here.  Sharded multi-device serving
-(corpus row-sharded over the mesh, shard-local top-k + one k-sized merge;
-DESIGN.md §4) lives in ``repro.launch.steps.make_retrieval_sharded`` and
-composes with the flat kind at production scale.
+The index is chosen by a FAISS-style factory string and built through
+``repro.knn.make_index``; the serving session is a single
+``index.searcher(k, params, batch_sizes=...)`` plan — compiled once per
+batch-size bucket — that a request queue drains.  Every request is padded
+to its bucket inside the Searcher, so mixed request sizes hit a small,
+fixed set of compiled executables; rerank-capable builds (``+r32`` /
+``+r8`` factory suffix) run quantized-scan → exact-rerank inside the same
+compiled function; ``--shards`` row-shards the flat scan over a host mesh.
 
+Reporting: QPS, p50/p95/p99 request latency, and per-search engine stats
+*aggregated across the whole session* (per-request means + totals — not
+the last request's dict).
+
+    PYTHONPATH=src python -m repro.launch.serve --index flat,lpq4+r32 \
+        --requests 4
     PYTHONPATH=src python -m repro.launch.serve --index hnsw32,lpq8 \
-        --n 20000 --d 64 --batch 32
-    PYTHONPATH=src python -m repro.launch.serve --index ivf64,lpq8 --nprobe 8
+        --n 20000 --d 64 --batch 32 --mixed
+    PYTHONPATH=src python -m repro.launch.serve --index flat,lpq8 --shards 2
 """
 
 from __future__ import annotations
 
 import argparse
+import collections
 import time
 
 import jax
+import numpy as np
 
 from repro.data import synthetic
 from repro.knn import SearchParams, make_index
 
+#: stats keys summed across requests and reported as per-request means
+_AGG_KEYS = ("candidates", "bytes_read", "chunks", "padded_q", "reranked")
 
-def main():
+
+def _request_sizes(n_requests: int, batch: int, mixed: bool) -> list[int]:
+    """Per-request query counts: fixed ``batch``, or a mixed cycle that
+    exercises several buckets (the realistic open-loop traffic shape)."""
+    if not mixed:
+        return [batch] * n_requests
+    cycle = [1, max(1, batch // 4), batch]
+    return [cycle[i % len(cycle)] for i in range(n_requests)]
+
+
+def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--index", default="flat,lpq8@gaussian:3",
-                    help="factory string, e.g. flat,lpq8 / ivf64,lpq8 / "
+                    help="factory string, e.g. flat,lpq4+r32 / ivf64,lpq8 / "
                          "hnsw32,lpq8 / graph24,lpq8 / pq8+lpq")
     ap.add_argument("--n", type=int, default=20000)
     ap.add_argument("--d", type=int, default=64)
@@ -37,43 +58,104 @@ def main():
     ap.add_argument("--nprobe", type=int, default=8)
     ap.add_argument("--ef-search", type=int, default=100)
     ap.add_argument("--chunk", type=int, default=16384)
-    args = ap.parse_args()
+    ap.add_argument("--batch-sizes", default=None,
+                    help="comma-separated compile buckets (default 1,8,32,256 "
+                         "clipped to --batch)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="row-shard the (flat) scan over this many host "
+                         "devices (0 = unsharded)")
+    ap.add_argument("--rerank-depth", type=int, default=0,
+                    help="override the rerank candidate depth (0 = the "
+                         "index's default when built with +rN)")
+    ap.add_argument("--mixed", action="store_true",
+                    help="cycle request sizes through several buckets")
+    args = ap.parse_args(argv)
 
-    corpus, queries, _metric = synthetic.load(
-        "product", args.n, args.batch * args.requests
-    )
+    sizes = _request_sizes(args.requests, args.batch, args.mixed)
+    corpus, queries, _metric = synthetic.load("product", args.n, sum(sizes))
     corpus = corpus[:, : args.d]
     queries = queries[:, : args.d]
 
     t0 = time.perf_counter()
     index = make_index(args.index, corpus, key=jax.random.PRNGKey(0))
     build_s = time.perf_counter() - t0
-    print(f"[serve] index={args.index} kind={index.kind} "
-          f"build={build_s:.2f}s memory={index.memory_bytes() / 1e6:.1f}MB")
 
     sp = SearchParams(chunk=args.chunk, nprobe=args.nprobe,
                       ef_search=args.ef_search)
+    if args.batch_sizes:
+        buckets = tuple(sorted(int(b) for b in args.batch_sizes.split(",")))
+    else:
+        buckets = tuple(b for b in (1, 8, 32, 256) if b <= args.batch) or (args.batch,)
+        if buckets[-1] < args.batch:
+            buckets = buckets + (args.batch,)
 
-    # warmup (compile) + serve
-    jax.block_until_ready(index.search(queries[: args.batch], args.k, sp).ids)
-    t0 = time.perf_counter()
+    mesh = None
+    if args.shards > 1:
+        n_dev = len(jax.devices())
+        if args.shards > n_dev:
+            print(f"[serve] --shards {args.shards} > {n_dev} devices; "
+                  f"using {n_dev} (set XLA_FLAGS="
+                  "--xla_force_host_platform_device_count=N for more)")
+        if min(args.shards, n_dev) > 1:
+            mesh = jax.make_mesh((min(args.shards, n_dev),), ("data",))
+        else:
+            print("[serve] 1 device available — serving unsharded (a "
+                  "1-shard mesh would be the degenerate merge formulation)")
+
+    searcher = index.searcher(
+        args.k, sp, batch_sizes=buckets, shards=mesh,
+        rerank=args.rerank_depth or None,
+    )
+    print(f"[serve] index={args.index} kind={index.kind} build={build_s:.2f}s "
+          f"memory={index.memory_bytes() / 1e6:.1f}MB buckets={buckets} "
+          f"shards={searcher.n_shards} "
+          f"rerank={searcher.rerank.depth if searcher.rerank else 0}")
+
+    # request queue (open loop: all arrivals enqueued up front)
+    queue: collections.deque = collections.deque()
+    off = 0
+    for sz in sizes:
+        queue.append(queries[off : off + sz])
+        off += sz
+
+    # warmup: run every distinct request size once — this compiles each
+    # bucket executable the traffic will hit (incl. remainder-slice
+    # buckets of oversize requests, cf. Searcher.buckets_for) AND the
+    # per-shape pad/slice glue, so the timed percentiles measure serving
+    for sz in sorted(set(sizes)):
+        jax.block_until_ready(searcher(queries[:sz]).ids)
+
+    latencies = []
+    totals: collections.Counter = collections.Counter()
     served = 0
-    stats = {}
-    total_bytes = 0
-    for r in range(args.requests):
-        q = queries[r * args.batch : (r + 1) * args.batch]
-        res = index.search(q, args.k, sp)
+    t0 = time.perf_counter()
+    while queue:
+        q = queue.popleft()
+        t_req = time.perf_counter()
+        res = searcher(q)
         jax.block_until_ready(res.ids)
+        latencies.append(time.perf_counter() - t_req)
         served += int(q.shape[0])
-        stats = res.stats
-        total_bytes += int(stats.get("bytes_read", 0))
+        for key in _AGG_KEYS:
+            totals[key] += int(res.stats.get(key, 0))
     dt = time.perf_counter() - t0
-    print(f"[serve] {served} queries in {dt:.3f}s -> {served / dt:.1f} QPS "
-          f"(k={args.k}, corpus={index.n}, kind={index.kind})")
-    # per-search engine accounting (uniform across kinds): candidates
-    # scored, chunks scanned, payload bytes read — see DESIGN.md §8
-    print(f"[serve] stats/request={stats} "
-          f"bytes_read/session={total_bytes}")
+
+    n_req = len(latencies)
+    p50, p95, p99 = (float(np.percentile(latencies, p)) for p in (50, 95, 99))
+    print(f"[serve] {served} queries / {n_req} requests in {dt:.3f}s -> "
+          f"{served / dt:.1f} QPS (k={args.k}, corpus={index.n}, "
+          f"kind={index.kind})")
+    print(f"[serve] latency p50={p50 * 1e3:.2f}ms p95={p95 * 1e3:.2f}ms "
+          f"p99={p99 * 1e3:.2f}ms")
+    # per-search engine accounting aggregated over the session (uniform
+    # across kinds; DESIGN.md §8/§9) — means per request, plus totals for
+    # the batch-cumulative keys (candidates/chunks/reranked are per-query
+    # quantities and only meaningful as means)
+    means = {key: totals[key] / max(n_req, 1) for key in _AGG_KEYS}
+    print("[serve] stats/request mean: "
+          + " ".join(f"{key}={means[key]:.1f}" for key in _AGG_KEYS))
+    print(f"[serve] stats/session totals: "
+          f"bytes_read={totals['bytes_read']} padded_q={totals['padded_q']}")
 
 
 if __name__ == "__main__":

@@ -151,7 +151,15 @@ def make_retrieval_sharded(
     and O(shards·Q·k) wire, versus the naive jit formulation whose
     lax.top_k over the sharded N axis makes GSPMD materialize and
     all-gather the FULL [Q, N] score matrix (measured: 480 GB temp /
-    240 GB wire at PRODUCT60M scale — EXPERIMENTS.md §Perf C2)."""
+    240 GB wire at PRODUCT60M scale — EXPERIMENTS.md §Perf C2).
+
+    This is the *abstract-argument* variant the multi-pod dry-run
+    compiles (params arrive as pjit inputs).  The serving path no longer
+    routes through here: ``index.searcher(k, params, shards=mesh)``
+    builds the same shard-local-topk + k-sized-merge plan over the
+    index's own CodeStore — fp32 / int8 / packed int4 alike — and fuses
+    it with bucketing and the rerank tail (DESIGN.md §9,
+    ``knn/searcher.sharded_scan_plan``)."""
     from jax.sharding import PartitionSpec as P
 
     from repro.core import distances as D
