@@ -1,0 +1,228 @@
+"""Mutable-index benchmark: churn throughput, exact-parity, and
+recall-under-drift with compaction/recalibration — writes
+``BENCH_stream.json`` (plus the harness CSV rows).
+
+Two scenarios over ``stream(flat,<quant>)`` (DESIGN.md §10):
+
+**churn** — a bulk build absorbs a mixed upsert/delete/query workload
+through the Searcher (snapshot plans; writes re-plan).  Records query
+latency before and after churn, write+replan latency, and the
+acceptance exact-parity check: after ``compact(full=True)`` the stream
+index must return *bit-identical* ids/scores to a from-scratch
+``flat,<quant>`` build on the surviving rows in arrival order.
+
+**drift** — the live distribution diverges from the bulk segment's
+calibration (offset cluster retired by deletes while a shifted insert
+stream lands), then three arms search the same live set at the same
+k/rerank budget:
+
+    never-compact         multi-segment: the fp32 merge re-score keeps
+                          recall high, but tombstoned segments over-fetch
+                          (depth + dead rows), so the per-query rescore
+                          cost explodes — the LSM "tombstone debt"
+    compact, stale        constants reused from the drifted calibration:
+                          recall craters (saturated codes — §3.2's
+                          data-driven fit is load-bearing)
+    compact, recalibrate  constants re-learned from the surviving rows:
+                          recall recovered at the compacted budget
+
+    PYTHONPATH=src python -m benchmarks.bench_stream           # full
+    PYTHONPATH=src python -m benchmarks.bench_stream --smoke   # CI
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, sized
+from repro.core.preserve import recall_at_k
+from repro.data import synthetic
+from repro.knn import make_index
+
+K_TOP = 10
+
+
+def _perturbed_queries(vecs: np.ndarray, n_q: int, rng) -> np.ndarray:
+    rows = vecs[rng.choice(vecs.shape[0], n_q, replace=False)]
+    return (rows + rng.normal(size=rows.shape).astype(np.float32) * 0.005
+            ).astype(np.float32)
+
+
+def _exact_gt(vecs: np.ndarray, ext_ids: np.ndarray, queries, metric: str):
+    gt = np.asarray(make_index(f"flat,{metric}", vecs).search(queries, K_TOP).ids)
+    return np.where(gt >= 0, ext_ids[gt], -1)
+
+
+def churn_scenario(quant: str, n: int, d: int, n_q: int) -> dict:
+    metric = "l2"
+    rng = np.random.default_rng(0)
+    corpus = np.asarray(synthetic.load("product", n, 8)[0][:, :d])
+    extra = np.asarray(
+        synthetic.load("product", n, 8, key=jax.random.PRNGKey(3))[0][:, :d]
+    )
+
+    idx = make_index(f"stream(flat,{quant},{metric})", corpus,
+                     seal_threshold=max(64, n // 8))
+    queries = _perturbed_queries(corpus, n_q, rng)
+
+    searcher = idx.searcher(K_TOP)
+    jax.block_until_ready(searcher(queries).ids)
+    t0 = time.perf_counter()
+    jax.block_until_ready(searcher(queries).ids)
+    fresh_s = time.perf_counter() - t0
+
+    # mixed churn: insert half a corpus, delete a third, replace a slice
+    t0 = time.perf_counter()
+    idx.upsert(np.arange(n, n + n // 2), extra[: n // 2])
+    idx.delete(np.arange(0, n, 3))
+    idx.upsert(np.arange(100, 100 + n // 10),
+               extra[n // 2 : n // 2 + n // 10])
+    write_s = time.perf_counter() - t0
+
+    searcher = idx.searcher(K_TOP)            # snapshot plan: re-plan
+    jax.block_until_ready(searcher(queries).ids)
+    t0 = time.perf_counter()
+    res = searcher(queries)
+    jax.block_until_ready(res.ids)
+    churned_s = time.perf_counter() - t0
+
+    ext_ids, vecs = idx.live_items()
+    gt = _exact_gt(vecs, ext_ids, queries, metric)
+    rec_churned = float(recall_at_k(gt, np.asarray(res.ids)))
+
+    # acceptance: full compaction == from-scratch build, bit-for-bit
+    idx.compact(full=True)
+    a = idx.search(queries, K_TOP)
+    scratch = make_index(f"flat,{quant},{metric}", vecs)
+    b = scratch.search(queries, K_TOP)
+    b_ids = np.asarray(b.ids)
+    parity = bool(
+        np.array_equal(np.asarray(a.ids),
+                       np.where(b_ids >= 0, ext_ids[b_ids], -1))
+        and np.allclose(np.asarray(a.scores), np.asarray(b.scores))
+    )
+    st = idx.stats()
+    return {
+        "quant": quant, "n": n, "rows_live": int(idx.n),
+        "query_ms_fresh": fresh_s * 1e3,
+        "query_ms_churned": churned_s * 1e3,
+        "write_s": write_s,
+        "recall_churned": rec_churned,
+        "exact_parity_after_compact": parity,
+        "segments_after": st["segments"], "seals": st["seals"],
+        "compactions": st["compactions"],
+    }
+
+
+def drift_scenario(quant: str, n: int, d: int, n_q: int) -> dict:
+    metric = "l2"
+    rng = np.random.default_rng(7)
+    base = np.asarray(synthetic.load("product", n, 8)[0][:, :d])
+    wide = base[rng.permutation(n)] + 0.4          # offset cluster
+    corpus = np.concatenate([base, wide]).astype(np.float32)
+    fresh = np.asarray(
+        synthetic.load("product", n // 2, 8, key=jax.random.PRNGKey(3))[0][
+            : n // 2, :d
+        ]
+    ) * 0.97
+
+    def build():
+        idx = make_index(f"stream(flat,{quant},{metric})+r32", corpus,
+                         seal_threshold=10 ** 9, auto_compact=False)
+        idx.delete(np.arange(n, 2 * n))            # retire the old cluster
+        idx.upsert(np.arange(2 * n, 2 * n + n // 2), fresh)  # shifted stream
+        idx.seal()
+        return idx
+
+    idx = build()
+    ext_ids, vecs = idx.live_items()
+    queries = _perturbed_queries(vecs, n_q, rng)
+    gt = _exact_gt(vecs, ext_ids, queries, metric)
+
+    def arm(ix):
+        res = ix.searcher(K_TOP)(queries)         # +r32, default depth 4k
+        return (float(recall_at_k(gt, np.asarray(res.ids))),
+                int(res.stats.get("reranked", 0)))
+
+    drift_before = idx.stats()["max_drift"]
+    r_never, c_never = arm(idx)
+
+    stale = build()
+    stale.compact(full=True, recalibrate=False)
+    r_stale, c_stale = arm(stale)
+
+    recal = build()
+    recal.compact(full=True)                      # recalibrate=True default
+    r_recal, c_recal = arm(recal)
+
+    return {
+        "quant": quant, "n_live": int(recal.n), "max_drift": drift_before,
+        "recall_never_compact": r_never, "rescored_never_compact": c_never,
+        "recall_compact_stale": r_stale, "rescored_compact_stale": c_stale,
+        "recall_compact_recalibrated": r_recal,
+        "rescored_compact_recalibrated": c_recal,
+        "recalibration_recall_gain": r_recal - r_stale,
+        "rescore_cost_ratio_never_over_recal": c_never / max(c_recal, 1),
+    }
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=8000)
+    ap.add_argument("--d", type=int, default=32)
+    ap.add_argument("--queries", type=int, default=200)
+    ap.add_argument("--out", default="BENCH_stream.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes + lpq4-only (the CI check)")
+    args = ap.parse_args(argv)
+
+    n = 1024 if args.smoke else sized(args.n)
+    n_q = 64 if args.smoke else args.queries
+    quants = ("lpq4",) if args.smoke else ("lpq4", "lpq8")
+
+    results = {
+        "meta": {
+            "n": n, "d": args.d, "k": K_TOP, "queries": n_q,
+            "backend": jax.default_backend(),
+            "platform": platform.platform(), "smoke": bool(args.smoke),
+        },
+        "churn": {}, "drift": {},
+    }
+    for quant in quants:
+        c = churn_scenario(quant, n, args.d, n_q)
+        results["churn"][quant] = c
+        emit(f"bench_stream/churn/{quant}", c["query_ms_churned"] / 1e3 / n_q,
+             f"recall={c['recall_churned']:.4f} "
+             f"parity={int(c['exact_parity_after_compact'])} "
+             f"segments={c['segments_after']}")
+        if not c["exact_parity_after_compact"]:
+            raise SystemExit(
+                f"exact-parity violation: stream(flat,{quant}) after "
+                "churn + full compaction != from-scratch build"
+            )
+
+        dr = drift_scenario(quant, n, args.d, n_q)
+        results["drift"][quant] = dr
+        emit(
+            f"bench_stream/drift/{quant}", 0.0,
+            f"never={dr['recall_never_compact']:.4f}"
+            f"@{dr['rescored_never_compact']} "
+            f"stale={dr['recall_compact_stale']:.4f} "
+            f"recal={dr['recall_compact_recalibrated']:.4f}"
+            f"@{dr['rescored_compact_recalibrated']} "
+            f"drift={dr['max_drift']:.2f}",
+        )
+
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    print(f"[bench_stream] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,7 @@ import traceback
 from benchmarks import (
     bench_kernels,
     bench_serve,
+    bench_stream,
     fig1_distribution,
     fig2_qps_recall,
     kernel_bench,
@@ -33,6 +34,7 @@ SUITES = {
     # run via the orchestrator; invoke the modules directly for full sizes)
     "bench_kernels": lambda: bench_kernels.main(["--smoke"]),
     "bench_serve": lambda: bench_serve.main(["--smoke"]),
+    "bench_stream": lambda: bench_stream.main(["--smoke"]),
     "table3": table3_graph_recall.main,
     "table1": table1_build_memory.main,
     "fig2": fig2_qps_recall.main,

@@ -74,9 +74,30 @@ class DimStats:
         )
 
 
+def empty_stats(d: int, dtype=jnp.float32) -> DimStats:
+    """The identity element of ``merge_stats``: zero rows seen."""
+    zero = jnp.zeros((d,), dtype)
+    return DimStats(
+        count=jnp.zeros((), dtype),
+        mean=zero,
+        m2=zero,
+        amax=zero,
+        vmin=jnp.full((d,), jnp.inf, dtype),
+        vmax=jnp.full((d,), -jnp.inf, dtype),
+    )
+
+
 def corpus_stats(x: jax.Array) -> DimStats:
-    """One-shot per-dimension stats of a [N, d] corpus."""
+    """One-shot per-dimension stats of a [N, d] corpus.
+
+    An empty batch ([0, d]) returns ``empty_stats`` — NOT the NaN mean
+    (and zero-size-reduction error) a naive ``jnp.mean``/``jnp.max``
+    would produce, which used to poison every later ``merge_stats``
+    (NaN * 0 = NaN in the cross-term).
+    """
     x = x.astype(jnp.float32)
+    if x.shape[0] == 0:
+        return empty_stats(x.shape[1], x.dtype)
     n = jnp.asarray(x.shape[0], jnp.float32)
     mean = jnp.mean(x, axis=0)
     m2 = jnp.sum((x - mean) ** 2, axis=0)
@@ -91,20 +112,59 @@ def corpus_stats(x: jax.Array) -> DimStats:
 
 
 def merge_stats(a: DimStats, b: DimStats) -> DimStats:
-    """Chan et al. parallel merge of two partial moment sets."""
+    """Chan et al. parallel merge of two partial moment sets.
+
+    Zero-count safe: merging an empty/fresh collector (count == 0) is the
+    identity — the empty side's placeholder moments are masked out of the
+    mean and the cross-term, so they can never surface as NaN even if a
+    caller hands in a zero-count ``DimStats`` with garbage moments.
+    """
     n = a.count + b.count
     safe_n = jnp.maximum(n, 1.0)
-    delta = b.mean - a.mean
-    mean = a.mean + delta * (b.count / safe_n)
-    m2 = a.m2 + b.m2 + delta**2 * (a.count * b.count / safe_n)
+    a_mean = jnp.where(a.count > 0, a.mean, 0.0)
+    b_mean = jnp.where(b.count > 0, b.mean, 0.0)
+    delta = b_mean - a_mean
+    both = (a.count > 0) & (b.count > 0)
+    mean = jnp.where(
+        both,
+        a_mean + delta * (b.count / safe_n),
+        jnp.where(b.count > 0, b_mean, a_mean),
+    )
+    m2 = (
+        jnp.where(a.count > 0, a.m2, 0.0)
+        + jnp.where(b.count > 0, b.m2, 0.0)
+        + jnp.where(both, delta**2 * (a.count * b.count / safe_n), 0.0)
+    )
     return DimStats(
         count=n,
-        mean=jnp.where(n > 0, mean, 0.0),
+        mean=mean,
         m2=m2,
         amax=jnp.maximum(a.amax, b.amax),
         vmin=jnp.minimum(a.vmin, b.vmin),
         vmax=jnp.maximum(a.vmax, b.vmax),
     )
+
+
+def calibration_drift(calib: DimStats, live: DimStats) -> float:
+    """How far a quantizer's calibration has drifted from the live corpus.
+
+    Symmetric-ish, scale-aware scalar: mean over dimensions of the
+    mean shift in live-sigma units plus the log std ratio —
+
+        drift = mean_i ( |mu_c - mu_l| / sigma_l  +  |log(sigma_c / sigma_l)| )
+
+    0 when the distributions match; ~s after an s-sigma mean shift.  The
+    stream compactor re-quantizes a segment when this exceeds its
+    threshold (DESIGN.md §10).  Returns +inf when either side is empty
+    (an uncalibrated quantizer is maximally stale).
+    """
+    if float(calib.count) == 0.0 or float(live.count) == 0.0:
+        return float("inf")
+    sd_l = jnp.maximum(live.std, 1e-12)
+    sd_c = jnp.maximum(calib.std, 1e-12)
+    dmu = jnp.abs(calib.mean - live.mean) / sd_l
+    dsd = jnp.abs(jnp.log(sd_c / sd_l))
+    return float(jnp.mean(dmu + dsd))
 
 
 class StreamingStats:
@@ -116,18 +176,20 @@ class StreamingStats:
     """
 
     def __init__(self, d: int, dtype=jnp.float32):
-        zero = jnp.zeros((d,), dtype)
-        self._s = DimStats(
-            count=jnp.zeros((), dtype),
-            mean=zero,
-            m2=zero,
-            amax=zero,
-            vmin=jnp.full((d,), jnp.inf, dtype),
-            vmax=jnp.full((d,), -jnp.inf, dtype),
-        )
+        self._s = empty_stats(d, dtype)
 
     def update(self, batch: jax.Array) -> "StreamingStats":
         self._s = merge_stats(self._s, corpus_stats(batch))
+        return self
+
+    def merge(self, other: "StreamingStats | DimStats") -> "StreamingStats":
+        """Fold another collector (or raw ``DimStats``) into this one.
+
+        Merging a fresh/empty collector is the identity (zero-count
+        guard in ``merge_stats``) — it cannot NaN the moments.
+        """
+        s = other.stats if isinstance(other, StreamingStats) else other
+        self._s = merge_stats(self._s, s)
         return self
 
     @property

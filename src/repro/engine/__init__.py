@@ -4,10 +4,17 @@
 # metric x bits kernel dispatch, chunking, padding, invalid-id masking and
 # streaming top-k — so index classes hold structure and call
 # ``engine.topk`` / ``topk_among`` / ``make_score_set`` and nothing else.
+# Every top-k implementation lives here: the fused Pallas kernels, the
+# streaming scan core, the generic score-fn ``chunked_topk``, the
+# cross-shard ``distributed_topk`` merge, and the ``remap_ids`` gather the
+# stream layer uses to map internal rows back to external ids.
 from repro.engine.scorer import (
+    chunked_topk,
+    distributed_topk,
     make_score_set,
     merge_topk,
     pad_rows,
+    remap_ids,
     rerank_among,
     search_stats,
     topk,
@@ -25,4 +32,7 @@ __all__ = [
     "search_stats",
     "merge_topk",
     "pad_rows",
+    "chunked_topk",
+    "distributed_topk",
+    "remap_ids",
 ]

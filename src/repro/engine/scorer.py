@@ -20,8 +20,10 @@ top-k carried in VMEM, no [Q, N] matrix in HBM); the scan paths stream
 `lax.scan` chunks through ``merge_topk`` with the same masking contract.
 
 Row-id bases: shard-local stores carry ``base`` and the engine rebases
-returned ids, so the distributed merge (`knn.topk.distributed_topk`)
-composes without per-caller offset arithmetic.
+returned ids, so the distributed merge (``distributed_topk``, below)
+composes without per-caller offset arithmetic.  ``remap_ids`` is the
+id-remap gather segmented indexes use to turn internal row ids back into
+caller-visible external ids.
 """
 
 from __future__ import annotations
@@ -48,7 +50,7 @@ ScoreSet = Callable[[jax.Array, jax.Array], jax.Array]
 
 
 # --------------------------------------------------------------------------
-# generic streaming machinery (canonical home; knn.topk re-exports)
+# generic streaming machinery (canonical home; knn.topk is a shim)
 # --------------------------------------------------------------------------
 
 def merge_topk(
@@ -73,6 +75,90 @@ def pad_rows(a: jax.Array, multiple: int) -> tuple[jax.Array, int]:
     if target == n:
         return a, n
     return jnp.pad(a, ((0, target - n), (0, 0))), n
+
+
+def remap_ids(ids: jax.Array, id_map: jax.Array) -> jax.Array:
+    """Gather ``id_map[ids]`` with -1 (no hit) passed through.
+
+    The id-remap helper behind segmented/mutable indexes: engine paths
+    return *internal* row ids (segment base + local row); the stream
+    layer's plans map them to the caller's external ids through one
+    gather — tombstoned / empty slots stay -1.
+    """
+    safe = jnp.clip(ids, 0, id_map.shape[0] - 1)
+    return jnp.where(ids >= 0, id_map[safe].astype(jnp.int32), -1)
+
+
+def _stream_topk(q, data, k, chunk, n_valid, tile_scores):
+    """THE streaming top-k loop: every scan-shaped top-k routes here.
+
+    Scores ``data`` in ``chunk``-row tiles through ``tile_scores(q, tile)``
+    with a running [Q, k] best set (``merge_topk``), id-masking rows
+    >= ``n_valid`` at the source.  Callers wrap it in their own jit
+    (``_scan_topk`` specializes on the store pytree, ``chunked_topk`` on a
+    static score_fn) so there is exactly one implementation of the
+    chunked-merge formulation and two compiled entry points.
+    """
+    Q = q.shape[0]
+    n = data.shape[0]
+
+    if n <= chunk:
+        s = tile_scores(q, data)
+        gid = jnp.arange(n, dtype=jnp.int32)[None, :]
+        ok = gid < n_valid
+        s = jnp.where(ok, s, NEG)
+        ids = jnp.where(ok, jnp.broadcast_to(gid, s.shape), -1)
+        return merge_topk(
+            jnp.full((Q, k), NEG, jnp.float32), jnp.full((Q, k), -1, jnp.int32),
+            s, ids, k,
+        )
+
+    padded, _ = pad_rows(data, chunk)
+    n_chunks = padded.shape[0] // chunk
+    tiles = padded.reshape(n_chunks, chunk, padded.shape[-1])
+
+    init = (jnp.full((Q, k), NEG, jnp.float32), jnp.full((Q, k), -1, jnp.int32))
+
+    def step(carry, inp):
+        best_s, best_i = carry
+        tile, tile_idx = inp
+        s = tile_scores(q, tile)
+        gid = tile_idx * chunk + jnp.arange(chunk, dtype=jnp.int32)[None, :]
+        ok = gid < n_valid                             # id-mask at the source
+        s = jnp.where(ok, s, NEG)
+        ids = jnp.where(ok, jnp.broadcast_to(gid, s.shape), -1)
+        return merge_topk(best_s, best_i, s, ids, k), None
+
+    (best_s, best_i), _ = jax.lax.scan(
+        step, init, (tiles, jnp.arange(n_chunks, dtype=jnp.int32))
+    )
+    return best_s, best_i
+
+
+@partial(jax.jit, static_argnames=("k", "score_fn", "chunk", "n_valid"))
+def chunked_topk(
+    queries: jax.Array,
+    corpus: jax.Array,
+    k: int,
+    score_fn: Callable[[jax.Array, jax.Array], jax.Array],
+    chunk: int = 16384,
+    n_valid: int | None = None,
+):
+    """Exact top-k of score_fn(queries, corpus) without materializing [Q, N].
+
+    The generic score-fn entry point over ``_stream_topk`` (the index hot
+    path uses ``engine.topk`` and the fused Pallas kernels instead).  Any
+    corpus length works — rows are padded to the chunk internally and
+    rows >= ``n_valid`` (default: all real rows valid) are id-masked at
+    the source, so callers no longer pre-pad or post-mask.  ``score_fn``
+    must be a stable (hashable) callable: it is a static jit argument.
+    """
+    n_valid = corpus.shape[0] if n_valid is None else n_valid
+
+    def tile_scores(q, tile):
+        return score_fn(q, tile).astype(jnp.float32)
+
+    return _stream_topk(queries, corpus, k, chunk, n_valid, tile_scores)
 
 
 # --------------------------------------------------------------------------
@@ -118,49 +204,20 @@ def make_score_set(store: CodeStore, metric: str) -> ScoreSet:
 
 @partial(jax.jit, static_argnames=("k", "metric", "chunk"))
 def _scan_topk(q: jax.Array, store: CodeStore, k: int, metric: str, chunk: int):
-    """Unfused fallback: lax.scan over corpus chunks + merge_topk.
+    """Unfused fallback: ``_stream_topk`` over the store's tiles.
 
     Used for metrics the fused kernel does not cover (angular needs the
     per-row norm rescale).  Packed tiles are unpacked chunk-by-chunk — the
     full-width corpus never materializes.
     """
-    n = store.n
-    Q = q.shape[0]
 
-    def tile_scores(tile):
+    def tile_scores(qq, tile):
         rows = PK.unpack_int4(tile) if store.packed else tile
-        return D.scores(q, rows, metric, quantized=store.quantized).astype(
+        return D.scores(qq, rows, metric, quantized=store.quantized).astype(
             jnp.float32
         )
 
-    if n <= chunk:
-        s = tile_scores(store.data)
-        ids = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], s.shape)
-        return merge_topk(
-            jnp.full((Q, k), NEG, jnp.float32), jnp.full((Q, k), -1, jnp.int32),
-            s, ids, k,
-        )
-
-    padded, _ = pad_rows(store.data, chunk)
-    n_chunks = padded.shape[0] // chunk
-    tiles = padded.reshape(n_chunks, chunk, padded.shape[-1])
-
-    init = (jnp.full((Q, k), NEG, jnp.float32), jnp.full((Q, k), -1, jnp.int32))
-
-    def step(carry, inp):
-        best_s, best_i = carry
-        tile, tile_idx = inp
-        s = tile_scores(tile)
-        gid = tile_idx * chunk + jnp.arange(chunk, dtype=jnp.int32)[None, :]
-        ok = gid < n                                   # id-mask at the source
-        s = jnp.where(ok, s, NEG)
-        ids = jnp.where(ok, jnp.broadcast_to(gid, s.shape), -1)
-        return merge_topk(best_s, best_i, s, ids, k), None
-
-    (best_s, best_i), _ = jax.lax.scan(
-        step, init, (tiles, jnp.arange(n_chunks, dtype=jnp.int32))
-    )
-    return best_s, best_i
+    return _stream_topk(q, store.data, k, chunk, store.n, tile_scores)
 
 
 def topk(
@@ -305,6 +362,42 @@ def rerank_among(
         "rerank_bytes": int(cand_ids.shape[0]) * depth * store.row_bytes,
     }
     return s, i, stats
+
+
+# --------------------------------------------------------------------------
+# Distributed merge (corpus row-sharded over one or more mesh axes)
+# --------------------------------------------------------------------------
+
+def distributed_topk(
+    local_scores: jax.Array,
+    local_ids: jax.Array,
+    k: int,
+    axis_name: str | tuple[str, ...],
+    shard_offset: jax.Array,
+):
+    """Merge per-shard top-k into a global top-k, inside ``shard_map``.
+
+    Each shard holds [Q, k] candidates with *local* ids; ``shard_offset``
+    (scalar, per shard) rebases them to global row ids.  One all_gather of
+    k entries per query per shard — O(shards * Q * k) bytes, independent of
+    corpus size N.  (A butterfly collective_permute halves wire bytes at
+    log-depth; see EXPERIMENTS.md §Perf for why all_gather wins at k=100.)
+
+    Shard-local stores built with ``CodeStore(base=offset)`` already
+    return rebased ids from the engine — pass ``shard_offset=0`` there.
+    """
+    gids = jnp.where(local_ids >= 0, local_ids + shard_offset, -1)
+    names = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+    s, i = local_scores, gids
+    for name in names:
+        s = jax.lax.all_gather(s, name, axis=0)   # [S, Q, k]
+        i = jax.lax.all_gather(i, name, axis=0)
+        S, Q, kk = s.shape
+        s = jnp.moveaxis(s, 0, 1).reshape(Q, S * kk)
+        i = jnp.moveaxis(i, 0, 1).reshape(Q, S * kk)
+        s, pos = jax.lax.top_k(s, k)
+        i = jnp.take_along_axis(i, pos, axis=-1)
+    return s, i
 
 
 # --------------------------------------------------------------------------

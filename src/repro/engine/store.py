@@ -28,9 +28,23 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import pack as PK
 from repro.core import quant as Qz
+
+
+def _params_equal(a: Optional[Qz.QuantParams], b: Optional[Qz.QuantParams]) -> bool:
+    """Exact (bit-level) equality of two quantization-constant sets."""
+    if a is None or b is None:
+        return a is None and b is None
+    return (
+        a.bits == b.bits
+        and a.scheme == b.scheme
+        and np.array_equal(np.asarray(a.lo), np.asarray(b.lo))
+        and np.array_equal(np.asarray(a.hi), np.asarray(b.hi))
+        and np.array_equal(np.asarray(a.zero), np.asarray(b.zero))
+    )
 
 
 @jax.tree_util.register_dataclass
@@ -72,6 +86,55 @@ class CodeStore:
             codes = PK.pack_int4(codes)
         return CodeStore(n=n, d=d, bits=params.bits, packed=pack,
                          data=codes, params=params, base=base)
+
+    @staticmethod
+    def concat(stores: "list[CodeStore]", base: int = 0) -> "CodeStore":
+        """Row-concatenate layout-compatible stores into one id space.
+
+        The stream layer's segment-merge primitive: every input must agree
+        on (d, bits, packed) and — for quantized stores — on the exact
+        Eq. 1 constants, because a single store has a single code space;
+        mixing differently-calibrated codes would silently mis-score.
+        Input ``base`` offsets are discarded (rows are renumbered
+        0..sum(n)-1 under the new ``base``).
+        """
+        if not stores:
+            raise ValueError("CodeStore.concat of zero stores")
+        head = stores[0]
+        for s in stores[1:]:
+            if (s.d, s.bits, s.packed) != (head.d, head.bits, head.packed):
+                raise ValueError(
+                    "concat of layout-incompatible stores: "
+                    f"{(s.d, s.bits, s.packed)} vs {(head.d, head.bits, head.packed)}"
+                )
+            if not _params_equal(s.params, head.params):
+                raise ValueError(
+                    "concat of stores with different quantization constants "
+                    "— one store has one code space; re-encode first "
+                    "(stream compaction re-quantizes from raw payloads)"
+                )
+        data = jnp.concatenate([s.data for s in stores], axis=0)
+        return CodeStore(n=sum(s.n for s in stores), d=head.d, bits=head.bits,
+                         packed=head.packed, data=data, params=head.params,
+                         base=base)
+
+    def append(self, vectors: jax.Array) -> "CodeStore":
+        """A new store with fp32 ``vectors`` encoded into this store's code
+        space and appended (rows keep their order; ids extend n..n+m-1):
+        grow a store under its existing constants without re-learning.
+        """
+        vectors = jnp.asarray(vectors, jnp.float32)
+        if vectors.shape[1] != self.d:
+            raise ValueError(f"append dim {vectors.shape[1]} != store d {self.d}")
+        if not self.quantized:
+            extra = CodeStore.dense(vectors)
+        else:
+            from repro.kernels import ops as K
+
+            p = self.params
+            codes = K.quantize(vectors, p.lo, p.hi, p.zero, bits=p.bits)
+            extra = CodeStore.from_codes(codes, p, pack=self.packed)
+        return CodeStore.concat([self, extra], base=self.base)
 
     # -- shape/metadata ----------------------------------------------------
     @property

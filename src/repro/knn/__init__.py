@@ -17,7 +17,7 @@ from repro.knn.hnsw import HNSWIndex
 from repro.knn.graph_index import GraphIndex
 from repro.knn.pq import PQIndex
 from repro.knn.registry import kinds, load_index, make_index
-from repro.knn.topk import chunked_topk, distributed_topk, merge_topk
+from repro.engine import chunked_topk, distributed_topk, merge_topk
 from repro.knn.graph_utils import knn_graph, radius_graph
 
 __all__ = [
@@ -38,9 +38,22 @@ __all__ = [
     "HNSWIndex",
     "GraphIndex",
     "PQIndex",
+    "MutableIndex",
     "chunked_topk",
     "distributed_topk",
     "merge_topk",
     "knn_graph",
     "radius_graph",
 ]
+
+
+def __getattr__(name):
+    # the mutable LSM wrapper (repro.stream) is a registered kind like any
+    # other, but it imports repro.knn submodules itself — resolve it
+    # lazily (PEP 562) so ``import repro.stream`` as the first repro
+    # import doesn't hit a half-initialized package in either direction
+    if name == "MutableIndex":
+        from repro.stream import MutableIndex
+
+        return MutableIndex
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -135,30 +135,41 @@ class Index(Protocol):
 _META_KEY = "__meta__"
 
 
-def save_state(path: str, arrays: dict[str, Any], meta: dict[str, Any]) -> None:
+def save_state(path, arrays: dict[str, Any], meta: dict[str, Any]) -> None:
     """Write an index's arrays + static metadata as a single ``.npz``.
 
     ``meta`` must be JSON-serializable and include ``kind`` so
     ``registry.load_index`` can dispatch without knowing the class.
+    ``path`` may be a filesystem path or a binary file-like object — the
+    stream manifest embeds each sealed segment's inner-index npz as a
+    byte blob inside its own npz, so index save/load must compose through
+    in-memory buffers (DESIGN.md §10).
     """
     out = {k: np.asarray(v) for k, v in arrays.items() if v is not None}
     out[_META_KEY] = np.frombuffer(
         json.dumps(meta).encode("utf-8"), dtype=np.uint8
     )
+    if hasattr(path, "write"):
+        np.savez(path, **out)
+        return
     with open(path, "wb") as f:
         np.savez(f, **out)
 
 
-def load_state(path: str) -> tuple[dict[str, np.ndarray], dict[str, Any]]:
+def load_state(path) -> tuple[dict[str, np.ndarray], dict[str, Any]]:
+    if hasattr(path, "seek"):
+        path.seek(0)              # compose after load_meta on one buffer
     with np.load(path) as z:
         meta = json.loads(bytes(z[_META_KEY].tobytes()).decode("utf-8"))
         arrays = {k: z[k] for k in z.files if k != _META_KEY}
     return arrays, meta
 
 
-def load_meta(path: str) -> dict[str, Any]:
+def load_meta(path) -> dict[str, Any]:
     """Read only the metadata record — npz members load lazily, so this
     never materializes the (possibly huge) index arrays."""
+    if hasattr(path, "seek"):
+        path.seek(0)
     with np.load(path) as z:
         return json.loads(bytes(z[_META_KEY].tobytes()).decode("utf-8"))
 

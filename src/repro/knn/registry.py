@@ -32,12 +32,21 @@ def register(kind: str):
     return deco
 
 
+_IMPORTED = False
+
+
 def _ensure_registered() -> None:
     # the index modules register on import; pull them in on first use so
-    # ``registry`` itself stays import-cycle-free.
-    if _REGISTRY:
+    # ``registry`` itself stays import-cycle-free.  (Guard on a flag, not
+    # on _REGISTRY being non-empty: ``import repro.knn`` already registers
+    # the five base kinds as a side effect, and the stream wrapper must
+    # still be pulled in on top of them.)
+    global _IMPORTED
+    if _IMPORTED:
         return
+    _IMPORTED = True
     from repro.knn import flat, graph_index, hnsw, ivf, pq  # noqa: F401
+    from repro.stream import mutable  # noqa: F401  (kind "stream")
 
 
 def kinds() -> tuple[str, ...]:

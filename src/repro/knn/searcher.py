@@ -42,7 +42,7 @@ from repro import engine
 from repro.knn import base as B
 
 __all__ = ["Searcher", "Rerank", "one_shot", "sharded_scan_plan",
-           "DEFAULT_BATCH_SIZES", "DEFAULT_RERANK_DEPTH"]
+           "multi_source_plan", "DEFAULT_BATCH_SIZES", "DEFAULT_RERANK_DEPTH"]
 
 #: padded batch-size buckets a plan compiles for (smallest covering
 #: bucket is picked per request; oversize requests run in max-bucket
@@ -64,10 +64,16 @@ def DEFAULT_RERANK_DEPTH(k: int, n: int) -> int:
 @dataclasses.dataclass(frozen=True)
 class Rerank:
     """Rerank stage config: re-score the quantized top-``depth`` against
-    ``store`` (an fp32 or int8 ``engine.CodeStore``) by exact distance."""
+    ``store`` (an fp32 or int8 ``engine.CodeStore``) by exact distance.
+
+    ``store`` is None for indexes that own their rerank stage
+    (``handles_rerank = True``, e.g. the stream kind, whose multi-segment
+    merge re-scores against the manifest's raw payloads inside its own
+    plan) — the Searcher then only resolves the depth and passes it down.
+    """
 
     depth: int
-    store: engine.CodeStore
+    store: Optional[engine.CodeStore]
 
 
 def _query_dim(index) -> Optional[int]:
@@ -78,7 +84,8 @@ def _query_dim(index) -> Optional[int]:
         return store.d - 1 if getattr(index, "aug", False) else store.d
     if isinstance(store, engine.PQStore):
         return int(store.codebooks.shape[0] * store.codebooks.shape[2])
-    return None
+    d = getattr(index, "d", None)           # store-less kinds (stream)
+    return int(d) if d is not None else None
 
 
 def _resolve_rerank(index, k: int, n: int, rerank) -> Optional[Rerank]:
@@ -88,9 +95,28 @@ def _resolve_rerank(index, k: int, n: int, rerank) -> Optional[Rerank]:
     False -> explicitly off, even for a ``+rN`` index
     int   -> depth override over the index's ``+rN`` store
     Rerank -> fully explicit (store must cover the same id space)
+
+    Indexes with ``handles_rerank = True`` resolve to a store-less
+    ``Rerank(depth, None)``: the depth is passed to ``index.plan`` and the
+    index's own runner re-scores (the Searcher runs no tail of its own).
     """
     if rerank is False:
         return None
+    if getattr(index, "handles_rerank", False):
+        if rerank is None:
+            if getattr(index, "rerank_bits", None) is None:
+                return None
+            return Rerank(DEFAULT_RERANK_DEPTH(k, n), None)
+        if rerank is True:
+            return Rerank(DEFAULT_RERANK_DEPTH(k, n), None)
+        if isinstance(rerank, bool) or not isinstance(rerank, int):
+            raise TypeError(
+                f"{index.kind!r} owns its rerank stage; pass None / False / "
+                f"an int depth, not {type(rerank)!r}"
+            )
+        if rerank <= 0:
+            raise ValueError(f"rerank depth must be positive, got {rerank}")
+        return Rerank(max(k, min(int(rerank), max(n, k))), None)
     own = getattr(index, "rerank_store", None)
     if rerank is None or rerank is True:
         if own is None:
@@ -149,7 +175,7 @@ def sharded_scan_plan(
     from repro.core import distances as D
     from repro.core import pack as PK
     from repro.dist.sharding import P, corpus_shards, shard_map
-    from repro.knn.topk import distributed_topk
+    from repro.engine import distributed_topk
 
     if store.base:
         raise ValueError("sharded plans require a base-0 store (the plan "
@@ -217,6 +243,112 @@ def sharded_scan_plan(
 
 
 # --------------------------------------------------------------------------
+# multi-source plans: segments + memtable behind one runner (stream kind)
+# --------------------------------------------------------------------------
+
+def multi_source_plan(
+    sources: Sequence[tuple[PlanFn, int, int]],
+    *,
+    k: int,
+    metric: str,
+    id_map: jax.Array,
+    live: jax.Array,
+    merge_store: Optional[engine.CodeStore],
+    rescore: bool,
+    stats_extra: Optional[dict] = None,
+) -> PlanFn:
+    """Fuse per-source plans into one runner over a shared internal id
+    space (DESIGN.md §10 — the stream kind's search path).
+
+    ``sources`` is a list of ``(runner, base, width)``: each runner is a
+    kind's ``plan`` output over one sealed segment (or the memtable's
+    flat scan) returning *local* ids; ``base`` rebases them into the
+    manifest's internal id space, ``width`` is the candidate count the
+    runner returns.  The fused runner:
+
+      1. runs every source, rebases ids, and **tombstone-masks** deleted
+         rows through the manifest's ``live`` bitmap (masked at candidate
+         level: a dead row can occupy a candidate slot but never a
+         result slot — sources over-fetch by their dead count so k live
+         rows always survive on exact sources);
+      2. merges: with ``rescore``, all candidates are re-scored in one
+         common space via ``engine.topk_among`` against ``merge_store``
+         (per-segment quantized scores are NOT comparable across
+         differently-calibrated segments — the re-score is what makes
+         the merge sound, and doubles as the ``+rN`` rerank tail); a
+         single source with no re-score requested passes through its own
+         score order (the exact-parity path a freshly-compacted stream
+         index shares with its from-scratch equivalent);
+      3. maps internal ids to external ids via ``engine.remap_ids``.
+
+    Everything is a pure function of the query batch, so the Searcher
+    compiles sources -> mask -> merge -> remap as one executable per
+    bucket.  Like every plan, the runner snapshots the state it closed
+    over — mutations after plan time need a new plan (LSM readers pin a
+    manifest version; DESIGN.md §10).
+    """
+    if rescore and merge_store is None:
+        raise ValueError("rescoring merge needs a merge_store")
+    extra = dict(stats_extra or {})
+    total_width = sum(w for _, _, w in sources)
+
+    def run(queries: jax.Array) -> B.SearchResult:
+        q = jnp.asarray(queries, jnp.float32)
+        Q = q.shape[0]
+        if not sources:                       # fully empty index
+            return B.SearchResult(
+                jnp.full((Q, k), NEG, jnp.float32),
+                jnp.full((Q, k), -1, jnp.int32),
+                {"kind": "stream", "candidates": 0, "reranked": 0, **extra},
+            )
+
+        parts_s, parts_i = [], []
+        agg = {"candidates": 0, "bytes_read": 0, "chunks": 0}
+        for runner, base, _w in sources:
+            res = runner(q)
+            gid = jnp.where(res.ids >= 0, res.ids + base, -1)
+            parts_s.append(res.scores)
+            parts_i.append(gid)
+            for key in agg:
+                agg[key] += int(res.stats.get(key, 0))
+        s = jnp.concatenate(parts_s, axis=1)
+        gids = jnp.concatenate(parts_i, axis=1)
+
+        # tombstone mask: dead rows lose their candidate slot here, at
+        # merge level, inside the compiled function
+        ok = (gids >= 0) & live[jnp.clip(gids, 0, live.shape[0] - 1)]
+        s = jnp.where(ok, s, NEG)
+        gids = jnp.where(ok, gids, -1)
+
+        stats = {"kind": "stream", **agg, **extra}
+        if rescore:
+            qm = merge_store.encode_queries(q)
+            s, gids = engine.topk_among(qm, merge_store, gids, k, metric)
+            stats.update(
+                reranked=total_width,
+                rerank_bits=int(merge_store.bits),
+                rerank_bytes=int(Q) * total_width * merge_store.row_bytes,
+            )
+            stats["bytes_read"] += stats["rerank_bytes"]
+        else:
+            # single-source pass-through: keep the source's own score
+            # order (lax.top_k is stable, so dropping dead slots cannot
+            # reorder live ties)
+            k_eff = min(k, s.shape[1])
+            s, pos = jax.lax.top_k(s, k_eff)
+            gids = jnp.take_along_axis(gids, pos, axis=-1)
+            if k_eff < k:
+                s = jnp.pad(s, ((0, 0), (0, k - k_eff)), constant_values=NEG)
+                gids = jnp.pad(gids, ((0, 0), (0, k - k_eff)),
+                               constant_values=-1)
+            stats["reranked"] = 0
+        ext = engine.remap_ids(gids, id_map)
+        return B.SearchResult(s, ext, stats)
+
+    return run
+
+
+# --------------------------------------------------------------------------
 # the Searcher handle
 # --------------------------------------------------------------------------
 
@@ -272,9 +404,15 @@ class Searcher:
         n_shards = int(shards.devices.size) if shards is not None else 1
         self._extras = {"shards": n_shards}
 
-        k_inner = self.rerank.depth if self.rerank is not None else k
-        inner = index.plan(k_inner, sp, mesh=shards)
         rr = self.rerank
+        if rr is not None and rr.store is None:
+            # index-owned rerank (stream): the plan runs scan -> merge ->
+            # exact re-score itself; hand it k AND the candidate depth
+            inner = index.plan(k, sp, mesh=shards, rerank_depth=rr.depth)
+            rr = None
+        else:
+            k_inner = rr.depth if rr is not None else k
+            inner = index.plan(k_inner, sp, mesh=shards)
         metric = index.metric
 
         def run(queries: jax.Array) -> B.SearchResult:
@@ -291,7 +429,7 @@ class Searcher:
                     stats.get("bytes_read", 0) + rstats["rerank_bytes"]
                 )
             else:
-                stats["reranked"] = 0
+                stats.setdefault("reranked", 0)
             return B.SearchResult(s, i, stats)
 
         self._run = run

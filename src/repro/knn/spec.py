@@ -20,6 +20,9 @@ build parameters.  ``parse_factory`` turns FAISS-style strings into specs:
                             recall recovery; DESIGN.md §9)
     "pq16+lpq,r32"          standalone rerank fragment for kinds whose
                             quant rides elsewhere (PQ ADC tables)
+    "stream(ivf256,lpq4)+r32"  mutable LSM-style wrapper around any other
+                            kind: memtable + quantized segments +
+                            tombstones + live compaction (DESIGN.md §10)
 
 Grammar: comma-separated fragments.  Exactly one *kind* fragment
 (``flat`` | ``ivf<nlist>`` | ``hnsw<M>`` | ``graph<degree>`` |
@@ -28,6 +31,11 @@ Grammar: comma-separated fragments.  Exactly one *kind* fragment
 fragment, at most one *rerank* fragment (``r<rbits>``, rbits in {8, 32} —
 the precision of the exact re-scoring store the Searcher's rerank tail
 gathers from).  ``to_factory`` is the inverse, up to default elision.
+
+The mutable wrapper is an outer production: ``stream(<factory>)[+r<N>]``,
+where ``<factory>`` is any non-stream factory string (the sealed-segment
+kind) and the rerank suffix — whether written inside or outside the
+parens — names the precision of the cross-segment merge/rerank store.
 """
 
 from __future__ import annotations
@@ -47,6 +55,9 @@ KIND_PARAM = {
     "hnsw": ("m", 16),
     "graph": ("degree", 32),
     "pq": ("m", 8),
+    # the mutable LSM wrapper; its "parameter" is a whole inner factory
+    # string carried in params["inner"], not a numeric fragment
+    "stream": (None, None),
 }
 
 
@@ -171,6 +182,12 @@ class IndexSpec:
                 f"rerank_bits must be one of {RERANK_BITS} (got "
                 f"{self.rerank_bits!r}): the rerank store is fp32 or int8"
             )
+        if self.kind == "stream" and "inner" not in self.params:
+            raise ValueError(
+                "a stream spec needs params['inner'] — the factory string "
+                "of the kind its sealed segments are built as, e.g. "
+                "parse_factory('stream(flat,lpq4)')"
+            )
 
     def with_overrides(self, **overrides) -> "IndexSpec":
         """Merge extra build parameters (ef_construction, key knobs...)."""
@@ -178,6 +195,11 @@ class IndexSpec:
 
     def to_factory(self) -> str:
         """Inverse of ``parse_factory`` (defaults elided)."""
+        if self.kind == "stream":
+            frag = f"stream({self.params['inner']})"
+            if self.rerank_bits is not None:
+                frag += f"+r{self.rerank_bits}"
+            return frag
         pname, pdefault = KIND_PARAM[self.kind]
         frag = self.kind
         if pname is not None:
@@ -204,11 +226,55 @@ _QUANT_RE = re.compile(
 _RERANK_RE = re.compile(r"^r(\d+)$")
 
 
+_STREAM_RE = re.compile(r"^stream\((.+)\)(\+r(\d+))?$", re.IGNORECASE)
+
+
+def _parse_stream(factory: str, metric: str | None) -> IndexSpec:
+    """``stream(<inner factory>)[+r<N>]`` -> a kind-"stream" spec.
+
+    The inner factory is parsed recursively (nesting ``stream`` inside
+    ``stream`` is rejected) and re-serialized in normalized form into
+    ``params["inner"]`` — segment builds call ``parse_factory`` on it
+    again, so the spec stays a plain JSON-able record.  A rerank fragment
+    written inside the parens is lifted to the outer spec: the rerank /
+    merge store belongs to the wrapper (which keeps the raw fp32
+    payloads), not to any single sealed segment.
+    """
+    m = _STREAM_RE.match(factory.strip())
+    assert m is not None
+    inner_str = m.group(1)
+    if _STREAM_RE.match(inner_str.strip()):
+        raise ValueError(
+            f"nested stream(...) in {factory!r}: the mutable wrapper "
+            "already composes with every registered kind"
+        )
+    inner = parse_factory(inner_str, metric=metric)
+    rerank_bits = inner.rerank_bits
+    if m.group(3) is not None:
+        if rerank_bits is not None:
+            raise ValueError(f"duplicate rerank fragment in {factory!r}")
+        rerank_bits = int(m.group(3))
+        if rerank_bits not in RERANK_BITS:
+            raise ValueError(
+                f"rerank precision must be one of {RERANK_BITS} "
+                f"(fp32 or int8 store), got r{rerank_bits} in {factory!r}"
+            )
+    inner = dataclasses.replace(inner, rerank_bits=None)
+    return IndexSpec(
+        kind="stream",
+        metric=inner.metric,
+        params={"inner": inner.to_factory()},
+        rerank_bits=rerank_bits,
+    )
+
+
 def parse_factory(factory: str, metric: str | None = None) -> IndexSpec:
     """Parse a FAISS-style factory string into an ``IndexSpec``.
 
     ``metric`` provides the default when the string has no metric fragment.
     """
+    if _STREAM_RE.match(factory.strip()):
+        return _parse_stream(factory, metric)
     kind = None
     params: dict[str, Any] = {}
     quant = None

@@ -1,28 +1,34 @@
-"""Top-k machinery: the distributed shard-merge used when the corpus is
-row-sharded over a mesh, plus back-compat re-exports of the generic
-streaming helpers whose canonical home is now ``repro.engine.scorer``.
+"""DEPRECATED shim — every top-k implementation lives in ``repro.engine``.
 
-Index classes no longer call anything here — the engine owns chunking,
-padding and invalid-id masking for every kind (scores are id-masked at
-the source, so the historical L2 zero-sentinel hazard — a zero pad row
-out-scoring real rows under negated L2 for callers that forgot to mask —
-cannot occur).  ``chunked_topk`` remains as a generic utility for
-score-fn-shaped callers outside the index layer.
+This module used to hold a second copy of the streaming chunked-merge
+scan plus the distributed shard-merge.  Those are now canonical in
+``repro.engine.scorer`` (one ``_stream_topk`` core behind both the
+store-aware ``engine.topk`` path and the generic score-fn
+``chunked_topk``), and this module only re-exports the legacy names for
+pre-engine callers:
 
-Larger-is-closer convention throughout (matches core.distances).
+    merge_topk / pad_rows      streaming primitives
+    chunked_topk               generic score-fn streaming top-k (now pads
+                               and id-masks internally; the historical
+                               N % chunk == 0 requirement is gone)
+    distributed_topk           cross-shard k-sized merge
+    pad_corpus / mask_invalid  the historical pad-then-mask pair callers
+                               of the old chunked_topk needed
+
+New code should import from ``repro.engine`` directly.
 """
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable
-
 import jax
 import jax.numpy as jnp
 
-# canonical implementations live in the engine; re-exported for callers
-# that predate the engine layer
-from repro.engine.scorer import merge_topk, pad_rows
+from repro.engine.scorer import (  # noqa: F401  (re-exports)
+    chunked_topk,
+    distributed_topk,
+    merge_topk,
+    pad_rows,
+)
 
 __all__ = [
     "merge_topk",
@@ -35,95 +41,15 @@ __all__ = [
 
 
 def pad_corpus(corpus: jax.Array, multiple: int):
-    """Pad corpus rows to a multiple; returns (padded, n_valid).
+    """Back-compat alias of ``engine.pad_rows`` (padded, n_valid).
 
-    Back-compat alias of ``engine.pad_rows``.  Padding rows are zeros;
-    every engine path masks them *by id* before any merge, so pad rows
-    can never win — even under L2 where a zero row would otherwise
-    out-score distant real rows.  Callers using this helper directly must
-    apply ``mask_invalid`` (or id-mask themselves) the same way.
+    ``engine.chunked_topk`` now pads and id-masks internally — callers no
+    longer need this except to reproduce the historical two-step contract.
     """
     return pad_rows(corpus, multiple)
 
 
 def mask_invalid(scores: jax.Array, ids: jax.Array, n_valid: int):
-    """Force padded ids out of any subsequent merge."""
+    """Force padded ids out of any subsequent merge (back-compat helper)."""
     bad = ids >= n_valid
     return jnp.where(bad, jnp.finfo(jnp.float32).min, scores), jnp.where(bad, -1, ids)
-
-
-@partial(jax.jit, static_argnames=("k", "chunk", "score_fn"))
-def chunked_topk(
-    queries: jax.Array,
-    corpus: jax.Array,
-    k: int,
-    score_fn: Callable[[jax.Array, jax.Array], jax.Array],
-    chunk: int = 16384,
-):
-    """Exact top-k of score_fn(queries, corpus) without materializing [Q, N].
-
-    ``lax.scan`` over corpus row-chunks carrying a running (scores, ids)
-    top-k — the streaming formulation that keeps the working set at
-    O(Q * (k + chunk)) regardless of N.  Requires N % chunk == 0 (callers
-    pad via ``pad_corpus`` and id-mask the result with ``mask_invalid``).
-
-    Generic score-fn version; the index hot path uses the engine's fused
-    Pallas kernels instead (``engine.topk``).
-    """
-    Q = queries.shape[0]
-    N = corpus.shape[0]
-    assert N % chunk == 0, (N, chunk)
-    n_chunks = N // chunk
-    tiles = corpus.reshape(n_chunks, chunk, corpus.shape[-1])
-
-    init_s = jnp.full((Q, k), jnp.finfo(jnp.float32).min, jnp.float32)
-    init_i = jnp.full((Q, k), -1, jnp.int32)
-
-    def step(carry, inp):
-        best_s, best_i = carry
-        tile, tile_idx = inp
-        s = score_fn(queries, tile).astype(jnp.float32)        # [Q, chunk]
-        ids = (tile_idx * chunk + jnp.arange(chunk, dtype=jnp.int32))[None, :]
-        ids = jnp.broadcast_to(ids, s.shape)
-        return merge_topk(best_s, best_i, s, ids, k), None
-
-    (best_s, best_i), _ = jax.lax.scan(
-        step, (init_s, init_i), (tiles, jnp.arange(n_chunks, dtype=jnp.int32))
-    )
-    return best_s, best_i
-
-
-# --------------------------------------------------------------------------
-# Distributed merge (corpus row-sharded over one or more mesh axes)
-# --------------------------------------------------------------------------
-
-def distributed_topk(
-    local_scores: jax.Array,
-    local_ids: jax.Array,
-    k: int,
-    axis_name: str | tuple[str, ...],
-    shard_offset: jax.Array,
-):
-    """Merge per-shard top-k into a global top-k, inside ``shard_map``.
-
-    Each shard holds [Q, k] candidates with *local* ids; ``shard_offset``
-    (scalar, per shard) rebases them to global row ids.  One all_gather of
-    k entries per query per shard — O(shards * Q * k) bytes, independent of
-    corpus size N.  (A butterfly collective_permute halves wire bytes at
-    log-depth; see EXPERIMENTS.md §Perf for why all_gather wins at k=100.)
-
-    Shard-local stores built with ``CodeStore(base=offset)`` already
-    return rebased ids from the engine — pass ``shard_offset=0`` there.
-    """
-    gids = jnp.where(local_ids >= 0, local_ids + shard_offset, -1)
-    names = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
-    s, i = local_scores, gids
-    for name in names:
-        s = jax.lax.all_gather(s, name, axis=0)   # [S, Q, k]
-        i = jax.lax.all_gather(i, name, axis=0)
-        S, Q, kk = s.shape
-        s = jnp.moveaxis(s, 0, 1).reshape(Q, S * kk)
-        i = jnp.moveaxis(i, 0, 1).reshape(Q, S * kk)
-        s, pos = jax.lax.top_k(s, k)
-        i = jnp.take_along_axis(i, pos, axis=-1)
-    return s, i

@@ -13,11 +13,19 @@ Reporting: QPS, p50/p95/p99 request latency, and per-search engine stats
 *aggregated across the whole session* (per-request means + totals — not
 the last request's dict).
 
+Mutable (``stream(...)``) indexes serve writes too: ``--mutate``
+interleaves an upsert and a delete into the request mix.  A Searcher is
+a snapshot plan (LSM readers pin a manifest version, DESIGN.md §10), so
+each write op applies the mutation and re-plans the session; the report
+separates query latency from write+replan latency.
+
     PYTHONPATH=src python -m repro.launch.serve --index flat,lpq4+r32 \
         --requests 4
     PYTHONPATH=src python -m repro.launch.serve --index hnsw32,lpq8 \
         --n 20000 --d 64 --batch 32 --mixed
     PYTHONPATH=src python -m repro.launch.serve --index flat,lpq8 --shards 2
+    PYTHONPATH=src python -m repro.launch.serve \
+        --index "stream(flat,lpq4)+r32" --requests 6 --mutate
 """
 
 from __future__ import annotations
@@ -69,12 +77,19 @@ def main(argv: list[str] | None = None) -> None:
                          "index's default when built with +rN)")
     ap.add_argument("--mixed", action="store_true",
                     help="cycle request sizes through several buckets")
+    ap.add_argument("--mutate", action="store_true",
+                    help="interleave an upsert and a delete request into "
+                         "the traffic (stream(...) indexes only)")
     args = ap.parse_args(argv)
 
     sizes = _request_sizes(args.requests, args.batch, args.mixed)
-    corpus, queries, _metric = synthetic.load("product", args.n, sum(sizes))
+    n_extra = 8 if args.mutate else 0
+    corpus, queries, _metric = synthetic.load(
+        "product", args.n + n_extra, sum(sizes)
+    )
     corpus = corpus[:, : args.d]
     queries = queries[:, : args.d]
+    corpus, extra_rows = corpus[: args.n], corpus[args.n:]
 
     t0 = time.perf_counter()
     index = make_index(args.index, corpus, key=jax.random.PRNGKey(0))
@@ -102,20 +117,40 @@ def main(argv: list[str] | None = None) -> None:
             print("[serve] 1 device available — serving unsharded (a "
                   "1-shard mesh would be the degenerate merge formulation)")
 
-    searcher = index.searcher(
-        args.k, sp, batch_sizes=buckets, shards=mesh,
-        rerank=args.rerank_depth or None,
-    )
+    if args.mutate and not hasattr(index, "upsert"):
+        raise SystemExit(
+            f"--mutate needs a mutable index; {args.index!r} is {index.kind!r}"
+            " — wrap it: stream(" + args.index + ")"
+        )
+
+    def make_searcher():
+        return index.searcher(
+            args.k, sp, batch_sizes=buckets, shards=mesh,
+            rerank=args.rerank_depth or None,
+        )
+
+    searcher = make_searcher()
     print(f"[serve] index={args.index} kind={index.kind} build={build_s:.2f}s "
           f"memory={index.memory_bytes() / 1e6:.1f}MB buckets={buckets} "
           f"shards={searcher.n_shards} "
           f"rerank={searcher.rerank.depth if searcher.rerank else 0}")
 
-    # request queue (open loop: all arrivals enqueued up front)
+    # request queue (open loop: all arrivals enqueued up front); with
+    # --mutate an upsert lands a third of the way in and a delete two
+    # thirds in, between query requests (clamped so both ops always fire
+    # even at --requests 1)
+    up_at = min(max(1, len(sizes) // 3), len(sizes) - 1)
+    del_at = min(max(2, (2 * len(sizes)) // 3), len(sizes) - 1)
     queue: collections.deque = collections.deque()
     off = 0
-    for sz in sizes:
-        queue.append(queries[off : off + sz])
+    for i, sz in enumerate(sizes):
+        if args.mutate and i == up_at:
+            queue.append(("upsert",
+                          np.arange(args.n, args.n + extra_rows.shape[0]),
+                          extra_rows))
+        if args.mutate and i == del_at:
+            queue.append(("delete", np.arange(0, 4), None))
+        queue.append(("query", queries[off : off + sz], None))
         off += sz
 
     # warmup: run every distinct request size once — this compiles each
@@ -126,27 +161,54 @@ def main(argv: list[str] | None = None) -> None:
         jax.block_until_ready(searcher(queries[:sz]).ids)
 
     latencies = []
+    write_latencies = []
     totals: collections.Counter = collections.Counter()
     served = 0
+    writes = 0
     t0 = time.perf_counter()
     while queue:
-        q = queue.popleft()
+        op, payload, vecs = queue.popleft()
         t_req = time.perf_counter()
-        res = searcher(q)
-        jax.block_until_ready(res.ids)
-        latencies.append(time.perf_counter() - t_req)
-        served += int(q.shape[0])
-        for key in _AGG_KEYS:
-            totals[key] += int(res.stats.get(key, 0))
+        if op == "query":
+            res = searcher(payload)
+            jax.block_until_ready(res.ids)
+            latencies.append(time.perf_counter() - t_req)
+            served += int(payload.shape[0])
+            for key in _AGG_KEYS:
+                totals[key] += int(res.stats.get(key, 0))
+        else:
+            # write op: apply, then re-plan — a Searcher is a snapshot
+            # (manifest-pinned) session, so writes cost a plan rebuild
+            if op == "upsert":
+                index.upsert(payload, vecs)
+            else:
+                index.delete(payload)
+            searcher = make_searcher()
+            # warm every distinct request size, as at startup — a cold
+            # bucket after the re-plan would pollute the query p95/p99
+            for sz in sorted(set(sizes)):
+                jax.block_until_ready(searcher(queries[:sz]).ids)
+            write_latencies.append(time.perf_counter() - t_req)
+            writes += len(payload)
     dt = time.perf_counter() - t0
 
     n_req = len(latencies)
     p50, p95, p99 = (float(np.percentile(latencies, p)) for p in (50, 95, 99))
+    # query throughput excludes write ops' apply+replan+re-warm time —
+    # that cost is reported separately below
+    query_dt = max(dt - sum(write_latencies), 1e-9)
     print(f"[serve] {served} queries / {n_req} requests in {dt:.3f}s -> "
-          f"{served / dt:.1f} QPS (k={args.k}, corpus={index.n}, "
+          f"{served / query_dt:.1f} QPS (k={args.k}, corpus={index.n}, "
           f"kind={index.kind})")
     print(f"[serve] latency p50={p50 * 1e3:.2f}ms p95={p95 * 1e3:.2f}ms "
           f"p99={p99 * 1e3:.2f}ms")
+    if write_latencies:
+        print(f"[serve] writes: {writes} rows / {len(write_latencies)} ops, "
+              f"apply+replan p50="
+              f"{float(np.percentile(write_latencies, 50)) * 1e3:.2f}ms; "
+              f"index now n={index.n} "
+              f"segments={index.stats()['segments']} "
+              f"tombstones={index.stats()['tombstones']}")
     # per-search engine accounting aggregated over the session (uniform
     # across kinds; DESIGN.md §8/§9) — means per request, plus totals for
     # the batch-cumulative keys (candidates/chunks/reranked are per-query

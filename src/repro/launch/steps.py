@@ -164,7 +164,7 @@ def make_retrieval_sharded(
 
     from repro.core import distances as D
     from repro.dist.sharding import shard_map
-    from repro.knn import topk as T
+    from repro import engine
 
     axes = tuple(a for a in mesh.axis_names if a in ("data", "model"))
 
@@ -172,7 +172,7 @@ def make_retrieval_sharded(
         s = D.scores(q_codes, shard_codes, "ip", quantized=quantized)
         s = s.astype(jnp.float32)
         loc_s, loc_i = jax.lax.top_k(s, k)
-        return T.distributed_topk(
+        return engine.distributed_topk(
             loc_s, loc_i.astype(jnp.int32), k, axes, shard_idx[0] * n_local
         )
 

@@ -1,0 +1,24 @@
+# Mutable segmented indexes (DESIGN.md §10): an LSM-style wrapper that
+# puts upsert/delete behind every registered index kind.  A fp32 Memtable
+# absorbs writes; sealing builds an immutable quantized Segment (an inner
+# index instance with its own row-id base and per-segment Eq. 1
+# constants); the Manifest tracks segments + tombstones and drives
+# save/load; the Compactor merges small segments, drops tombstoned rows
+# and re-quantizes when the live distribution has drifted from a
+# segment's calibration (core.stats.calibration_drift over the
+# StreamingStats insert tracker).  MutableIndex ties it together and is
+# registered as factory prefix ``stream(<inner factory>)[+rN]``.
+from repro.stream.compactor import CompactionPolicy, Compactor
+from repro.stream.manifest import Manifest
+from repro.stream.memtable import Memtable
+from repro.stream.mutable import MutableIndex
+from repro.stream.segment import Segment
+
+__all__ = [
+    "Memtable",
+    "Segment",
+    "Manifest",
+    "Compactor",
+    "CompactionPolicy",
+    "MutableIndex",
+]

@@ -1,0 +1,474 @@
+"""``MutableIndex`` — LSM-style upsert/delete behind every index kind.
+
+Registered as kind ``"stream"`` with factory grammar
+``stream(<inner factory>)[+rN]``: the inner factory names the kind each
+sealed segment is built as (``stream(flat,lpq4)``, ``stream(ivf256,lpq8)``,
+``stream(hnsw32,lpq8)+r32`` ...).  Writes go to a fp32 ``Memtable``;
+reaching the seal threshold freezes the buffered rows into an immutable
+``Segment`` (an inner-index instance with its own row-id base and
+per-segment Eq. 1 constants); deletes tombstone rows wherever they live;
+the ``Compactor`` merges small segments, drops tombstones and
+re-quantizes when ``calibration_drift`` against the ``StreamingStats``
+insert tracker exceeds the policy threshold (DESIGN.md §10).
+
+Search is a ``multi_source_plan`` (knn/searcher.py): every segment's own
+plan plus a brute-force memtable scan run inside one compiled function,
+tombstones are masked at merge level, candidates from
+differently-calibrated segments are re-scored in a common space against
+the raw payloads (which is also the ``+rN`` rerank tail), and internal
+row ids are mapped back to external ids.  **A plan — and therefore a
+``Searcher`` — snapshots the index at plan time** (LSM readers pin a
+manifest version); mutations become visible to the *next* plan, which is
+how ``Index.search``'s one-shot path always sees fresh state.
+
+Exact-parity invariant (the acceptance property): surviving rows keep
+arrival order through seal and compaction, and full compaction re-learns
+constants from exactly those rows — so ``compact(full=True)`` leaves one
+segment that is bit-identical to a from-scratch inner build on
+``live_items()``, and single-source search passes the inner plan's
+scores/ids straight through.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import engine
+from repro.core import stats as St
+from repro.knn import base as B
+from repro.knn import registry
+from repro.knn.spec import IndexSpec, QuantSpec, parse_factory, resolve_build_spec
+from repro.stream.compactor import CompactionPolicy, Compactor
+from repro.stream.manifest import Manifest
+from repro.stream.memtable import Memtable, as_id_array
+from repro.stream.segment import Segment, _stats_arrays, _stats_from_arrays
+
+DEFAULT_SEAL_THRESHOLD = 4096
+
+
+@registry.register("stream")
+class MutableIndex:
+    """A mutable, segmented wrapper around any registered index kind."""
+
+    #: the Searcher resolves rerank to a depth and passes it to ``plan``;
+    #: the multi-source merge re-scores against the manifest's raw
+    #: payloads itself (searcher.Rerank with store=None)
+    handles_rerank = True
+
+    def __init__(
+        self,
+        *,
+        d: int,
+        metric: str,
+        inner_factory: str,
+        seal_threshold: int = DEFAULT_SEAL_THRESHOLD,
+        rerank_bits: Optional[int] = None,
+        policy: Optional[CompactionPolicy] = None,
+        auto_compact: bool = True,
+        key: Optional[jax.Array] = None,
+        manifest: Optional[Manifest] = None,
+        memtable: Optional[Memtable] = None,
+        live_stats: Optional[St.StreamingStats] = None,
+        inner_overrides: Optional[dict] = None,
+    ):
+        inner = parse_factory(inner_factory, metric=metric)
+        if inner.kind == "stream":
+            raise ValueError("stream cannot wrap stream")
+        if inner.rerank_bits is not None:
+            raise ValueError(
+                "per-segment rerank stores are redundant — the wrapper "
+                "keeps raw payloads; put +rN on the stream spec"
+            )
+        self.d = int(d)
+        self.metric = inner.metric
+        self.inner_factory = inner.to_factory()
+        self.inner_overrides = dict(inner_overrides or {})
+        self.seal_threshold = int(seal_threshold)
+        self.rerank_bits = rerank_bits
+        self.policy = policy or CompactionPolicy(small_rows=seal_threshold)
+        self.auto_compact = bool(auto_compact)
+        self.manifest = manifest or Manifest()
+        self.memtable = memtable or Memtable(d, seal_threshold)
+        self.live_stats = live_stats or St.StreamingStats(d)
+        self.compactor = Compactor(self.inner_factory, self.metric,
+                                   self.policy, self.inner_overrides)
+        self._key = key if key is not None else jax.random.PRNGKey(0)
+        self.counters = {"seals": 0, "compactions": 0, "recalibrations": 0,
+                         "upserts": 0, "deletes": 0}
+
+    # -- construction ------------------------------------------------------
+    @staticmethod
+    def build(
+        corpus,
+        spec: IndexSpec | str | None = None,
+        *,
+        key: jax.Array | None = None,
+        metric: str = "ip",
+    ) -> "MutableIndex":
+        """Bulk-load ``corpus`` (external ids 0..n-1) into one sealed
+        segment — so a fresh ``stream(X)`` build scores exactly like a
+        plain ``X`` build until the first mutation.
+
+        Build params (via spec/overrides): ``inner`` (inner factory,
+        default ``"flat"``), ``seal_threshold``, ``max_segments``,
+        ``drift_threshold``, ``auto_compact``.
+        """
+        spec, p = resolve_build_spec(
+            "stream", spec, metric=metric, inner="flat",
+            seal_threshold=DEFAULT_SEAL_THRESHOLD, max_segments=8,
+            drift_threshold=0.5, auto_compact=True,
+        )
+        corpus = np.asarray(corpus, np.float32)
+        seal_threshold = int(p["seal_threshold"])
+        own = {"inner", "seal_threshold", "max_segments", "drift_threshold",
+               "auto_compact", "small_rows"}
+        idx = MutableIndex(
+            d=corpus.shape[1],
+            metric=spec.metric,
+            inner_factory=p["inner"],
+            seal_threshold=seal_threshold,
+            rerank_bits=spec.rerank_bits,
+            policy=CompactionPolicy(
+                max_segments=int(p["max_segments"]),
+                small_rows=int(p.get("small_rows") or seal_threshold),
+                drift_threshold=float(p["drift_threshold"]),
+            ),
+            auto_compact=bool(p["auto_compact"]),
+            key=key,
+            # everything else (kmeans_iters, ef_construction, ...) rides
+            # through to every inner segment build
+            inner_overrides={k: v for k, v in p.items() if k not in own},
+        )
+        if corpus.shape[0]:
+            idx.live_stats.update(jnp.asarray(corpus))
+            idx.manifest.add(
+                Segment.seal(corpus, np.arange(corpus.shape[0]),
+                             idx._inner_spec(), key=idx._next_key())
+            )
+            idx.counters["seals"] += 1
+        return idx
+
+    def _inner_spec(self, params=None) -> IndexSpec:
+        spec = parse_factory(self.inner_factory, metric=self.metric)
+        if self.inner_overrides:
+            spec = spec.with_overrides(**self.inner_overrides)
+        if params is not None:
+            spec = dataclasses.replace(spec,
+                                       quant=spec.quant.with_params(params))
+        return spec
+
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    # -- accounting --------------------------------------------------------
+    @property
+    def n(self) -> int:
+        """Live (searchable) rows."""
+        return self.manifest.live_rows + self.memtable.live_count
+
+    @property
+    def quantized(self) -> bool:
+        return "lpq" in self.inner_factory
+
+    @property
+    def params(self):
+        """Legacy view: the first segment's Eq. 1 constants (per-segment
+        constants are the point of the subsystem — use ``stats()``)."""
+        segs = self.manifest.segments
+        return getattr(segs[0].index, "params", None) if segs else None
+
+    @property
+    def data(self):
+        """Legacy view: the first segment's code payload."""
+        segs = self.manifest.segments
+        if not segs:
+            return None
+        store = getattr(segs[0].index, "store", None)
+        return store.data if store is not None else None
+
+    @property
+    def codes(self):
+        return self.data if self.quantized else None
+
+    def memory_bytes(self) -> int:
+        return self.manifest.memory_bytes() + self.memtable.memory_bytes()
+
+    def stats(self) -> dict:
+        """Manifest-level accounting incl. the per-segment drift metric."""
+        live = self.live_stats.stats
+        drifts = [seg.drift(live) for seg in self.manifest.segments]
+        finite = [x for x in drifts if np.isfinite(x)]
+        return {
+            "kind": "stream",
+            "inner": self.inner_factory,
+            "segments": len(self.manifest.segments),
+            "segment_rows": [seg.n for seg in self.manifest.segments],
+            "rows": self.manifest.total_rows + self.memtable.live_count,
+            "live": self.n,
+            "tombstones": self.manifest.tombstones,
+            "memtable_rows": self.memtable.live_count,
+            "epoch": self.manifest.epoch,
+            "drift": drifts,
+            "max_drift": max(finite) if finite else 0.0,
+            **self.counters,
+        }
+
+    # -- writes ------------------------------------------------------------
+    def upsert(self, ids, vectors) -> int:
+        """Insert-or-replace rows by external id; returns rows written.
+        Replaced copies in sealed segments become tombstones; the new
+        rows are searchable from the next plan."""
+        vectors = np.asarray(vectors, np.float32)
+        ids = self.memtable.upsert(ids, vectors)
+        self.manifest.delete(ids)            # shadow sealed copies
+        self.live_stats.update(jnp.asarray(vectors))
+        self.counters["upserts"] += int(ids.size)
+        while self.memtable.full:
+            self._seal()
+        return int(ids.size)
+
+    def delete(self, ids) -> int:
+        """Tombstone rows by external id wherever they live; returns how
+        many live rows were deleted."""
+        ids = as_id_array(ids)
+        hit = self.memtable.delete(ids) + self.manifest.delete(ids)
+        self.counters["deletes"] += hit
+        return hit
+
+    def _seal(self) -> None:
+        vecs, ids = self.memtable.snapshot()
+        self.memtable.clear()
+        if not vecs.shape[0]:
+            return
+        self.manifest.add(
+            Segment.seal(vecs, ids, self._inner_spec(), key=self._next_key())
+        )
+        self.counters["seals"] += 1
+        if self.auto_compact:
+            self.maybe_compact()
+
+    # -- compaction --------------------------------------------------------
+    def seal(self) -> None:
+        """Flush the memtable into a segment now (below-threshold seal)."""
+        self._seal()
+
+    def maybe_compact(self) -> bool:
+        """One policy-driven compaction round, if the manifest calls for
+        it (> max_segments).  Returns whether a merge ran."""
+        if not self.compactor.should_compact(self.manifest.segments):
+            return False
+        return self.compact()
+
+    def compact(self, full: bool = False,
+                recalibrate: Optional[bool] = None) -> bool:
+        """Merge segments: the picked group (policy), or — with ``full``
+        — the memtable plus *every* segment into one.
+
+        ``recalibrate`` None lets the drift policy decide (full
+        compaction defaults to True: re-learn Eq. 1 constants from
+        exactly the surviving rows — the from-scratch-parity path);
+        False forces constant reuse (the stale arm bench_stream measures
+        against).  Returns whether anything changed."""
+        if full:
+            self._seal()
+            group = list(self.manifest.segments)
+            if not group:
+                return False
+            merged, recal = self.compactor.merge(
+                group, live_stats=self.live_stats.stats,
+                key=self._next_key(),
+                recalibrate=True if recalibrate is None else recalibrate,
+            )
+        else:
+            group = self.compactor.pick_group(self.manifest.segments)
+            if not group:
+                return False
+            merged, recal = self.compactor.merge(
+                group, live_stats=self.live_stats.stats,
+                key=self._next_key(), recalibrate=recalibrate,
+            )
+        self.manifest.replace(group, [merged] if merged else [])
+        self.counters["compactions"] += 1
+        self.counters["recalibrations"] += int(recal)
+        return True
+
+    def live_items(self) -> tuple[np.ndarray, np.ndarray]:
+        """(ext_ids [n], vectors [n, d]) of every live row in internal
+        id-space (arrival) order — the corpus an equivalent from-scratch
+        build would be given."""
+        parts_v, parts_i = [], []
+        for seg in self.manifest.segments:
+            v, i = seg.survivors()
+            parts_v.append(v)
+            parts_i.append(i)
+        mv, mi = self.memtable.snapshot()
+        parts_v.append(mv)
+        parts_i.append(mi)
+        return np.concatenate(parts_i), np.concatenate(parts_v)
+
+    # -- query -------------------------------------------------------------
+    def plan(
+        self,
+        k: int,
+        params: Optional[B.SearchParams] = None,
+        *,
+        mesh=None,
+        rerank_depth: Optional[int] = None,
+    ):
+        """Snapshot the manifest + memtable into a multi-source runner.
+
+        Each sealed segment contributes its inner kind's own plan at
+        depth ``(rerank_depth or k) + dead(segment)`` (over-fetch covers
+        tombstone masking), the memtable a flat fp32 scan; the merge
+        re-scores candidates against the raw payloads at ``rerank_bits``
+        precision whenever there is more than one source or an explicit
+        rerank depth (see ``knn.searcher.multi_source_plan``).
+        """
+        if mesh is not None:
+            raise ValueError(
+                "sharded searcher plans are flat-only; shard a stream "
+                "index by segment placement in a future PR"
+            )
+        from repro.knn.flat import FlatIndex
+        from repro.knn.searcher import multi_source_plan
+
+        sp = params or B.SearchParams()
+        depth = rerank_depth or k
+        sources = []
+        for seg, base in zip(self.manifest.segments, self.manifest.bases()):
+            # over-fetch by the dead count so k live rows survive the
+            # tombstone mask on exact sources
+            kj = min(seg.n, depth + seg.dead_count)
+            sources.append((seg.index.plan(kj, sp), base, kj))
+        mvecs, mids = self.memtable.snapshot()
+        m = int(mvecs.shape[0])
+        if m:
+            mem_index = FlatIndex(
+                metric=self.metric,
+                store=engine.CodeStore.dense(jnp.asarray(mvecs)),
+            )
+            sources.append(
+                (mem_index.plan(min(m, depth), sp), self.manifest.total_rows,
+                 min(m, depth))
+            )
+
+        # manifest-side concatenated views + the memtable tail (all
+        # np.concatenate copies: a frozen snapshot of the mutable bitmaps)
+        id_map_np = self.manifest.id_map()
+        live_np = self.manifest.live_map()
+        if m:
+            id_map_np = np.concatenate([id_map_np, mids])
+            live_np = np.concatenate([live_np, np.ones(m, bool)])
+
+        rescore = len(sources) > 1 or rerank_depth is not None
+        merge_store = None
+        if rescore and sources:
+            if self.rerank_bits == 8:
+                # int8 merge codes need constants learned over the union
+                parts = ([self.manifest.raw_concat()]
+                         if self.manifest.segments else [])
+                if m:
+                    parts.append(mvecs)
+                merge_store = QuantSpec(bits=8).build_store(
+                    jnp.asarray(np.concatenate(parts))
+                )
+            else:                               # None / 32 -> exact fp32
+                merge_store = engine.CodeStore.concat(
+                    [engine.CodeStore.dense(jnp.asarray(seg.raw))
+                     for seg in self.manifest.segments]
+                    + ([engine.CodeStore.dense(jnp.asarray(mvecs))]
+                       if m else [])
+                )
+
+        live = self.live_stats.stats
+        drifts = [seg.drift(live) for seg in self.manifest.segments]
+        finite = [x for x in drifts if np.isfinite(x)]
+        stats_extra = {
+            "segments": len(self.manifest.segments),
+            "memtable_rows": m,
+            "tombstones": self.manifest.tombstones,
+            "epoch": self.manifest.epoch,
+            "max_drift": max(finite) if finite else 0.0,
+        }
+        return multi_source_plan(
+            sources,
+            k=k,
+            metric=self.metric,
+            id_map=jnp.asarray(id_map_np.astype(np.int32)),
+            live=jnp.asarray(live_np),
+            merge_store=merge_store,
+            rescore=rescore and merge_store is not None,
+            stats_extra=stats_extra,
+        )
+
+    def searcher(self, k: int, params: Optional[B.SearchParams] = None, **kw):
+        from repro.knn.searcher import Searcher
+
+        return Searcher(self, k, params, **kw)
+
+    def search(
+        self,
+        queries,
+        k: int,
+        params: Optional[B.SearchParams] = None,
+    ) -> B.SearchResult:
+        """One-shot plan-and-run over the *current* state (scores [Q, k]
+        f32, external ids [Q, k] i32, -1 = no hit)."""
+        from repro.knn import searcher as S
+
+        return S.one_shot(self, queries, k, params)
+
+    # -- disk round-trip ---------------------------------------------------
+    def save(self, path) -> None:
+        arrays, meta = self.manifest.state()
+        mvecs, mids = self.memtable.snapshot()
+        arrays.update({"mem_vecs": mvecs, "mem_ids": mids})
+        arrays.update(_stats_arrays("ls_", self.live_stats.stats))
+        kd = self._key
+        if jnp.issubdtype(kd.dtype, jax.dtypes.prng_key):
+            kd = jax.random.key_data(kd)
+        arrays["rng_key"] = np.asarray(kd)
+        B.save_state(path, arrays, {
+            "kind": "stream",
+            "metric": self.metric,
+            "inner": self.inner_factory,
+            "d": self.d,
+            "n": self.n,
+            "seal_threshold": self.seal_threshold,
+            "rerank_bits": self.rerank_bits,
+            "auto_compact": self.auto_compact,
+            "policy": dataclasses.asdict(self.policy),
+            "counters": self.counters,
+            "inner_overrides": self.inner_overrides,
+            **meta,
+        })
+
+    @staticmethod
+    def load(path) -> "MutableIndex":
+        arrays, meta = B.load_state(path)
+        idx = MutableIndex(
+            d=int(meta["d"]),
+            metric=meta["metric"],
+            inner_factory=meta["inner"],
+            seal_threshold=int(meta["seal_threshold"]),
+            rerank_bits=meta["rerank_bits"],
+            policy=CompactionPolicy(**meta["policy"]),
+            auto_compact=bool(meta["auto_compact"]),
+            key=jnp.asarray(arrays["rng_key"], jnp.uint32),
+            manifest=Manifest.from_state(arrays, meta),
+            live_stats=St.StreamingStats(int(meta["d"])).merge(
+                _stats_from_arrays("ls_", arrays)
+            ),
+            inner_overrides=meta.get("inner_overrides") or {},
+        )
+        mvecs = np.asarray(arrays["mem_vecs"], np.float32)
+        if mvecs.shape[0]:
+            idx.memtable.upsert(np.asarray(arrays["mem_ids"]), mvecs)
+        idx.counters.update(meta["counters"])
+        return idx

@@ -33,6 +33,7 @@ CASES = {
     "hnsw": ("hnsw8,lpq8@gaussian:3", {"ef_construction": 40, "batch_size": 128}),
     "graph": ("graph16,lpq8@gaussian:3", {"n_seeds": 16}),
     "pq": ("pq16+lpq", {"kmeans_iters": 4}),
+    "stream": ("stream(flat,lpq8@gaussian:3)", {"seal_threshold": 128}),
 }
 
 FP32_CASES = {
@@ -41,6 +42,7 @@ FP32_CASES = {
     "hnsw": "hnsw8",
     "graph": "graph16",
     "pq": "pq16",
+    "stream": "stream(flat)",
 }
 
 
@@ -150,7 +152,9 @@ def test_factory_parse_fields():
 @pytest.mark.parametrize(
     "factory",
     ["flat", "flat,lpq8@gaussian:3", "ivf256,lpq8", "hnsw32,lpq8",
-     "pq64+lpq", "graph24,lpq8@global_absmax", "flat,lpq4,angular"],
+     "pq64+lpq", "graph24,lpq8@global_absmax", "flat,lpq4,angular",
+     "stream(flat,lpq4)", "stream(ivf256,lpq8)+r32",
+     "stream(hnsw32,lpq8@gaussian:3,l2)+r8"],
 )
 def test_factory_string_roundtrip(factory):
     spec = parse_factory(factory)
@@ -161,7 +165,9 @@ def test_factory_string_roundtrip(factory):
 @pytest.mark.parametrize(
     "bad", ["", "lpq8", "flat,bogus", "flat9", "ivf,nope", "flat,lpq8,lpq4",
             "ivf16,hnsw8", "flat,lpq8@nosuchscheme", "pq8,lpq4",
-            "pq8,lpq8@absmax", "flat,l2,ip"],
+            "pq8,lpq8@absmax", "flat,l2,ip", "stream", "stream()",
+            "stream(stream(flat))", "stream(bogus)+r32",
+            "stream(flat,lpq4+r8)+r32", "stream(flat)+r16"],
 )
 def test_factory_rejects_garbage(bad):
     with pytest.raises((ValueError, KeyError)):

@@ -1,0 +1,452 @@
+"""Mutable segmented index tests (DESIGN.md §10) plus the PR's satellite
+regressions: StreamingStats zero-count guards, the engine-consolidated
+top-k, CodeStore concat/append/remap helpers, and the quant-params
+save/load round-trip."""
+
+import dataclasses
+import io
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import quant as Qz
+from repro.core import stats as St
+from repro.core.preserve import recall_at_k
+from repro.data import synthetic
+from repro.knn import (
+    MutableIndex,
+    SearchParams,
+    load_index,
+    make_index,
+    parse_factory,
+)
+
+K = 10
+D = 24
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    c, _q, _m = synthetic.load("product", 600, 8)
+    return np.asarray(c[:, :D])
+
+
+@pytest.fixture(scope="module")
+def extra():
+    c, _q, _m = synthetic.load("product", 400, 8, key=jax.random.PRNGKey(3))
+    return np.asarray(c[:, :D])
+
+
+@pytest.fixture(scope="module")
+def queries(corpus):
+    rng = np.random.default_rng(0)
+    rows = corpus[rng.choice(corpus.shape[0], 16, replace=False)]
+    return (rows + rng.normal(size=rows.shape).astype(np.float32) * 0.004
+            ).astype(np.float32)
+
+
+def _map_ids(scratch_ids: np.ndarray, ext_ids: np.ndarray) -> np.ndarray:
+    return np.where(scratch_ids >= 0, ext_ids[scratch_ids], -1)
+
+
+# ==========================================================================
+# satellite: StreamingStats zero-count / empty-batch guards
+# ==========================================================================
+
+class TestStreamingStatsGuards:
+    def test_empty_batch_update_is_identity(self):
+        ss = St.StreamingStats(4)
+        ss.update(jnp.zeros((0, 4)))
+        assert not np.isnan(np.asarray(ss.stats.mean)).any()
+        assert not np.isnan(np.asarray(ss.stats.std)).any()
+        x = jnp.ones((5, 4)) * 2.0
+        ss.update(x)
+        np.testing.assert_allclose(np.asarray(ss.stats.mean), 2.0)
+        np.testing.assert_allclose(np.asarray(ss.stats.std), 0.0, atol=1e-6)
+
+    def test_fresh_merge_no_nan(self):
+        merged = St.merge_stats(St.empty_stats(3), St.empty_stats(3))
+        assert not np.isnan(np.asarray(merged.mean)).any()
+        assert not np.isnan(np.asarray(merged.std)).any()
+        assert float(merged.count) == 0.0
+
+    def test_merge_fresh_into_real_is_identity(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (64, 6))
+        real = St.corpus_stats(x)
+        for a, b in ((St.empty_stats(6), real), (real, St.empty_stats(6))):
+            m = St.merge_stats(a, b)
+            np.testing.assert_allclose(np.asarray(m.mean),
+                                       np.asarray(real.mean), atol=1e-6)
+            np.testing.assert_allclose(np.asarray(m.std),
+                                       np.asarray(real.std), atol=1e-6)
+
+    def test_garbage_moments_masked_when_count_zero(self):
+        # a zero-count DimStats with NaN placeholders must not poison a merge
+        bad = dataclasses.replace(
+            St.empty_stats(3), mean=jnp.full((3,), jnp.nan),
+            m2=jnp.full((3,), jnp.nan),
+        )
+        real = St.corpus_stats(jnp.ones((4, 3)))
+        m = St.merge_stats(bad, real)
+        assert not np.isnan(np.asarray(m.mean)).any()
+        assert not np.isnan(np.asarray(m.std)).any()
+
+    def test_streaming_equals_oneshot(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (100, 5))
+        one = St.corpus_stats(x)
+        ss = St.StreamingStats(5)
+        ss.update(x[:0]).update(x[:37]).merge(
+            St.StreamingStats(5).update(x[37:])
+        )
+        np.testing.assert_allclose(np.asarray(ss.stats.mean),
+                                   np.asarray(one.mean), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(ss.stats.std),
+                                   np.asarray(one.std), atol=1e-4)
+
+    def test_drift_metric(self):
+        x = jax.random.normal(jax.random.PRNGKey(2), (200, 4))
+        s = St.corpus_stats(x)
+        assert St.calibration_drift(s, s) == pytest.approx(0.0, abs=1e-5)
+        shifted = St.corpus_stats(x + 2.0)
+        assert St.calibration_drift(shifted, s) == pytest.approx(2.0, abs=0.2)
+        assert St.calibration_drift(St.empty_stats(4), s) == float("inf")
+
+
+# ==========================================================================
+# satellite: one top-k implementation (engine) + legacy shim
+# ==========================================================================
+
+class TestTopkConsolidation:
+    def test_chunked_topk_matches_dense(self):
+        q = jax.random.normal(jax.random.PRNGKey(0), (5, 8))
+        c = jax.random.normal(jax.random.PRNGKey(1), (137, 8))
+        ref_s, ref_i = jax.lax.top_k(q @ c.T, K)
+        for chunk in (32, 137, 4096):
+            s, i = engine.chunked_topk(q, c, K, _ip, chunk=chunk)
+            np.testing.assert_array_equal(np.asarray(i), np.asarray(ref_i))
+            np.testing.assert_allclose(np.asarray(s), np.asarray(ref_s),
+                                       rtol=1e-6)
+
+    def test_legacy_shim_reexports(self):
+        from repro.knn import topk as T
+
+        assert T.chunked_topk is engine.chunked_topk
+        assert T.distributed_topk is engine.distributed_topk
+        assert T.merge_topk is engine.merge_topk
+        padded, n = T.pad_corpus(jnp.ones((10, 3)), 4)
+        assert padded.shape == (12, 3) and n == 10
+        s, i = T.mask_invalid(jnp.ones((1, 3)),
+                              jnp.asarray([[0, 10, 2]], jnp.int32), 3)
+        assert np.asarray(i).tolist() == [[0, -1, 2]]
+
+    def test_remap_ids(self):
+        id_map = jnp.asarray([7, 8, 9], jnp.int32)
+        out = engine.remap_ids(jnp.asarray([[0, -1, 2]], jnp.int32), id_map)
+        assert np.asarray(out).tolist() == [[7, -1, 9]]
+
+
+def _ip(a, b):
+    return a @ b.T
+
+
+# ==========================================================================
+# satellite: CodeStore concat / append
+# ==========================================================================
+
+class TestCodeStoreHelpers:
+    def test_concat_dense_and_append(self, corpus):
+        a, b = jnp.asarray(corpus[:200]), jnp.asarray(corpus[200:])
+        whole = engine.CodeStore.dense(jnp.asarray(corpus))
+        cat = engine.CodeStore.concat(
+            [engine.CodeStore.dense(a), engine.CodeStore.dense(b)]
+        )
+        np.testing.assert_array_equal(np.asarray(cat.data),
+                                      np.asarray(whole.data))
+        app = engine.CodeStore.dense(a).append(b)
+        np.testing.assert_array_equal(np.asarray(app.data),
+                                      np.asarray(whole.data))
+        assert cat.n == app.n == whole.n
+
+    @pytest.mark.parametrize("bits,packed", [(8, False), (4, True)])
+    def test_concat_append_quantized(self, corpus, bits, packed):
+        from repro.knn.spec import QuantSpec
+
+        spec = QuantSpec(bits=bits)
+        whole = spec.build_store(jnp.asarray(corpus))
+        half = spec.with_params(whole.params).build_store(
+            jnp.asarray(corpus[:200])
+        )
+        app = half.append(jnp.asarray(corpus[200:]))
+        np.testing.assert_array_equal(np.asarray(app.data),
+                                      np.asarray(whole.data))
+        assert app.packed == packed
+
+    def test_concat_rejects_mixed_params(self, corpus):
+        from repro.knn.spec import QuantSpec
+
+        a = QuantSpec(bits=8).build_store(jnp.asarray(corpus[:200]))
+        b = QuantSpec(bits=8).build_store(jnp.asarray(corpus[200:]))
+        with pytest.raises(ValueError, match="quantization constants"):
+            engine.CodeStore.concat([a, b])
+
+
+# ==========================================================================
+# satellite: quant-params round-trip -> bit-identical codes
+# ==========================================================================
+
+class TestQuantParamsRoundTrip:
+    @pytest.mark.parametrize("factory", ["flat,lpq8@gaussian:3", "flat,lpq4"])
+    def test_save_load_bit_identical(self, corpus, queries, factory, tmp_path):
+        idx = make_index(factory, corpus)
+        path = str(tmp_path / "idx.npz")
+        idx.save(path)
+        back = load_index(path)
+        np.testing.assert_array_equal(np.asarray(idx.store.data),
+                                      np.asarray(back.store.data))
+        for field in ("lo", "hi", "zero"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(idx.params, field)),
+                np.asarray(getattr(back.params, field)),
+            )
+        assert (idx.params.bits, idx.params.scheme) == (
+            back.params.bits, back.params.scheme)
+        # restored constants re-encode the corpus to the same codes
+        q = back.store.params
+        fresh = Qz.quantize(jnp.asarray(corpus), q)
+        if back.store.packed:
+            from repro.core import pack as PK
+
+            fresh = PK.pack_int4(fresh)
+        np.testing.assert_array_equal(np.asarray(fresh),
+                                      np.asarray(back.store.data))
+        a, b = idx.search(queries, K), back.search(queries, K)
+        np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+
+    def test_dimstats_to_params_deterministic(self, corpus):
+        stats = St.corpus_stats(jnp.asarray(corpus))
+        p1 = Qz.params_from_stats(stats, bits=4)
+        p2 = Qz.learn_params(jnp.asarray(corpus), bits=4)
+        for field in ("lo", "hi", "zero"):
+            np.testing.assert_array_equal(np.asarray(getattr(p1, field)),
+                                          np.asarray(getattr(p2, field)))
+
+
+# ==========================================================================
+# stream factory grammar
+# ==========================================================================
+
+class TestStreamSpec:
+    def test_parse_fields(self):
+        spec = parse_factory("stream(ivf256,lpq8,l2)+r32")
+        assert spec.kind == "stream"
+        assert spec.metric == "l2"
+        assert spec.params["inner"] == "ivf256,lpq8,l2"
+        assert spec.rerank_bits == 32
+
+    def test_inner_rerank_lifted(self):
+        spec = parse_factory("stream(flat,lpq4+r8)")
+        assert spec.rerank_bits == 8
+        assert "r8" not in spec.params["inner"]
+
+    def test_requires_inner(self):
+        with pytest.raises(ValueError, match="inner"):
+            from repro.knn import IndexSpec
+
+            IndexSpec(kind="stream")
+
+
+# ==========================================================================
+# tentpole: MutableIndex lifecycle
+# ==========================================================================
+
+class TestMutableIndex:
+    def test_fresh_build_bit_parity_with_inner(self, corpus, queries):
+        idx = make_index("stream(flat,lpq4)", corpus)
+        ref = make_index("flat,lpq4", corpus)
+        a, b = idx.search(queries, K), ref.search(queries, K)
+        np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+        np.testing.assert_allclose(np.asarray(a.scores),
+                                   np.asarray(b.scores))
+
+    def test_upsert_visible_delete_gone(self, corpus, queries):
+        idx = make_index("stream(flat,lpq8)", corpus, seal_threshold=128)
+        probe = (queries[:1] * 0.0 + 0.09).astype(np.float32)
+        idx.upsert([9999], probe)                   # an exact-match row
+        res = idx.search(probe, 1)
+        assert int(res.ids[0, 0]) == 9999
+        idx.delete([9999])
+        res = idx.search(probe, K)
+        assert 9999 not in np.asarray(res.ids)
+
+    def test_upsert_replaces(self, corpus):
+        idx = make_index("stream(flat,lpq8)", corpus, seal_threshold=64)
+        probe = np.full((1, D), 0.09, np.float32)
+        idx.upsert([5], probe)                      # replace a sealed row
+        res = idx.search(probe, 1)
+        assert int(res.ids[0, 0]) == 5
+        assert idx.n == corpus.shape[0]             # replaced, not added
+        ids_l, vecs_l = idx.live_items()
+        row = vecs_l[ids_l.tolist().index(5)]
+        np.testing.assert_allclose(row, probe[0])
+
+    def test_deleted_never_in_results_multisegment(self, corpus, extra,
+                                                   queries):
+        idx = make_index("stream(flat,lpq4)", corpus, seal_threshold=100)
+        idx.upsert(np.arange(1000, 1000 + extra.shape[0]), extra)
+        dead = np.arange(0, 600, 2)
+        idx.delete(dead)
+        ids = np.asarray(idx.search(queries, K).ids)
+        assert not (set(ids.ravel().tolist()) & set(dead.tolist()))
+        assert idx.stats()["tombstones"] > 0
+
+    def test_exact_parity_after_churn_and_full_compaction(
+        self, corpus, extra, queries
+    ):
+        """The acceptance criterion: N upserts + M deletes + full
+        compaction == a from-scratch flat,lpq4 build on the surviving
+        rows, bit for bit."""
+        idx = make_index("stream(flat,lpq4)", corpus, seal_threshold=150)
+        idx.upsert(np.arange(1000, 1300), extra[:300])       # N upserts
+        idx.delete(np.arange(0, 600, 3))                     # M deletes
+        idx.upsert(np.arange(50, 80), extra[300:330])        # replacements
+        idx.delete([1000, 1001, 1299])
+        idx.compact(full=True)
+        assert idx.stats()["segments"] == 1
+
+        ext_ids, vecs = idx.live_items()
+        scratch = make_index("flat,lpq4", vecs)
+        a = idx.search(queries, K)
+        b = scratch.search(queries, K)
+        np.testing.assert_array_equal(
+            np.asarray(a.ids), _map_ids(np.asarray(b.ids), ext_ids)
+        )
+        np.testing.assert_allclose(np.asarray(a.scores),
+                                   np.asarray(b.scores))
+
+    def test_multisegment_recall(self, corpus, extra, queries):
+        idx = make_index("stream(flat,lpq8)", corpus, seal_threshold=100,
+                         auto_compact=False)
+        idx.upsert(np.arange(1000, 1000 + extra.shape[0]), extra)
+        ext_ids, vecs = idx.live_items()
+        gt = _map_ids(
+            np.asarray(make_index("flat", vecs).search(queries, K).ids),
+            ext_ids,
+        )
+        ids = np.asarray(idx.search(queries, K).ids)
+        assert float(recall_at_k(gt, ids)) > 0.9
+
+    def test_auto_compaction_bounds_segments(self, corpus, extra):
+        idx = make_index("stream(flat,lpq8)", corpus, seal_threshold=50,
+                         max_segments=3)
+        for i in range(8):
+            idx.upsert(np.arange(2000 + i * 50, 2050 + i * 50),
+                       extra[i * 50 : (i + 1) * 50])
+        st = idx.stats()
+        assert st["segments"] <= 4                  # bound + in-flight seal
+        assert st["compactions"] >= 1
+
+    def test_searcher_snapshot_and_rerank(self, corpus, extra, queries):
+        idx = make_index("stream(flat,lpq4)+r32", corpus, seal_threshold=100)
+        s = idx.searcher(K, batch_sizes=(8, 16))
+        res1 = s(queries)
+        assert res1.stats["reranked"] > 0           # +r32 default depth
+        assert res1.stats["memtable_rows"] == 0
+        idx.upsert(np.arange(1000, 1050), extra[:50])
+        res2 = s(queries)                           # snapshot: still old view
+        assert res2.stats["memtable_rows"] == 0
+        s2 = idx.searcher(K, batch_sizes=(8, 16))   # re-plan sees the rows
+        assert s2(queries).stats["memtable_rows"] == 50
+        # depth override through the Searcher's rerank= argument
+        deep = idx.searcher(K, rerank=64)(queries)
+        assert deep.stats["reranked"] >= 64
+
+    def test_save_load_roundtrip_with_tombstones_and_memtable(
+        self, corpus, extra, queries, tmp_path
+    ):
+        idx = make_index("stream(ivf8,lpq8)+r32", corpus, seal_threshold=200,
+                         kmeans_iters=2)
+        idx.upsert(np.arange(1000, 1250), extra[:250])
+        idx.delete(np.arange(0, 100))
+        idx.upsert([3000], extra[250:251])          # leave a memtable row
+        path = str(tmp_path / "stream.npz")
+        idx.save(path)
+        back = load_index(path)
+        assert back.kind == "stream"
+        assert back.n == idx.n
+        assert back.memory_bytes() == idx.memory_bytes()
+        a, b = idx.search(queries, K), back.search(queries, K)
+        np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+        np.testing.assert_allclose(np.asarray(a.scores),
+                                   np.asarray(b.scores), rtol=1e-6)
+        st_a, st_b = idx.stats(), back.stats()
+        for key in ("segments", "tombstones", "live", "memtable_rows"):
+            assert st_a[key] == st_b[key], key
+
+    def test_drift_recalibration_recovers_recall(self, corpus):
+        """The acceptance drift scenario (bench_stream's measured arm):
+        stale-constant compaction loses recall, recalibrating compaction
+        recovers it."""
+        rng = np.random.default_rng(7)
+        n = corpus.shape[0]
+        wide = corpus[rng.permutation(n)] + 0.4
+        bulk = np.concatenate([corpus, wide]).astype(np.float32)
+        fresh = (corpus[rng.permutation(n)][: n // 2] * 0.97).astype(
+            np.float32)
+
+        def build():
+            idx = make_index("stream(flat,lpq4,l2)+r32", bulk,
+                             seal_threshold=10 ** 9, auto_compact=False)
+            idx.delete(np.arange(n, 2 * n))
+            idx.upsert(np.arange(2 * n, 2 * n + fresh.shape[0]), fresh)
+            idx.seal()
+            return idx
+
+        probe_idx = build()
+        assert probe_idx.stats()["max_drift"] > probe_idx.policy.drift_threshold
+        ext_ids, vecs = probe_idx.live_items()
+        rows = vecs[rng.choice(vecs.shape[0], 48, replace=False)]
+        qs = (rows + rng.normal(size=rows.shape).astype(np.float32) * 0.005
+              ).astype(np.float32)
+        gt = _map_ids(
+            np.asarray(make_index("flat,l2", vecs).search(qs, K).ids), ext_ids
+        )
+
+        stale = build()
+        stale.compact(full=True, recalibrate=False)
+        r_stale = float(recall_at_k(gt, np.asarray(
+            stale.searcher(K)(qs).ids)))
+        recal = build()
+        recal.compact(full=True)
+        assert recal.counters["recalibrations"] == 1
+        r_recal = float(recall_at_k(gt, np.asarray(
+            recal.searcher(K)(qs).ids)))
+        assert r_recal > r_stale + 0.1, (r_stale, r_recal)
+        assert r_recal > 0.9
+
+    def test_empty_and_error_paths(self, corpus):
+        idx = make_index("stream(flat,lpq8)", corpus[:0])
+        assert idx.n == 0
+        res = idx.search(np.zeros((2, D), np.float32), 3)
+        assert np.asarray(res.ids).tolist() == [[-1] * 3] * 2
+        with pytest.raises(ValueError, match="ids"):
+            idx.upsert([-1], np.zeros((1, D), np.float32))
+        with pytest.raises(ValueError, match="duplicate"):
+            idx.upsert([1, 1], np.zeros((2, D), np.float32))
+        with pytest.raises(ValueError):
+            idx.upsert([1], np.zeros((1, D + 1), np.float32))
+        assert idx.delete([42]) == 0
+        with pytest.raises(ValueError, match="unsharded|flat-only"):
+            idx.plan(3, mesh=object())
+
+    def test_hnsw_inner_kind(self, corpus, queries):
+        idx = make_index("stream(hnsw8,lpq8)", corpus, seal_threshold=300,
+                         ef_construction=40)
+        idx.upsert(np.arange(1000, 1100),
+                   (corpus[:100] * 0.99).astype(np.float32))
+        res = idx.search(queries, K, SearchParams(ef_search=60))
+        assert res.ids.shape == (queries.shape[0], K)
+        assert res.stats["kind"] == "stream"
+        assert (np.asarray(res.ids) >= -1).all()
