@@ -1,0 +1,127 @@
+"""Fused-ADC benchmark + parity gate: pq{8,16} x {x4, x8} x {fused, ref}
+→ QPS, memory, recall@10, written to ``BENCH_adc.json``.
+
+Every arm builds a ``pq<M>x<b>+lpq`` index (int8 ADC tables — the fused
+kernel's storage contract) and drives ``engine.topk`` over its
+``PQStore`` twice: the reference streaming gather-sum scan
+(``use_pallas=False``) and the fused Pallas kernel (interpret mode on
+CPU, so absolute numbers are structural — the file's value is the
+trajectory and the x4-vs-x8 memory/recall trade).  **The fused and
+reference paths must be bit-identical**: any divergence raises, so the
+CI step running this bench is the kernel's standing parity gate.
+
+    PYTHONPATH=src python -m benchmarks.bench_adc            # full
+    PYTHONPATH=src python -m benchmarks.bench_adc --smoke    # CI gate
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, sized, timeit
+from repro import engine
+from repro.core.preserve import recall_at_k
+from repro.knn import make_index
+
+K_TOP = 10
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=8192)
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--q", type=int, default=16)
+    ap.add_argument("--out", default="BENCH_adc.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes + 1 repeat (the CI parity gate)")
+    args = ap.parse_args(argv)
+
+    n, q_rows = (1024, 8) if args.smoke else (sized(args.n), args.q)
+    repeats = 1 if args.smoke else 3
+    d = args.d
+
+    corpus = jax.random.normal(jax.random.PRNGKey(0), (n, d)) * 0.1
+    queries = jax.random.normal(jax.random.PRNGKey(1), (q_rows, d)) * 0.1
+    gt = np.asarray(make_index("flat", corpus).search(queries, K_TOP).ids)
+
+    results = {
+        "meta": {
+            "n": n, "d": d, "q": q_rows, "k": K_TOP,
+            "backend": jax.default_backend(),
+            "platform": platform.platform(),
+            "interpret": jax.default_backend() != "tpu",
+            "smoke": bool(args.smoke),
+        },
+        "cells": {},
+    }
+    diverged = []
+    for m in (8, 16):
+        for bits in (4, 8):
+            idx = make_index(f"pq{m}x{bits}+lpq", corpus, kmeans_iters=4,
+                             key=jax.random.PRNGKey(0))
+            store = idx.store
+            # off-TPU the fused path must be forced into interpret mode;
+            # on TPU, interpret=None lets the real compiled kernel run
+            # (so the trajectory and the parity gate measure the actual
+            # lowering, and meta["interpret"] stays truthful)
+            interp = True if jax.default_backend() != "tpu" else None
+            arms = {
+                "ref": lambda s=store: engine.topk(
+                    queries, s, K_TOP, "ip", use_pallas=False),
+                "fused": lambda s=store: engine.topk(
+                    queries, s, K_TOP, "ip", interpret=interp),
+            }
+            ids = {}
+            for impl, fn in arms.items():
+                sec = timeit(lambda: fn()[1], repeats=repeats, warmup=1)
+                s_arr, i_arr, _stats = fn()
+                ids[impl] = (np.asarray(s_arr), np.asarray(i_arr))
+                rec = float(recall_at_k(gt, np.asarray(i_arr)))
+                name = f"pq{m}x{bits}/{impl}"
+                results["cells"][name] = {
+                    "us_per_call": sec * 1e6,
+                    "qps": q_rows / max(sec, 1e-12),
+                    "recall_at_10": rec,
+                    "code_bytes": store.code_bytes,
+                    "memory_bytes": store.memory_bytes(),
+                }
+                emit(f"bench_adc/{name}", sec,
+                     f"recall={rec:.4f} code_bytes={store.code_bytes}")
+            # the parity gate: fused and reference ADC are one algorithm
+            if not (np.array_equal(ids["fused"][0], ids["ref"][0])
+                    and np.array_equal(ids["fused"][1], ids["ref"][1])):
+                diverged.append(f"pq{m}x{bits}")
+
+    cells = results["cells"]
+    results["ratios"] = {
+        f"pq{m}/x4_code_bytes_over_x8":
+            cells[f"pq{m}x4/ref"]["code_bytes"]
+            / max(cells[f"pq{m}x8/ref"]["code_bytes"], 1)
+        for m in (8, 16)
+    }
+    results["ratios"].update({
+        f"pq{m}/x4_recall_delta_vs_x8":
+            cells[f"pq{m}x4/ref"]["recall_at_10"]
+            - cells[f"pq{m}x8/ref"]["recall_at_10"]
+        for m in (8, 16)
+    })
+    results["parity"] = {"diverged": diverged}
+
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    print(f"[bench_adc] wrote {args.out} ({len(cells)} cells)")
+
+    if diverged:
+        raise SystemExit(
+            f"fused-vs-reference ADC divergence in {diverged}: the Pallas "
+            "kernel no longer bit-matches the ref.py oracle"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,11 @@
 """Kernel-level microbenchmark for the scoring engine's dispatch table:
-qmip / ql2 x {fp32, int8, int4-packed} x {fused, unfused}, writing the
-perf-trajectory file ``BENCH_kernels.json`` (plus the harness CSV rows).
+qmip / ql2 x {fp32, int8, int4-packed} x {fused, unfused}, plus the
+Eq. 1 ``quantize`` compression kernel and the recsys retrieval parity
+arm (fp32 vs int8 scoring through ``models.recsys`` — recall + memory
+ratio), writing the perf-trajectory file ``BENCH_kernels.json`` (plus
+the harness CSV rows).  The quantize and retrieval cells absorb the
+pre-PR-2 ``kernel_bench.py`` / ``retrieval_bench.py`` modules, whose
+scoring arms this file already covered.
 
 "Unfused" scores the full [Q, N] matrix then top-ks it (the historical
 hot path); "fused" streams corpus tiles through the running-top-k Pallas
@@ -21,6 +26,7 @@ import platform
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit, timeit
 from repro.core import distances as D
@@ -91,6 +97,50 @@ def main(argv: list[str] | None = None) -> None:
         sec = timeit(fn, repeats=repeats, warmup=1)
         results["cells"][name] = {"us_per_call": sec * 1e6}
         emit(f"bench_kernels/{name}", sec, f"n={n} d={d} q={q_rows}")
+
+    # Eq. 1 compression kernel (ported from the legacy kernel_bench)
+    xf = jax.random.normal(jax.random.PRNGKey(2), (n, d), jnp.float32)
+    lo = jnp.full((d,), -127.0)
+    hi = jnp.full((d,), 127.0)
+    zero = jnp.zeros((d,))
+    for impl, use_pallas in (("xla", False), ("pallas", True)):
+        sec = timeit(lambda up=use_pallas: K.quantize(xf, lo, hi, zero,
+                                                      use_pallas=up),
+                     repeats=repeats, warmup=1)
+        results["cells"][f"quantize/{impl}"] = {"us_per_call": sec * 1e6}
+        emit(f"bench_kernels/quantize/{impl}", sec, f"n={n} d={d}")
+
+    # recsys retrieval parity (ported from the legacy retrieval_bench):
+    # the paper's technique on its most direct production surface —
+    # fp32 vs int8 candidate scoring, recall + memory ratio
+    from repro.core.preserve import recall_at_k
+    from repro.models.recsys import embedding as E
+    from repro.models.recsys import retrieval as RT
+
+    cands = jax.random.normal(jax.random.PRNGKey(3), (n, d)) * 0.05
+    rq = jax.random.normal(jax.random.PRNGKey(4), (q_rows, d)) * 0.05
+    qt = E.QuantizedTable.from_dense(cands)
+    _s, i_fp = RT.retrieve_fp32(rq, cands, k=K_TOP)
+    sec_fp = timeit(lambda: RT.retrieve_fp32(rq, cands, k=K_TOP),
+                    repeats=repeats, warmup=1)
+    sec_q8 = timeit(lambda: RT.retrieve_quantized(rq, qt.codes, qt.params,
+                                                  k=K_TOP, use_pallas=False),
+                    repeats=repeats, warmup=1)
+    _s, i_q8 = RT.retrieve_quantized(rq, qt.codes, qt.params, k=K_TOP,
+                                     use_pallas=False)
+    rec = float(recall_at_k(np.asarray(i_fp), np.asarray(i_q8)))
+    mem_fp = n * d * 4
+    results["cells"]["retrieval/fp32"] = {
+        "us_per_call": sec_fp * 1e6, "memory_bytes": mem_fp,
+    }
+    results["cells"]["retrieval/int8"] = {
+        "us_per_call": sec_q8 * 1e6, "memory_bytes": qt.memory_bytes(),
+        "recall_at_10": rec, "memory_ratio": qt.memory_bytes() / mem_fp,
+    }
+    emit("bench_kernels/retrieval/fp32", sec_fp, f"mem={mem_fp}B")
+    emit("bench_kernels/retrieval/int8", sec_q8,
+         f"recall={rec:.4f} mem={qt.memory_bytes()}B "
+         f"ratio={qt.memory_bytes() / mem_fp:.3f}")
 
     # headline ratios the engine refactor is accountable for (kept apart
     # from cells so every cell has the same us_per_call schema)

@@ -1,5 +1,5 @@
 """Benchmark orchestrator — one module per paper table/figure plus the
-kernel and retrieval micro-benches and the roofline derivation.
+engine/serving/stream/ADC benches and the roofline derivation.
 
 Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
 
@@ -13,13 +13,12 @@ import sys
 import traceback
 
 from benchmarks import (
+    bench_adc,
     bench_kernels,
     bench_serve,
     bench_stream,
     fig1_distribution,
     fig2_qps_recall,
-    kernel_bench,
-    retrieval_bench,
     table1_build_memory,
     table2_exact_recall,
     table3_graph_recall,
@@ -28,13 +27,16 @@ from benchmarks import (
 SUITES = {
     "fig1": fig1_distribution.main,
     "table2": table2_exact_recall.main,
-    "retrieval": retrieval_bench.main,
-    "kernels": kernel_bench.main,
-    # engine dispatch-table / Searcher serving benches (smoke shapes when
-    # run via the orchestrator; invoke the modules directly for full sizes)
+    # engine dispatch-table / Searcher serving / mutable-index / fused-ADC
+    # benches (smoke shapes when run via the orchestrator; invoke the
+    # modules directly for full sizes).  bench_kernels absorbed the
+    # legacy kernel_bench + retrieval_bench arms (quantize, recsys
+    # retrieval parity); bench_adc doubles as the fused-vs-ref parity
+    # gate for the ADC kernel.
     "bench_kernels": lambda: bench_kernels.main(["--smoke"]),
     "bench_serve": lambda: bench_serve.main(["--smoke"]),
     "bench_stream": lambda: bench_stream.main(["--smoke"]),
+    "bench_adc": lambda: bench_adc.main(["--smoke"]),
     "table3": table3_graph_recall.main,
     "table1": table1_build_memory.main,
     "fig2": fig2_qps_recall.main,

@@ -32,6 +32,35 @@ def unpack_int4(packed: jax.Array) -> jax.Array:
     return out.astype(jnp.int8)
 
 
+def pack_uint4(codes: jax.Array) -> jax.Array:
+    """[N, m] uint values in [0, 15] -> [N, ceil(m/2)] uint8.
+
+    The *unsigned* sibling of :func:`pack_int4` for PQ codeword indexes
+    (which address a 16-entry codebook, so they have no sign offset).
+    Odd ``m`` pads one zero-code column — the ADC side pads its lookup
+    tables with a zero subspace slice, so the pad contributes nothing.
+    """
+    n, m = codes.shape
+    u = codes.astype(jnp.uint8)
+    if m % 2:
+        u = jnp.pad(u, ((0, 0), (0, 1)))
+    lo = u[:, 0::2]
+    hi = u[:, 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_uint4(packed: jax.Array) -> jax.Array:
+    """[N, ceil(m/2)] uint8 -> [N, 2*ceil(m/2)] uint8 in [0, 15].
+
+    Returns the padded even width; callers slice back to the logical
+    ``m`` when it was odd.
+    """
+    lo = (packed & 0x0F).astype(jnp.uint8)
+    hi = ((packed >> 4) & 0x0F).astype(jnp.uint8)
+    n, half = packed.shape
+    return jnp.stack([lo, hi], axis=-1).reshape(n, half * 2)
+
+
 def qip_scores_packed(q_codes: jax.Array, packed: jax.Array) -> jax.Array:
     """int4 MIP scores: unpack-in-flight + int32 dot, [Q, N]."""
     x = unpack_int4(packed)

@@ -9,22 +9,27 @@
 # cross-shard ``distributed_topk`` merge, and the ``remap_ids`` gather the
 # stream layer uses to map internal rows back to external ids.
 from repro.engine.scorer import (
+    build_pq_lut,
     chunked_topk,
     distributed_topk,
     make_score_set,
     merge_topk,
     pad_rows,
+    quantize_pq_lut,
     remap_ids,
     rerank_among,
     search_stats,
     topk,
     topk_among,
 )
-from repro.engine.store import CodeStore, PQStore
+from repro.engine.store import PQ_CODE_BITS, CodeStore, PQStore
 
 __all__ = [
     "CodeStore",
     "PQStore",
+    "PQ_CODE_BITS",
+    "build_pq_lut",
+    "quantize_pq_lut",
     "topk",
     "topk_among",
     "rerank_among",

@@ -13,11 +13,14 @@ Kernel dispatch table (metric x storage):
     fp32             fused_topk       fused_topk       scan + angular
     int8             fused_topk       fused_topk       scan + qangular
     int4 packed      fused_topk4      fused_topk4      scan + unpack + qangular
-    pq codes         ADC LUT scan     ADC LUT scan     (unsupported)
+    pq + int8 LUT    fused_adc_topk   fused_adc_topk   (unsupported)
+    pq + fp32 LUT    ADC LUT scan     ADC LUT scan     (unsupported)
 
-`fused_topk*` are the streaming Pallas kernels (score tiles + running
-top-k carried in VMEM, no [Q, N] matrix in HBM); the scan paths stream
-`lax.scan` chunks through ``merge_topk`` with the same masking contract.
+`fused_topk*` / `fused_adc_topk` are the streaming Pallas kernels (score
+tiles + running top-k carried in VMEM, no [Q, N] matrix in HBM; the ADC
+kernel additionally keeps the int8 LUT block VMEM-resident and unpacks
+4-bit packed codewords in-kernel); the scan paths stream `lax.scan`
+chunks through ``merge_topk`` with the same masking contract.
 
 Row-id bases: shard-local stores carry ``base`` and the engine rebases
 returned ids, so the distributed merge (``distributed_topk``, below)
@@ -245,13 +248,24 @@ def topk(
                 "PQ/ADC scoring supports ip and l2 only (see the dispatch "
                 "table in this module's docstring)"
             )
-        s, i = _topk_pq(queries, store, k, metric, chunk)
+        s, i = _topk_pq(queries, store, k, metric, chunk,
+                        use_pallas=use_pallas, interpret=interpret)
         if s.shape[1] < k:               # uniform [Q, k] contract: -1 pads
             s = jnp.pad(s, ((0, 0), (0, k - s.shape[1])), constant_values=NEG)
             i = jnp.pad(i, ((0, 0), (0, k - i.shape[1])), constant_values=-1)
-        n_chunks = max(1, -(-store.n // chunk))
+        fused, tile = _pq_fused(store, metric, chunk, use_pallas, interpret)
+        if fused:
+            n_chunks = -(-store.n // tile)
+            # like the CodeStore kernel, the fused grid re-streams the
+            # code matrix once per query tile (the LUT block is what
+            # stays VMEM-resident, not the codes)
+            passes = max(1, -(-jnp.shape(queries)[0]
+                              // K.fused_adc_query_tile()))
+        else:
+            n_chunks = max(1, -(-store.n // chunk))
+            passes = 1
         stats = search_stats(store, candidates=store.n, chunks=n_chunks,
-                             rows_read=store.n)
+                             rows_read=store.n * passes)
         return s, i, stats
 
     q = queries if prepared else store.encode_queries(queries)
@@ -401,69 +415,99 @@ def distributed_topk(
 
 
 # --------------------------------------------------------------------------
-# PQ: ADC LUT streaming scan
+# PQ: ADC — fused Pallas kernel or streaming LUT gather-sum scan
 # --------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("k", "metric", "chunk"))
-def _topk_pq(queries: jax.Array, store: PQStore, k: int, metric: str, chunk: int):
-    """Asymmetric distance computation with a streaming code scan.
-
-    Per-query LUT of query-to-codeword scores, then a gather-sum over the
-    code matrix — chunked with a running top-k, so the [Q, N] ADC score
-    matrix is never materialized for large N.  ``lpq_tables`` is the
-    paper's composition: the LUT entries themselves are int8-quantized
-    (Eq. 1, per-table abs-max) and the scan accumulates integers.
-    """
+def build_pq_lut(queries: jax.Array, store: PQStore, metric: str) -> jax.Array:
+    """Per-query ADC lookup table [Q, M, K] f32 of query-to-codeword
+    scores (K = ``store.n_codewords``)."""
     q = jnp.asarray(queries, jnp.float32)
     Q, d = q.shape
     ds = d // store.m
     qs = q.reshape(Q, store.m, ds)
     if metric == "ip":
-        lut = jnp.einsum("qmd,mkd->qmk", qs, store.codebooks)
-    else:                                               # l2 (negated)
-        diff = qs[:, :, None, :] - store.codebooks[None]
-        lut = -jnp.sum(diff * diff, -1)
+        return jnp.einsum("qmd,mkd->qmk", qs, store.codebooks)
+    diff = qs[:, :, None, :] - store.codebooks[None]    # l2 (negated)
+    return -jnp.sum(diff * diff, -1)
 
+
+def quantize_pq_lut(lut: jax.Array) -> jax.Array:
+    """The paper's after-the-codebook composition (``lpq_tables``): Eq. 1
+    abs-max quantization of the LUT entries to int8, one scale **per
+    query** (over that query's [M, K] table).  Per-query scaling keeps
+    the M subspace entries that sum into one score on a common scale —
+    the only comparability ADC needs, since top-k ranks within a query —
+    while making each query's quantized LUT independent of batch
+    composition: a Searcher pad row (whose negated-L2 table against the
+    codebooks is large) cannot perturb a real query's scale, so padded
+    planned execution is bit-identical to the eager path."""
+    amax = jnp.maximum(jnp.max(jnp.abs(lut), axis=(1, 2), keepdims=True),
+                       1e-12)
+    return jnp.clip(jnp.round(lut / amax * 127.0), -128, 127).astype(jnp.int8)
+
+
+def _pq_fused(store: PQStore, metric: str, chunk: int,
+              use_pallas: bool, interpret) -> tuple[bool, int]:
+    """Fused-vs-reference dispatch for the ADC scan (and its tile size).
+
+    The fused Pallas kernel needs integer LUTs (``lpq_tables``: int8
+    entries it holds VMEM-resident and accumulates in int32); fp32-LUT
+    stores take the streaming gather-sum scan.  Backend gating matches
+    the CodeStore path: TPU hot path, ``interpret=True`` for CI wiring,
+    single-tile corpora skip the kernel.
+    """
+    tile = min(FUSED_TILE, max(8, chunk))
+    fused = (
+        metric in ("ip", "l2")
+        and store.lpq_tables
+        and use_pallas
+        and store.n > tile
+        and (bool(interpret) or jax.default_backend() == "tpu")
+    )
+    return fused, tile
+
+
+@partial(jax.jit, static_argnames=("k", "metric", "chunk", "use_pallas",
+                                   "interpret"))
+def _topk_pq(
+    queries: jax.Array,
+    store: PQStore,
+    k: int,
+    metric: str,
+    chunk: int,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+):
+    """Asymmetric distance computation over the code matrix.
+
+    Per-query LUT of query-to-codeword scores, then either the **fused
+    Pallas ADC kernel** (``kernels/adc.py``: int8 LUT VMEM-resident,
+    4-bit codes unpacked from their packed nibbles in-kernel, int32
+    accumulation, running top-k — the [Q, N] ADC matrix never exists) or
+    the **reference streaming scan** (``_stream_topk`` over code chunks
+    with a gather-sum tile, unpacking 4-bit codes chunk by chunk).
+    Dispatch is ``_pq_fused``; both paths are bit-identical.
+    """
+    lut = build_pq_lut(queries, store, metric)
     if store.lpq_tables:
-        amax = jnp.maximum(jnp.max(jnp.abs(lut)), 1e-12)
-        lut = jnp.clip(jnp.round(lut / amax * 127.0), -128, 127)
-        lut = lut.astype(jnp.int32)                     # int8-valued
-
+        lut = quantize_pq_lut(lut)
     n = store.n
     k_eff = min(k, n)
 
-    def adc(tile):                                      # [c, M] -> [Q, c]
-        idx = tile.T[None].astype(jnp.int32)            # [1, M, c]
+    fused, tile = _pq_fused(store, metric, chunk, use_pallas, interpret)
+    if fused:
+        return K.fused_adc_topk(lut, store.codes, k_eff,
+                                packed=store.packed, bn=tile,
+                                interpret=interpret)
+
+    ilut = lut.astype(jnp.int32) if store.lpq_tables else lut
+
+    def tile_scores(lt, tile_codes):                    # [c, Mb] -> [Q, c]
+        rows = (PK.unpack_uint4(tile_codes)[:, : store.m]
+                if store.packed else tile_codes)
+        idx = rows.T[None].astype(jnp.int32)            # [1, M, c]
         return jnp.sum(
-            jnp.take_along_axis(lut, idx, axis=2), axis=1
+            jnp.take_along_axis(lt, idx, axis=2), axis=1
         ).astype(jnp.float32)
 
-    if n <= chunk:
-        s = adc(store.codes)
-        ids = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], s.shape)
-        best = merge_topk(
-            jnp.full((Q, k_eff), NEG, jnp.float32),
-            jnp.full((Q, k_eff), -1, jnp.int32), s, ids, k_eff,
-        )
-    else:
-        padded, _ = pad_rows(store.codes, chunk)
-        n_chunks = padded.shape[0] // chunk
-        tiles = padded.reshape(n_chunks, chunk, store.m)
-
-        def step(carry, inp):
-            tile, tile_idx = inp
-            s = adc(tile)
-            gid = tile_idx * chunk + jnp.arange(chunk, dtype=jnp.int32)[None, :]
-            ok = gid < n
-            s = jnp.where(ok, s, NEG)
-            ids = jnp.where(ok, jnp.broadcast_to(gid, s.shape), -1)
-            return merge_topk(*carry, s, ids, k_eff), None
-
-        best, _ = jax.lax.scan(
-            step,
-            (jnp.full((Q, k_eff), NEG, jnp.float32),
-             jnp.full((Q, k_eff), -1, jnp.int32)),
-            (tiles, jnp.arange(n_chunks, dtype=jnp.int32)),
-        )
-
-    return best
+    return _stream_topk(ilut, store.codes, k_eff, chunk, n, tile_scores)

@@ -224,27 +224,70 @@ class CodeStore:
         )
 
 
+#: codeword index widths PQStore supports: 4-bit (16-codeword codebooks,
+#: codes packed two per byte) or 8-bit (256 codewords, one byte per code)
+PQ_CODE_BITS = (4, 8)
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class PQStore:
-    """Product-quantization storage: codewords + per-subspace codebooks."""
+    """Product-quantization storage: codewords + per-subspace codebooks.
+
+    ``bits`` is the codeword index width.  At 8 bits, ``codes`` is
+    [N, M] uint8 into 256-codeword codebooks; at 4 bits, codebooks hold
+    16 codewords and codes are bit-packed two per byte —
+    [N, ceil(M/2)] uint8 via :func:`repro.core.pack.pack_uint4` (odd M
+    pads a zero-code column; the ADC side pads its LUT with a zero
+    subspace slice, so scores are unchanged) — which is why
+    ``pq16x4`` reports exactly half the code bytes of ``pq16x8``.
+    """
 
     n: int = dataclasses.field(metadata=dict(static=True))
     m: int = dataclasses.field(metadata=dict(static=True))       # subspaces
     lpq_tables: bool = dataclasses.field(metadata=dict(static=True))
-    codes: jax.Array          # [N, M] uint8
-    codebooks: jax.Array      # [M, 256, d/M] f32
+    codes: jax.Array          # [N, M] uint8 | [N, ceil(M/2)] uint8 packed
+    codebooks: jax.Array      # [M, 2^bits, d/M] f32
+    bits: int = dataclasses.field(default=8, metadata=dict(static=True))
+
+    def __post_init__(self):
+        if self.bits not in PQ_CODE_BITS:
+            raise ValueError(
+                f"PQ codeword width must be one of {PQ_CODE_BITS} bits "
+                f"(16- or 256-codeword codebooks), got {self.bits}"
+            )
+
+    @property
+    def packed(self) -> bool:
+        """Whether codes are stored two-per-byte (the 4-bit layout)."""
+        return self.bits == 4
+
+    @property
+    def n_codewords(self) -> int:
+        return 2 ** self.bits
+
+    def unpacked_codes(self) -> jax.Array:
+        """[N, M] codeword-index view; unpacks the 4-bit layout on the fly."""
+        if not self.packed:
+            return self.codes
+        return PK.unpack_uint4(self.codes)[:, : self.m]
 
     @property
     def row_bytes(self) -> int:
-        return self.m                                     # 1 byte / subspace
+        """Bytes of code payload read to score one corpus row."""
+        return int(self.codes.shape[1])
+
+    @property
+    def code_bytes(self) -> int:
+        """Bytes of the code matrix alone (the Table-1 codes column)."""
+        return int(self.codes.size)
 
     def memory_bytes(self) -> int:
-        return int(self.codes.size) + int(self.codebooks.size) * 4
+        return self.code_bytes + int(self.codebooks.size) * 4
 
     def state(self) -> tuple[dict[str, Any], dict[str, Any]]:
         arrays = {"codes": self.codes, "codebooks": self.codebooks}
-        meta = {"store": {"n": self.n, "m": self.m,
+        meta = {"store": {"n": self.n, "m": self.m, "bits": self.bits,
                           "lpq_tables": self.lpq_tables}}
         return arrays, meta
 
@@ -255,4 +298,5 @@ class PQStore:
             n=int(sm["n"]), m=int(sm["m"]), lpq_tables=bool(sm["lpq_tables"]),
             codes=jnp.asarray(arrays["codes"]),
             codebooks=jnp.asarray(arrays["codebooks"]),
+            bits=int(sm.get("bits", 8)),       # pre-PR-5 saves: 8-bit codes
         )

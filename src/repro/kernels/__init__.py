@@ -1,9 +1,20 @@
 # Pallas TPU kernels for the paper's compute hot-spots:
-#   qmip/ql2     — fused int8 MIP / negated-L2 scoring (the query hot path)
-#   qmip4/ql24   — int4 unpack-in-kernel variants over bit-packed codes
-#   fused_topk   — streaming corpus scan + running top-k (no [Q, N] in HBM)
-#   quantize     — Eq. 1 clamped-linear fp32 -> int8/int4 corpus compression
+#   qmip/ql2       — fused int8 MIP / negated-L2 scoring (the query hot path)
+#   qmip4/ql24     — int4 unpack-in-kernel variants over bit-packed codes
+#   fused_topk     — streaming corpus scan + running top-k (no [Q, N] in HBM)
+#   fused_adc_topk — streaming ADC over PQ codes: in-kernel LUT scoring
+#                    (one-hot MXU contraction, packed-nibble unpack) + top-k
+#   quantize       — Eq. 1 clamped-linear fp32 -> int8/int4 corpus compression
 # Each has a pure-jnp oracle in ref.py; ops.py is the public jit'd surface.
-from repro.kernels.ops import fused_topk, qmip, qmip4, ql2, ql24, quantize
+from repro.kernels.ops import (
+    fused_adc_topk,
+    fused_topk,
+    qmip,
+    qmip4,
+    ql2,
+    ql24,
+    quantize,
+)
 
-__all__ = ["qmip", "qmip4", "ql2", "ql24", "fused_topk", "quantize"]
+__all__ = ["qmip", "qmip4", "ql2", "ql24", "fused_topk", "fused_adc_topk",
+           "quantize"]

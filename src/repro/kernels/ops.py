@@ -18,6 +18,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import adc as _adc
 from repro.kernels import fused_topk as _fused
 from repro.kernels import packed as _packed
 from repro.kernels import qmip as _qmip
@@ -96,6 +97,11 @@ def fused_query_tile() -> int:
     """Query rows per fused-kernel tile — the corpus re-stream granularity
     (engine stats derive bytes_read from it; one source of truth)."""
     return _fused.BQ
+
+
+def fused_adc_query_tile() -> int:
+    """Query rows per fused-ADC tile (each carries its LUT block)."""
+    return _adc.BQ
 
 
 def _split_nibble_queries(q_codes: jax.Array):
@@ -212,6 +218,60 @@ def fused_topk(
         xp = _pad_rows(x, _round_up(N, bn))
         s, i = _fused.fused_topk_pallas(
             qp, xp, k=k, metric=metric, n_valid=N,
+            bq=bq, bn=bn, interpret=interp,
+        )
+    return s[:Q], i[:Q]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "packed", "bn", "use_pallas", "interpret")
+)
+def fused_adc_topk(
+    lut: jax.Array,
+    codes: jax.Array,
+    k: int,
+    *,
+    packed: bool = False,
+    bn: int | None = None,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+):
+    """Streaming fused ADC + top-k: ([Q, k] f32 scores, [Q, k] i32 ids).
+
+    ``lut`` is the [Q, M, K] int8-quantized lookup table (K = codewords
+    per subspace); ``codes`` is [N, M] uint8, or — with ``packed=True`` —
+    [N, ceil(M/2)] uint8 two-nibbles-per-byte (an odd logical M was
+    padded with a zero-code column at pack time; the LUT grows a matching
+    zero subspace slice here, so the pad contributes nothing).  The
+    [Q, N] ADC matrix never reaches HBM on the Pallas path;
+    ``use_pallas=False`` materializes it via the ref.py oracle (parity
+    tests, XLA fallback).
+    """
+    Q, m, n_codewords = lut.shape
+    N = codes.shape[0]
+    k = min(k, N)
+    if packed and m < 2 * codes.shape[1]:      # odd-M zero-code pad column
+        lut = jnp.pad(lut, ((0, 0), (0, 2 * codes.shape[1] - m), (0, 0)))
+    if not use_pallas:
+        s = _ref.adc4_ref(lut, codes) if packed else _ref.adc_ref(lut, codes)
+        return _ref.topk_ref(s, k, N)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    bq = _pick_tile(Q, _adc.BQ)
+    bn = _pick_tile(N, min(bn, _adc.BN) if bn else _adc.BN)
+    cp = _pad_rows(codes, _round_up(N, bn))
+    if packed:
+        le = lut[:, 0::2, :].reshape(Q, -1)
+        lo = lut[:, 1::2, :].reshape(Q, -1)
+        le = _pad_rows(le, _round_up(Q, bq))
+        lo = _pad_rows(lo, _round_up(Q, bq))
+        s, i = _adc.fused_adc4_pallas(
+            le, lo, cp, k=k, n_codewords=n_codewords, n_valid=N,
+            bq=bq, bn=bn, interpret=interp,
+        )
+    else:
+        l2d = _pad_rows(lut.reshape(Q, -1), _round_up(Q, bq))
+        s, i = _adc.fused_adc_pallas(
+            l2d, cp, k=k, n_codewords=n_codewords, n_valid=N,
             bq=bq, bn=bn, interpret=interp,
         )
     return s[:Q], i[:Q]

@@ -44,6 +44,35 @@ def ql24_ref(q_codes: jax.Array, packed: jax.Array) -> jax.Array:
     return ql2_ref(q_codes, _unpack_int4_ref(packed))
 
 
+def _unpack_uint4_ref(packed: jax.Array) -> jax.Array:
+    """[N, m/2] uint8 -> [N, m] int32 unsigned nibbles in [0, 15]."""
+    lo = (packed & 0x0F).astype(jnp.int32)
+    hi = ((packed >> 4) & 0x0F).astype(jnp.int32)
+    n, half = packed.shape
+    return jnp.stack([lo, hi], axis=-1).reshape(n, half * 2)
+
+
+def adc_ref(lut: jax.Array, codes: jax.Array) -> jax.Array:
+    """[Q, M, K] int LUT x [N, M] uint8 codewords -> [Q, N] int32 ADC.
+
+    The asymmetric-distance oracle: gather each row's per-subspace LUT
+    entry and sum — ``s[q, n] = sum_m lut[q, m, codes[n, m]]``.
+    """
+    idx = codes.T[None].astype(jnp.int32)               # [1, M, N]
+    return jnp.sum(
+        jnp.take_along_axis(lut.astype(jnp.int32), idx, axis=2), axis=1
+    ).astype(jnp.int32)
+
+
+def adc4_ref(lut: jax.Array, packed: jax.Array) -> jax.Array:
+    """[Q, M, K] int LUT x [N, M/2] packed uint8 nibbles -> [Q, N] int32.
+
+    ``lut``'s subspace axis must already cover the unpacked (even) width;
+    a zero LUT slice for an odd-m pad column keeps the sum unchanged.
+    """
+    return adc_ref(lut, _unpack_uint4_ref(packed))
+
+
 def topk_ref(scores: jax.Array, k: int, n_valid: int | None = None):
     """Exact top-k oracle over a full [Q, N] score matrix.
 

@@ -7,15 +7,20 @@ the codebook mapping step for calculating the distance computations at
 query time."  Both modes are implemented:
 
   * :class:`PQIndex` — classic PQ: split d into M subspaces, k-means a
-    256-codeword codebook per subspace, store 1-byte codes in an
-    ``engine.PQStore``, score by ADC through ``engine.topk`` (per-query
-    LUT, then a *streaming* gather-sum scan with a running top-k — the
-    [Q, N] ADC score matrix never materializes for large N).
+    2^bits-codeword codebook per subspace (``pq<M>`` = 256 codewords,
+    ``pq<M>x4`` = 16 codewords with codes bit-packed two per byte —
+    Bolt / Quick-ADC's layout, half the code bytes), store codes in an
+    ``engine.PQStore``, score by ADC through ``engine.topk``.
   * ``lpq_tables=True`` — the paper's composition: the ADC lookup tables
     themselves are quantized to int8 with Eq. 1 constants learned over
     the table entries, so the scan accumulates integers (int32) instead
     of f32 — the same implementation-level substitution the paper makes
-    inside HNSW, applied after the codebook mapping step.
+    inside HNSW, applied after the codebook mapping step.  Integer
+    tables are also what the fused Pallas ADC kernel
+    (``kernels/adc.py``) holds VMEM-resident: it unpacks the nibble
+    codes in-kernel and runs the LUT gather as one int8 MXU
+    contraction, streaming a running top-k so the [Q, N] ADC matrix
+    never materializes (engine dispatch: ``scorer._pq_fused``).
 """
 
 from __future__ import annotations
@@ -47,6 +52,11 @@ class PQIndex:
         return self.store.m
 
     @property
+    def bits(self) -> int:
+        """Codeword index width (4 or 8)."""
+        return self.store.bits
+
+    @property
     def n(self) -> int:
         return self.store.n
 
@@ -69,17 +79,21 @@ class PQIndex:
         *,
         m: int = 8,
         metric: str = "ip",
+        bits: int = 8,
         lpq_tables: bool = False,
         key: jax.Array | None = None,
         kmeans_iters: int = 8,
     ) -> "PQIndex":
         spec, p = resolve_build_spec(
             "pq", spec, metric=metric,
-            m=m, lpq_tables=lpq_tables, kmeans_iters=kmeans_iters,
+            m=m, bits=bits, lpq_tables=lpq_tables, kmeans_iters=kmeans_iters,
         )
         m = int(p["m"])
+        # codeword-count knob: 2^bits codewords per subspace codebook
+        # (``pq16x4`` = 16, ``pq16`` = 256); PQStore validates the width
+        bits = int(p["bits"] or 8)
         # "pq64+lpq" / "pq64,lpq8" — the paper's after-the-codebook
-        # composition: int8 ADC lookup tables (codes are already 1 byte)
+        # composition: int8 ADC lookup tables (codes are already <= 1 byte)
         lpq_tables = bool(p["lpq_tables"]) or spec.quant is not None
         kmeans_iters = int(p["kmeans_iters"])
         metric = spec.metric
@@ -95,20 +109,31 @@ class PQIndex:
         assert d % m == 0, (d, m)
         ds = d // m
         sub = corpus.reshape(n, m, ds)
+        if bits not in engine.PQ_CODE_BITS:
+            raise ValueError(
+                f"pq codeword width must be one of {engine.PQ_CODE_BITS} "
+                f"bits (16- or 256-codeword codebooks), got {bits}"
+            )
+        n_codewords = 2 ** bits
 
         books, codes = [], []
         for j in range(m):
-            cb = kmeans(sub[:, j], min(256, n), jax.random.fold_in(key, j),
-                        iters=kmeans_iters)
-            if cb.shape[0] < 256:   # tiny corpora: pad codebook
-                cb = jnp.pad(cb, ((0, 256 - cb.shape[0]), (0, 0)))
+            cb = kmeans(sub[:, j], min(n_codewords, n),
+                        jax.random.fold_in(key, j), iters=kmeans_iters)
+            if cb.shape[0] < n_codewords:   # tiny corpora: pad codebook
+                cb = jnp.pad(cb, ((0, n_codewords - cb.shape[0]), (0, 0)))
             d2 = jnp.sum((sub[:, j][:, None, :] - cb[None]) ** 2, -1)
             books.append(cb)
             codes.append(jnp.argmin(d2, -1).astype(jnp.uint8))
 
+        code_mat = jnp.stack(codes, 1)
+        if bits == 4:                        # honest width: two per byte
+            from repro.core import pack as PK
+
+            code_mat = PK.pack_uint4(code_mat)
         store = engine.PQStore(
-            n=n, m=m, lpq_tables=lpq_tables,
-            codes=jnp.stack(codes, 1), codebooks=jnp.stack(books),
+            n=n, m=m, bits=bits, lpq_tables=lpq_tables,
+            codes=code_mat, codebooks=jnp.stack(books),
         )
         return PQIndex(metric=metric, store=store,
                        rerank_store=build_rerank_store(spec, corpus))

@@ -15,6 +15,12 @@ build parameters.  ``parse_factory`` turns FAISS-style strings into specs:
     "hnsw32,lpq8@gaussian:3" HNSW M=32, int8 with 3-sigma Gaussian clamp
     "graph24,lpq8"          NGT-equivalent graph index, degree 24
     "pq64+lpq"              PQ with 64 subspaces, int8 ADC tables
+    "pq16x4"                PQ with 16 subspaces and 4-bit codewords:
+                            16-entry codebooks, codes bit-packed two per
+                            byte (half the code bytes of pq16); "pq64"
+                            stays an alias for "pq64x8"
+    "pq16x4,lpq8"           the fused-ADC arm: packed 4-bit codes scored
+                            in-kernel against int8-quantized LUTs
     "flat,lpq8,l2"          metric override fragment (ip | l2 | angular)
     "flat,lpq4+r32"         packed int4 scan + fp32 rerank tail (§3.4
                             recall recovery; DESIGN.md §9)
@@ -26,7 +32,7 @@ build parameters.  ``parse_factory`` turns FAISS-style strings into specs:
 
 Grammar: comma-separated fragments.  Exactly one *kind* fragment
 (``flat`` | ``ivf<nlist>`` | ``hnsw<M>`` | ``graph<degree>`` |
-``pq<M>[+lpq]``), at most one *quant* fragment
+``pq<M>[x<b>][+lpq]`` with b in {4, 8}), at most one *quant* fragment
 (``lpq<bits>[@<scheme>][:<sigmas>][+r<rbits>]``), at most one *metric*
 fragment, at most one *rerank* fragment (``r<rbits>``, rbits in {8, 32} —
 the precision of the exact re-scoring store the Searcher's rerank tail
@@ -45,6 +51,7 @@ import re
 from typing import Any, Mapping, Optional
 
 from repro.core import quant as Qz
+from repro.engine.store import PQ_CODE_BITS
 
 METRICS = ("ip", "l2", "angular")
 
@@ -188,6 +195,13 @@ class IndexSpec:
                 "of the kind its sealed segments are built as, e.g. "
                 "parse_factory('stream(flat,lpq4)')"
             )
+        if (self.kind == "pq"
+                and self.params.get("bits") not in (None, *PQ_CODE_BITS)):
+            raise ValueError(
+                f"pq codeword width must be one of {PQ_CODE_BITS} bits "
+                f"(16- or 256-codeword codebooks), got "
+                f"bits={self.params['bits']!r}"
+            )
 
     def with_overrides(self, **overrides) -> "IndexSpec":
         """Merge extra build parameters (ef_construction, key knobs...)."""
@@ -204,6 +218,8 @@ class IndexSpec:
         frag = self.kind
         if pname is not None:
             frag += str(self.params.get(pname, pdefault))
+        if self.kind == "pq" and int(self.params.get("bits") or 8) != 8:
+            frag += f"x{int(self.params['bits'])}"
         if self.kind == "pq" and self.params.get("lpq_tables"):
             frag += "+lpq"
         parts = [frag]
@@ -219,7 +235,7 @@ class IndexSpec:
         return ",".join(parts)
 
 
-_KIND_RE = re.compile(r"^(flat|ivf|hnsw|graph|pq)(\d+)?(\+lpq)?$")
+_KIND_RE = re.compile(r"^(flat|ivf|hnsw|graph|pq)(\d+)?(?:x(\d+))?(\+lpq)?$")
 _QUANT_RE = re.compile(
     r"^lpq(\d+)(?:@([a-z_0-9]+))?(?::([0-9.]+))?(?:\+r(\d+))?$"
 )
@@ -339,7 +355,22 @@ def parse_factory(factory: str, metric: str | None = None) -> IndexSpec:
                 params[pname] = int(mk.group(2))
             elif pname is not None:
                 params[pname] = pdefault
-            if mk.group(3):
+            if mk.group(3) is not None:
+                if kind != "pq":
+                    raise ValueError(
+                        f"codeword-width suffix 'x{mk.group(3)}' only "
+                        f"composes with pq, not {kind!r} (in {factory!r})"
+                    )
+                cbits = int(mk.group(3))
+                if cbits not in PQ_CODE_BITS:
+                    raise ValueError(
+                        f"pq codeword width must be one of {PQ_CODE_BITS} "
+                        f"bits (16- or 256-codeword codebooks), got "
+                        f"'x{cbits}' in {factory!r}"
+                    )
+                if cbits != 8:              # pq<M> stays an alias of x8
+                    params["bits"] = cbits
+            if mk.group(4):
                 if kind != "pq":
                     raise ValueError("'+lpq' only composes with pq")
                 params["lpq_tables"] = True

@@ -1,0 +1,179 @@
+"""Property tests for the fused Pallas ADC subsystem (kernels/adc.py).
+
+Three contracts, swept with hypothesis (or the deterministic fallback
+shim) across ragged shapes:
+
+  * the fused kernel (interpret mode) bit-matches the ``ref.py``
+    gather-sum oracle — scores AND ids — at both codeword widths,
+    including non-dividing query/corpus tiles and odd subspace counts
+    (whose packed layout carries a zero-code pad column);
+  * Eq. 1 per-query abs-max LUT quantization preserves the fp32-LUT
+    top-1 whenever the fp32 winner's margin exceeds the worst-case
+    rounding bound (m subspaces x half an LSB each);
+  * unsigned nibble packing round-trips, including the odd-m pad.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # no hypothesis on this container: see pyproject [test]
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro import engine
+from repro.core import pack as PK
+from repro.kernels import ops as K
+from repro.kernels import ref as R
+
+
+def _codes(seed, n, m, n_codewords):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, n_codewords, (n, m)), jnp.uint8)
+
+
+def _lut(seed, q, m, n_codewords):
+    rng = np.random.default_rng(seed + 1)
+    return jnp.asarray(rng.integers(-127, 128, (q, m, n_codewords)), jnp.int8)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    q=st.integers(1, 17),
+    n=st.integers(4, 700),
+    m=st.sampled_from([2, 3, 4, 8, 16]),
+    bits=st.sampled_from([4, 8]),
+    k=st.integers(1, 20),
+)
+def test_fused_adc_bit_matches_oracle(seed, q, n, m, bits, k):
+    """Interpret-mode kernel == gather-sum oracle, exactly, everywhere."""
+    n_codewords = 2 ** bits
+    lut = _lut(seed, q, m, n_codewords)
+    codes = _codes(seed, n, m, n_codewords)
+    packed = bits == 4
+    payload = PK.pack_uint4(codes) if packed else codes
+
+    s_ref, i_ref = R.topk_ref(
+        (R.adc4_ref(jnp.pad(lut, ((0, 0), (0, m % 2), (0, 0))), payload)
+         if packed else R.adc_ref(lut, codes)),
+        min(k, n), n,
+    )
+    s_k, i_k = K.fused_adc_topk(lut, payload, k, packed=packed,
+                                interpret=True)
+    np.testing.assert_array_equal(np.asarray(s_ref), np.asarray(s_k))
+    np.testing.assert_array_equal(np.asarray(i_ref), np.asarray(i_k))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    q=st.integers(1, 9),
+    n=st.integers(40, 400),
+    m=st.sampled_from([2, 4, 8]),
+    bits=st.sampled_from([4, 8]),
+    metric=st.sampled_from(["ip", "l2"]),
+    chunk=st.integers(7, 130),
+)
+def test_engine_fused_matches_streaming_scan(seed, q, n, m, bits, metric,
+                                             chunk):
+    """engine.topk over a real PQStore: the fused kernel and the
+    reference streaming scan are bit-identical at every chunking."""
+    from repro.knn import make_index
+
+    d = m * 4
+    corpus = jax.random.normal(jax.random.PRNGKey(seed), (n, d)) * 0.1
+    queries = jax.random.normal(jax.random.PRNGKey(seed + 1), (q, d)) * 0.1
+    idx = make_index(f"pq{m}x{bits}+lpq,{metric}", corpus, kmeans_iters=2,
+                     key=jax.random.PRNGKey(0))
+    k = min(10, n)
+    s_ref, i_ref, _ = engine.topk(queries, idx.store, k, metric,
+                                  chunk=chunk, use_pallas=False)
+    s_f, i_f, _ = engine.topk(queries, idx.store, k, metric,
+                              chunk=chunk, interpret=True)
+    np.testing.assert_array_equal(np.asarray(s_ref), np.asarray(s_f))
+    np.testing.assert_array_equal(np.asarray(i_ref), np.asarray(i_f))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    q=st.integers(1, 8),
+    m=st.sampled_from([2, 4, 8, 16]),
+    bits=st.sampled_from([4, 8]),
+    metric=st.sampled_from(["ip", "l2"]),
+)
+def test_int8_lut_preserves_fp32_top1_within_clamp_bound(seed, q, m, bits,
+                                                         metric):
+    """Eq. 1 LUT quantization: each int8 entry is within half an LSB
+    (amax/127/2) of its fp32 value, so the summed ADC error is bounded by
+    m LSB halves — whenever the fp32 top-1 margin beats twice that
+    bound, the int8 scan must return the same top-1 row."""
+    n, d = 300, m * 4
+    corpus = jax.random.normal(jax.random.PRNGKey(seed), (n, d)) * 0.1
+    queries = jax.random.normal(jax.random.PRNGKey(seed + 1), (q, d)) * 0.1
+    from repro.knn import make_index
+
+    idx = make_index(f"pq{m}x{bits},{metric}", corpus, kmeans_iters=2,
+                     key=jax.random.PRNGKey(0))
+    store = idx.store
+
+    lut_fp = engine.build_pq_lut(queries, store, metric)
+    lut_q = engine.quantize_pq_lut(lut_fp)
+    # the Eq. 1 scale is per query (each query's [M, K] table abs-max)
+    amax = np.asarray(jnp.max(jnp.abs(lut_fp), axis=(1, 2))).clip(min=1e-12)
+    lsb = amax / 127.0                                     # [Q]
+    codes = store.unpacked_codes()
+    idx_mn = codes.T[None].astype(jnp.int32)               # [1, M, N]
+    s_fp = np.asarray(                                     # fp32 gather-sum
+        jnp.sum(jnp.take_along_axis(lut_fp, idx_mn, axis=2), axis=1)
+    )
+    s_q = np.asarray(R.adc_ref(lut_q, codes)) * lsb[:, None]   # dequantized
+
+    # per-entry quantization error is <= lsb/2, summed over m subspaces
+    bound = m * lsb / 2.0                                  # [Q]
+    assert np.all(np.abs(s_q - s_fp) <= bound[:, None] + 1e-4)
+
+    order = np.argsort(-s_fp, axis=1)
+    margin = s_fp[np.arange(q), order[:, 0]] - s_fp[np.arange(q), order[:, 1]]
+    safe = margin > 2.0 * bound
+    top1_q = np.argmax(s_q, axis=1)
+    np.testing.assert_array_equal(top1_q[safe], order[safe, 0])
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    n=st.integers(1, 64),
+    m=st.integers(1, 33),
+)
+def test_uint4_pack_roundtrip(seed, n, m):
+    """pack -> unpack is the identity on [0, 15] codes; odd m gains one
+    zero-code pad column that slicing removes."""
+    codes = _codes(seed, n, m, 16)
+    packed = PK.pack_uint4(codes)
+    assert packed.shape == (n, (m + 1) // 2)
+    assert packed.dtype == jnp.uint8
+    back = PK.unpack_uint4(packed)
+    np.testing.assert_array_equal(np.asarray(back[:, :m]), np.asarray(codes))
+    if m % 2:
+        assert not np.asarray(back[:, m:]).any(), "pad column must be code 0"
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.integers(2, 50),
+       m=st.integers(1, 17))
+def test_packed_store_scores_match_unpacked_codes(seed, n, m):
+    """A PQStore's packed code matrix and its unpacked_codes() view are
+    the same codes — the oracle scores them identically."""
+    codes = _codes(seed, n, m, 16)
+    lut = _lut(seed, 3, m, 16)
+    store = engine.PQStore(n=n, m=m, bits=4, lpq_tables=True,
+                           codes=PK.pack_uint4(codes),
+                           codebooks=jnp.zeros((m, 16, 2)))
+    np.testing.assert_array_equal(
+        np.asarray(R.adc_ref(lut, store.unpacked_codes())),
+        np.asarray(R.adc_ref(lut, codes)),
+    )
+    assert store.row_bytes == (m + 1) // 2

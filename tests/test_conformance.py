@@ -1,0 +1,176 @@
+"""Registry-wide conformance suite: one contract matrix over every
+registered factory string.
+
+Every kind the registry can build — at every storage width, with and
+without quantization, rerank stores, and the stream wrapper — must honor
+the same contracts: SearchResult shape/dtype/id-validity, bit-exact
+save -> load -> search round-trips, ``searcher()`` parity with the
+one-shot ``Index.search`` path, the uniform stats-key schema of the
+scoring engine, and positive honest memory accounting.  Adding a factory
+arm to ``FACTORIES`` is all a future kind needs to inherit this coverage
+— no per-kind test files.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.knn import SearchParams, kinds, load_index, make_index, parse_factory
+
+K = 10
+N, D = 384, 32
+
+#: factory string -> build overrides; every registered kind appears at
+#: least once, quantized arms ride next to their fp32 siblings
+FACTORIES = {
+    "flat": {},
+    "flat,lpq8@gaussian:3": {},
+    "flat,lpq4+r32": {},
+    "ivf8,lpq8@gaussian:3": {"kmeans_iters": 4},
+    "hnsw8,lpq8@gaussian:3": {"ef_construction": 40, "batch_size": 128},
+    "graph16,lpq8@gaussian:3": {"n_seeds": 16},
+    "pq16": {"kmeans_iters": 4},
+    "pq16+lpq": {"kmeans_iters": 4},
+    # the l2 arms guard batch-composition independence: a zero pad query's
+    # negated-L2 LUT is large, so a batch-global quantization scale would
+    # break padded-searcher-vs-eager parity (the scale is per query)
+    "pq16+lpq,l2": {"kmeans_iters": 4},
+    "pq16x4": {"kmeans_iters": 4},
+    "pq16x4,lpq8": {"kmeans_iters": 4},
+    "pq16x4,lpq8,l2": {"kmeans_iters": 4},
+    "pq16x4+lpq,r32": {"kmeans_iters": 4},
+    "stream(flat,lpq4)+r32": {"seal_threshold": 128},
+    "stream(pq16x4,lpq8)+r32": {"seal_threshold": 128, "kmeans_iters": 4},
+}
+
+#: stats keys every search result must carry (the PR 2 engine schema);
+#: non-stream kinds also report the storage-width keys
+CORE_STATS = ("kind", "candidates", "chunks", "bytes_read")
+WIDTH_STATS = ("bits", "packed")
+SEARCHER_STATS = ("bucket", "padded_q", "shards", "reranked")
+
+
+@pytest.fixture(scope="module")
+def corpus_queries():
+    corpus = jax.random.normal(jax.random.PRNGKey(0), (N, D)) * 0.05
+    queries = jax.random.normal(jax.random.PRNGKey(1), (8, D)) * 0.05
+    return corpus, queries
+
+
+@pytest.fixture(scope="module")
+def built(corpus_queries):
+    corpus, _q = corpus_queries
+    return {
+        factory: make_index(factory, corpus, key=jax.random.PRNGKey(0), **over)
+        for factory, over in FACTORIES.items()
+    }
+
+
+def test_matrix_covers_every_registered_kind():
+    covered = {parse_factory(f).kind for f in FACTORIES}
+    covered |= {
+        parse_factory(parse_factory(f).params["inner"]).kind
+        for f in FACTORIES
+        if parse_factory(f).kind == "stream"
+    }
+    assert covered == set(kinds()), (
+        "every registered kind must appear in the conformance matrix "
+        f"(missing: {set(kinds()) - covered})"
+    )
+
+
+@pytest.mark.parametrize("factory", sorted(FACTORIES))
+def test_search_contract(factory, corpus_queries, built):
+    """Shape, dtype and id-validity of the uniform SearchResult."""
+    _corpus, queries = corpus_queries
+    res = built[factory].search(queries, K, SearchParams(nprobe=8, ef_search=40))
+    assert res.scores.shape == (queries.shape[0], K)
+    assert res.ids.shape == (queries.shape[0], K)
+    assert str(res.scores.dtype) == "float32"
+    assert str(res.ids.dtype) == "int32"
+    ids = np.asarray(res.ids)
+    assert ids.min() >= -1 and ids.max() < N, factory
+    # a corpus larger than k must fill every slot with a real row
+    assert (ids >= 0).all(), factory
+
+
+@pytest.mark.parametrize("factory", sorted(FACTORIES))
+def test_stats_schema(factory, corpus_queries, built):
+    """The uniform engine accounting block rides on every result."""
+    _corpus, queries = corpus_queries
+    res = built[factory].search(queries, K, SearchParams(nprobe=8, ef_search=40))
+    for key in CORE_STATS:
+        assert key in res.stats, (factory, key)
+    assert res.stats["kind"] == parse_factory(factory).kind
+    if parse_factory(factory).kind != "stream":
+        for key in WIDTH_STATS:
+            assert key in res.stats, (factory, key)
+    assert res.stats["bytes_read"] >= 0
+
+
+@pytest.mark.parametrize("factory", sorted(FACTORIES))
+def test_save_load_search_bit_parity(factory, corpus_queries, built, tmp_path):
+    _corpus, queries = corpus_queries
+    idx = built[factory]
+    path = str(tmp_path / "idx.npz")
+    idx.save(path)
+    restored = load_index(path)
+    sp = SearchParams(nprobe=8, ef_search=40)
+    a = idx.search(queries, K, sp)
+    b = restored.search(queries, K, sp)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.scores), np.asarray(b.scores))
+    assert restored.memory_bytes() == idx.memory_bytes()
+
+
+@pytest.mark.parametrize("factory", sorted(FACTORIES))
+def test_searcher_matches_one_shot(factory, corpus_queries, built):
+    """A planned (bucketed, padded) session returns exactly what the
+    eager one-shot path returns, and reports the session schema."""
+    _corpus, queries = corpus_queries
+    idx = built[factory]
+    sp = SearchParams(nprobe=8, ef_search=40)
+    eager = idx.search(queries, K, sp)
+    planned = idx.searcher(K, sp, batch_sizes=(4, 16))(queries)
+    np.testing.assert_array_equal(np.asarray(eager.ids),
+                                  np.asarray(planned.ids))
+    np.testing.assert_array_equal(np.asarray(eager.scores),
+                                  np.asarray(planned.scores))
+    for key in SEARCHER_STATS:
+        assert key in planned.stats, (factory, key)
+
+
+@pytest.mark.parametrize("factory", sorted(FACTORIES))
+def test_memory_bytes_positive(factory, built):
+    assert built[factory].memory_bytes() > 0
+
+
+def test_pq16x4_is_half_the_code_bytes_of_pq16x8(corpus_queries, built):
+    """The acceptance property: 4-bit codewords pack two per byte, so the
+    code matrix is exactly half the 8-bit arm's (and the 16-entry
+    codebooks are 16x smaller, so total memory drops too)."""
+    x4 = built["pq16x4"].store
+    x8 = built["pq16"].store
+    assert x4.code_bytes * 2 == x8.code_bytes
+    assert built["pq16x4"].memory_bytes() < built["pq16"].memory_bytes()
+
+
+def test_stream_pq16x4_mutates_and_roundtrips(corpus_queries, built, tmp_path):
+    """The acceptance arm end-to-end: stream(pq16x4,lpq8)+r32 survives
+    upsert/delete, a searcher session, and a save/load round-trip."""
+    corpus, queries = corpus_queries
+    idx = make_index("stream(pq16x4,lpq8)+r32", corpus, seal_threshold=128,
+                     kmeans_iters=4, key=jax.random.PRNGKey(0))
+    idx.upsert(np.arange(N, N + 64),
+               np.asarray(jax.random.normal(jax.random.PRNGKey(2), (64, D)))
+               * 0.05)
+    idx.delete(np.arange(16))
+    path = str(tmp_path / "stream_pq.npz")
+    idx.save(path)
+    restored = load_index(path)
+    a = idx.searcher(K)(queries)
+    b = restored.searcher(K)(queries)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    ids = np.asarray(a.ids)
+    assert (ids >= 0).all() and ids.max() < N + 64
+    assert not np.isin(ids, np.arange(16)).any(), "deleted rows resurfaced"

@@ -152,8 +152,10 @@ def test_factory_parse_fields():
 @pytest.mark.parametrize(
     "factory",
     ["flat", "flat,lpq8@gaussian:3", "ivf256,lpq8", "hnsw32,lpq8",
-     "pq64+lpq", "graph24,lpq8@global_absmax", "flat,lpq4,angular",
+     "pq64+lpq", "pq16x4", "pq16x4+lpq", "pq16x4,lpq8,l2", "pq64x8",
+     "graph24,lpq8@global_absmax", "flat,lpq4,angular",
      "stream(flat,lpq4)", "stream(ivf256,lpq8)+r32",
+     "stream(pq16x4,lpq8)+r32",
      "stream(hnsw32,lpq8@gaussian:3,l2)+r8"],
 )
 def test_factory_string_roundtrip(factory):
@@ -167,11 +169,22 @@ def test_factory_string_roundtrip(factory):
             "ivf16,hnsw8", "flat,lpq8@nosuchscheme", "pq8,lpq4",
             "pq8,lpq8@absmax", "flat,l2,ip", "stream", "stream()",
             "stream(stream(flat))", "stream(bogus)+r32",
-            "stream(flat,lpq4+r8)+r32", "stream(flat)+r16"],
+            "stream(flat,lpq4+r8)+r32", "stream(flat)+r16",
+            "pq16x3", "pq16x12", "pq16x0", "flatx4", "ivf8x4"],
 )
 def test_factory_rejects_garbage(bad):
     with pytest.raises((ValueError, KeyError)):
         parse_factory(bad)
+
+
+def test_pq_codeword_width_error_names_allowed_set():
+    """pq16x3 must fail with a pointed error naming {4, 8}, not a
+    generic cannot-parse fallthrough."""
+    for bad in ("pq16x3", "pq16x12"):
+        with pytest.raises(ValueError, match=r"one of \(4, 8\)"):
+            parse_factory(bad)
+    with pytest.raises(ValueError, match="only composes with pq"):
+        parse_factory("flatx4")
 
 
 def test_make_index_metric_override(corpus_queries):
