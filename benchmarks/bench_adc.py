@@ -23,7 +23,7 @@ import platform
 import jax
 import numpy as np
 
-from benchmarks.common import emit, sized, timeit
+from benchmarks.common import emit, runtime_meta, sized, timeit
 from repro import engine
 from repro.core.preserve import recall_at_k
 from repro.knn import make_index
@@ -56,6 +56,7 @@ def main(argv: list[str] | None = None) -> None:
             "platform": platform.platform(),
             "interpret": jax.default_backend() != "tpu",
             "smoke": bool(args.smoke),
+            "runtime": runtime_meta(),
         },
         "cells": {},
     }

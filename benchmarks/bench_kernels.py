@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, runtime_meta, timeit
 from repro.core import distances as D
 from repro.core import pack as PK
 from repro.kernels import ops as K
@@ -90,6 +90,7 @@ def main(argv: list[str] | None = None) -> None:
             "platform": platform.platform(),
             "interpret": jax.default_backend() != "tpu",
             "smoke": bool(args.smoke),
+            "runtime": runtime_meta(),
         },
         "cells": {},
     }

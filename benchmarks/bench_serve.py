@@ -25,7 +25,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit, sized
+from benchmarks.common import emit, runtime_meta, sized
 from repro.core.preserve import recall_at_k
 from repro.data import synthetic
 from repro.knn import SearchParams, make_index
@@ -83,6 +83,7 @@ def main(argv: list[str] | None = None) -> None:
             "n": n, "d": args.d, "batch": args.batch, "k": K_TOP,
             "requests": requests, "backend": jax.default_backend(),
             "platform": platform.platform(), "smoke": bool(args.smoke),
+            "runtime": runtime_meta(),
         },
         "cells": {},
     }

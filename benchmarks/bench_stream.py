@@ -40,7 +40,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit, sized
+from benchmarks.common import emit, runtime_meta, sized
 from repro.core.preserve import recall_at_k
 from repro.data import synthetic
 from repro.knn import make_index
@@ -191,6 +191,7 @@ def main(argv: list[str] | None = None) -> None:
             "n": n, "d": args.d, "k": K_TOP, "queries": n_q,
             "backend": jax.default_backend(),
             "platform": platform.platform(), "smoke": bool(args.smoke),
+            "runtime": runtime_meta(),
         },
         "churn": {}, "drift": {},
     }

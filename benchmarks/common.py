@@ -37,3 +37,14 @@ def timeit(fn, *args, repeats: int = 3, warmup: int = 1):
 def emit(name: str, seconds: float, derived: str = "") -> None:
     """The harness CSV contract: name,us_per_call,derived."""
     print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+def runtime_meta() -> dict:
+    """The active runtime-profile stamp (repro.runtime.profile) every
+    ``BENCH_*.json`` embeds under ``meta["runtime"]``: profile name,
+    backend, device kind, interpret-mode flag, seed policy.  The trend
+    gate (benchmarks/trend.py) keys comparability on it — CPU-interpret
+    trend points never get compared against hardware points."""
+    from repro.runtime import profile as rtprofile
+
+    return rtprofile.stamp()

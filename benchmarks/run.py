@@ -12,7 +12,14 @@ from __future__ import annotations
 import sys
 import traceback
 
-from benchmarks import (
+from repro.runtime import profile as rtprofile
+
+# the env-resolved runtime profile ($REPRO_RUNTIME_PROFILE, default
+# "default") is applied before any suite touches jax, so every
+# BENCH_*.json written by one orchestrator run carries the same stamp
+rtprofile.apply(rtprofile.resolve())
+
+from benchmarks import (  # noqa: E402 — profile must precede jax init
     bench_adc,
     bench_kernels,
     bench_serve,

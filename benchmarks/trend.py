@@ -1,0 +1,265 @@
+"""Perf-trajectory trend gate: diff fresh ``BENCH_*.json`` against the
+previous run and fail CI on a real regression.
+
+Every bench suite writes a JSON trajectory file whose ``meta`` carries
+the runtime-profile stamp (``benchmarks.common.runtime_meta``).  This
+gate walks the metric tree of each fresh file, finds the comparable
+leaf metrics, and compares them against the same path in the baseline
+copy of the same file:
+
+  * keys containing ``qps`` — throughput, higher is better; a drop of
+    more than ``--qps-drop`` (default 15%) is a regression;
+  * keys starting with ``recall`` — paper-metric quality, higher is
+    better; an absolute drop of more than ``--recall-drop`` (default
+    0.01 — the recall@10 budget) is a regression.
+
+Everything else (latency, memory, ratios) is trajectory data, not a
+gate: wall-clock noise on shared CI runners would page people for
+nothing, while QPS-over-15% and recall-over-0.01 are the two motions
+the paper's claims actually live on.
+
+Comparisons are refused (skipped with a note, never failed) when the
+two runs are not comparable by construction:
+
+  * no baseline copy of the file exists (first run, new suite);
+  * ``meta["smoke"]`` differs (smoke shapes vs full shapes);
+  * the backend / interpret-mode / profile stamp differs (CPU-interpret
+    numbers vs hardware numbers — the "honest perf story" rule);
+  * either run's profile is marked non-deterministic.
+
+    python -m benchmarks.trend --baseline-dir .bench-baseline BENCH_*.json
+    python -m benchmarks.trend --self-test
+
+Exit status: 0 clean (or only skips), 1 with a regression table on any
+gated drop.  ``--self-test`` builds a synthetic baseline, checks a
+clean copy passes, injects a QPS and a recall regression, and asserts
+the gate trips — run in CI so the gate itself is tested.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+from typing import Iterator, Optional
+
+DEFAULT_QPS_DROP = 0.15
+DEFAULT_RECALL_DROP = 0.01
+
+#: meta keys that must match for two runs to be comparable at all
+_META_KEYS = ("smoke", "backend")
+#: runtime-stamp keys that must match (profile/interpret/backend)
+_RUNTIME_KEYS = ("profile", "backend", "interpret")
+
+
+def walk_metrics(node, path: str = "") -> Iterator[tuple[str, str, float]]:
+    """Yield ``(path, kind, value)`` for every gated leaf metric.
+
+    kind is ``"qps"`` (relative gate) or ``"recall"`` (absolute gate);
+    classification is by the leaf key name, lowercased: containing
+    "qps" / starting with "recall".  ``meta`` subtrees are never
+    metrics.
+    """
+    if isinstance(node, dict):
+        for k, v in node.items():
+            sub = f"{path}/{k}" if path else str(k)
+            if path == "" and k == "meta":
+                continue
+            if isinstance(v, (dict, list)):
+                yield from walk_metrics(v, sub)
+            elif isinstance(v, (int, float)) and not isinstance(v, bool):
+                lk = str(k).lower()
+                if "qps" in lk:
+                    yield sub, "qps", float(v)
+                elif lk.startswith("recall"):
+                    yield sub, "recall", float(v)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            yield from walk_metrics(v, f"{path}[{i}]")
+
+
+def _comparable(fresh_meta: dict, base_meta: dict) -> Optional[str]:
+    """None if the two runs may be compared, else the skip reason."""
+    for k in _META_KEYS:
+        if fresh_meta.get(k) != base_meta.get(k):
+            return (f"meta.{k} differs "
+                    f"({base_meta.get(k)!r} -> {fresh_meta.get(k)!r})")
+    fr = fresh_meta.get("runtime") or {}
+    br = base_meta.get("runtime") or {}
+    for k in _RUNTIME_KEYS:
+        if fr.get(k) != br.get(k):
+            return (f"runtime.{k} differs "
+                    f"({br.get(k)!r} -> {fr.get(k)!r})")
+    if fr.get("deterministic") is False or br.get("deterministic") is False:
+        return "non-deterministic profile (runs are expected to differ)"
+    return None
+
+
+def compare_file(fresh_path: str, baseline_path: str, *,
+                 qps_drop: float, recall_drop: float) -> dict:
+    """Compare one trajectory file against its baseline copy.
+
+    Returns ``{"file", "status": "compared"|"skipped", "note",
+    "regressions": [...], "checked": int}``; a regression entry is
+    ``{"path", "kind", "base", "fresh", "delta"}``.
+    """
+    name = os.path.basename(fresh_path)
+    if not os.path.exists(baseline_path):
+        return {"file": name, "status": "skipped", "regressions": [],
+                "checked": 0, "note": "no baseline copy (first run?)"}
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    with open(baseline_path) as f:
+        base = json.load(f)
+    reason = _comparable(fresh.get("meta", {}), base.get("meta", {}))
+    if reason is not None:
+        return {"file": name, "status": "skipped", "regressions": [],
+                "checked": 0, "note": reason}
+
+    base_metrics = {p: (kind, v) for p, kind, v in walk_metrics(base)}
+    regressions, checked = [], 0
+    for p, kind, v in walk_metrics(fresh):
+        if p not in base_metrics:
+            continue                     # new metric: no history yet
+        _, bv = base_metrics[p]
+        checked += 1
+        if kind == "qps":
+            bad = bv > 0 and v < bv * (1.0 - qps_drop)
+            delta = (v - bv) / bv if bv else 0.0
+        else:
+            bad = v < bv - recall_drop
+            delta = v - bv
+        if bad:
+            regressions.append({"path": p, "kind": kind, "base": bv,
+                                "fresh": v, "delta": delta})
+    return {"file": name, "status": "compared", "regressions": regressions,
+            "checked": checked, "note": ""}
+
+
+def run_gate(fresh_files: list[str], baseline_dir: str, *,
+             qps_drop: float = DEFAULT_QPS_DROP,
+             recall_drop: float = DEFAULT_RECALL_DROP) -> list[dict]:
+    return [
+        compare_file(f, os.path.join(baseline_dir, os.path.basename(f)),
+                     qps_drop=qps_drop, recall_drop=recall_drop)
+        for f in fresh_files
+    ]
+
+
+def _report(results: list[dict]) -> int:
+    n_reg = 0
+    for r in results:
+        if r["status"] == "skipped":
+            print(f"[trend] {r['file']}: SKIP — {r['note']}")
+            continue
+        if not r["regressions"]:
+            print(f"[trend] {r['file']}: OK ({r['checked']} metrics)")
+            continue
+        n_reg += len(r["regressions"])
+        print(f"[trend] {r['file']}: {len(r['regressions'])} regression(s) "
+              f"of {r['checked']} metrics")
+        for g in r["regressions"]:
+            if g["kind"] == "qps":
+                print(f"[trend]   {g['path']}: {g['base']:.1f} -> "
+                      f"{g['fresh']:.1f} QPS ({g['delta'] * 100:+.1f}%)")
+            else:
+                print(f"[trend]   {g['path']}: {g['base']:.4f} -> "
+                      f"{g['fresh']:.4f} recall ({g['delta']:+.4f})")
+    return n_reg
+
+
+def _self_test() -> None:
+    """The gate gating itself: clean copy passes, injected QPS/recall
+    regressions and a cross-backend mismatch behave as documented."""
+    doc = {
+        "meta": {"smoke": True, "backend": "cpu",
+                 "runtime": {"profile": "ci-cpu", "backend": "cpu",
+                             "interpret": True, "deterministic": True}},
+        "cells": {
+            "flat,lpq8": {"qps": 1000.0, "recall_at_10": 0.95,
+                          "p95_ms": 3.0},
+            "ivf64,lpq4+r32": {"qps": 4000.0, "recall_at_10": 0.91},
+        },
+        "ratios": [{"qps_ratio": 2.5}],
+    }
+    with tempfile.TemporaryDirectory() as td:
+        base_dir = os.path.join(td, "baseline")
+        os.mkdir(base_dir)
+        bp = os.path.join(base_dir, "BENCH_x.json")
+        fp = os.path.join(td, "BENCH_x.json")
+        with open(bp, "w") as f:
+            json.dump(doc, f)
+
+        # 1. clean copy: compared, zero regressions
+        with open(fp, "w") as f:
+            json.dump(doc, f)
+        (r,) = run_gate([fp], base_dir)
+        assert r["status"] == "compared" and not r["regressions"], r
+        assert r["checked"] == 5, r      # 3 qps-ish + 2 recall leaves
+
+        # 2. tolerated noise: -10% qps, -0.005 recall — still clean
+        noisy = json.loads(json.dumps(doc))
+        noisy["cells"]["flat,lpq8"]["qps"] = 900.0
+        noisy["cells"]["flat,lpq8"]["recall_at_10"] = 0.945
+        with open(fp, "w") as f:
+            json.dump(noisy, f)
+        (r,) = run_gate([fp], base_dir)
+        assert not r["regressions"], r
+
+        # 3. injected regressions: -30% qps, -0.05 recall — both trip
+        bad = json.loads(json.dumps(doc))
+        bad["cells"]["flat,lpq8"]["qps"] = 700.0
+        bad["cells"]["ivf64,lpq4+r32"]["recall_at_10"] = 0.86
+        with open(fp, "w") as f:
+            json.dump(bad, f)
+        (r,) = run_gate([fp], base_dir)
+        kinds = sorted(g["kind"] for g in r["regressions"])
+        assert kinds == ["qps", "recall"], r
+
+        # 4. backend flip: refused, not failed
+        other = json.loads(json.dumps(bad))
+        other["meta"]["runtime"]["interpret"] = False
+        other["meta"]["backend"] = "tpu"
+        with open(fp, "w") as f:
+            json.dump(other, f)
+        (r,) = run_gate([fp], base_dir)
+        assert r["status"] == "skipped", r
+
+        # 5. missing baseline: skipped with a note
+        (r,) = run_gate([fp], os.path.join(td, "nowhere"))
+        assert r["status"] == "skipped" and "no baseline" in r["note"], r
+    print("[trend] self-test OK (clean pass, noise tolerated, injected "
+          "QPS+recall regressions tripped, backend flip refused)")
+
+
+def main(argv: Optional[list[str]] = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*", help="fresh BENCH_*.json files")
+    ap.add_argument("--baseline-dir", default=".bench-baseline",
+                    help="directory holding the previous run's copies")
+    ap.add_argument("--qps-drop", type=float, default=DEFAULT_QPS_DROP,
+                    help="relative QPS drop that fails the gate")
+    ap.add_argument("--recall-drop", type=float, default=DEFAULT_RECALL_DROP,
+                    help="absolute recall drop that fails the gate")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the gate trips on injected regressions")
+    args = ap.parse_args(argv)
+
+    if args.self_test:
+        _self_test()
+        return
+    if not args.files:
+        raise SystemExit("no fresh BENCH_*.json files given")
+    results = run_gate(args.files, args.baseline_dir,
+                       qps_drop=args.qps_drop, recall_drop=args.recall_drop)
+    n_reg = _report(results)
+    if n_reg:
+        raise SystemExit(f"trend gate: {n_reg} regression(s) vs "
+                         f"{args.baseline_dir}")
+    print(f"[trend] gate clean ({len(results)} file(s))")
+
+
+if __name__ == "__main__":
+    main()

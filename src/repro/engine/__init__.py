@@ -12,6 +12,7 @@ from repro.engine.scorer import (
     build_pq_lut,
     chunked_topk,
     distributed_topk,
+    get_lut_cache,
     make_score_set,
     merge_topk,
     pad_rows,
@@ -19,6 +20,7 @@ from repro.engine.scorer import (
     remap_ids,
     rerank_among,
     search_stats,
+    set_lut_cache,
     topk,
     topk_among,
 )
@@ -40,4 +42,6 @@ __all__ = [
     "chunked_topk",
     "distributed_topk",
     "remap_ids",
+    "set_lut_cache",
+    "get_lut_cache",
 ]

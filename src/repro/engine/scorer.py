@@ -467,8 +467,32 @@ def _pq_fused(store: PQStore, metric: str, chunk: int,
     return fused, tile
 
 
-@partial(jax.jit, static_argnames=("k", "metric", "chunk", "use_pallas",
-                                   "interpret"))
+#: optional runtime LUT-block cache (repro.runtime.cache.LUTCache) — the
+#: hook only fires on *concrete* query batches (eager / one-shot search);
+#: inside a jitted Searcher bucket queries are tracers and the LUT is
+#: already fused into the compiled executable, so there is nothing to cache
+_LUT_CACHE = None
+
+
+def set_lut_cache(cache) -> None:
+    """Install (or, with None, remove) the process-wide PQ LUT cache."""
+    global _LUT_CACHE
+    _LUT_CACHE = cache
+
+
+def get_lut_cache():
+    return _LUT_CACHE
+
+
+@partial(jax.jit, static_argnames=("metric",))
+def _prepare_pq_lut(queries: jax.Array, store: PQStore, metric: str):
+    """The per-batch ADC table build: ``build_pq_lut`` einsum plus — for
+    ``lpq_tables`` stores — the paper's Eq. 1 int8 quantization.  This is
+    exactly the work the runtime LUT cache elides for repeated batches."""
+    lut = build_pq_lut(queries, store, metric)
+    return quantize_pq_lut(lut) if store.lpq_tables else lut
+
+
 def _topk_pq(
     queries: jax.Array,
     store: PQStore,
@@ -480,17 +504,40 @@ def _topk_pq(
 ):
     """Asymmetric distance computation over the code matrix.
 
-    Per-query LUT of query-to-codeword scores, then either the **fused
-    Pallas ADC kernel** (``kernels/adc.py``: int8 LUT VMEM-resident,
-    4-bit codes unpacked from their packed nibbles in-kernel, int32
-    accumulation, running top-k — the [Q, N] ADC matrix never exists) or
-    the **reference streaming scan** (``_stream_topk`` over code chunks
-    with a gather-sum tile, unpacking 4-bit codes chunk by chunk).
-    Dispatch is ``_pq_fused``; both paths are bit-identical.
+    Per-query LUT of query-to-codeword scores (served from the runtime
+    LUT cache when one is installed and the batch is concrete), then
+    either the **fused Pallas ADC kernel** (``kernels/adc.py``: int8 LUT
+    VMEM-resident, 4-bit codes unpacked from their packed nibbles
+    in-kernel, int32 accumulation, running top-k — the [Q, N] ADC matrix
+    never exists) or the **reference streaming scan** (``_stream_topk``
+    over code chunks with a gather-sum tile, unpacking 4-bit codes chunk
+    by chunk).  Dispatch is ``_pq_fused``; both paths are bit-identical.
     """
-    lut = build_pq_lut(queries, store, metric)
-    if store.lpq_tables:
-        lut = quantize_pq_lut(lut)
+    cache = _LUT_CACHE
+    if cache is not None and not isinstance(queries, jax.core.Tracer):
+        key = cache.key_for(queries, store.codebooks, metric,
+                            store.lpq_tables)
+        lut = cache.get_or_build(
+            key, lambda: jax.block_until_ready(
+                _prepare_pq_lut(queries, store, metric))
+        )
+    else:
+        lut = _prepare_pq_lut(queries, store, metric)
+    return _topk_pq_from_lut(lut, store, k, metric, chunk,
+                             use_pallas=use_pallas, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("k", "metric", "chunk", "use_pallas",
+                                   "interpret"))
+def _topk_pq_from_lut(
+    lut: jax.Array,
+    store: PQStore,
+    k: int,
+    metric: str,
+    chunk: int,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+):
     n = store.n
     k_eff = min(k, n)
 

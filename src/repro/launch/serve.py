@@ -1,31 +1,48 @@
-"""ANN serving loop, rebuilt on the Searcher query-plan API (DESIGN.md §9).
+"""ANN serving loop, rebuilt on the production runtime subsystem
+(DESIGN.md §9 request path, §12 runtime architecture).
 
 The index is chosen by a FAISS-style factory string and built through
 ``repro.knn.make_index``; the serving session is a single
 ``index.searcher(k, params, batch_sizes=...)`` plan — compiled once per
-batch-size bucket — that a request queue drains.  Every request is padded
-to its bucket inside the Searcher, so mixed request sizes hit a small,
-fixed set of compiled executables; rerank-capable builds (``+r32`` /
-``+r8`` factory suffix) run quantized-scan → exact-rerank inside the same
-compiled function; ``--shards`` row-shards the flat scan over a host mesh.
+batch-size bucket — that a request queue drains.  Around that compiled
+core, ``repro.runtime`` supplies the production machinery:
 
-Reporting: QPS, p50/p95/p99 request latency, and per-search engine stats
-*aggregated across the whole session* (per-request means + totals — not
-the last request's dict).
+  * ``--profile`` — a named :mod:`repro.runtime.profile` resolved and
+    applied at process start (platform, XLA flags, host-core pinning,
+    NaN debug, deterministic seed) and stamped into the report/telemetry.
+  * ``--cache`` — the hot-path result tier: repeated query batches are
+    served bit-identically from an LRU+TTL cache keyed on query
+    fingerprint + replan generation (``--hot-repeat`` replays the first
+    request every Nth request to exercise it).
+  * ``--admission`` — token-bucket admission with a bounded queue and
+    the degrade/shed ladder: over-budget requests run a **degraded
+    plan** (shallower rerank, smaller nprobe/ef) before being shed;
+    ``--deadline-ms`` propagates per-request deadlines that are
+    re-checked at dequeue against the observed latency EMA.
+  * ``--maintenance`` — a background scheduler runs stream-index
+    compaction and drift recalibration off the request path
+    (snapshot -> off-lock build -> atomic manifest swap), so a
+    ``compact()`` never blocks a query.
+  * ``--telemetry-out`` — the structured event log (per-request
+    queue-wait/execute spans, shared cache/admission counters) as JSON.
 
 Mutable (``stream(...)``) indexes serve writes too: ``--mutate``
 interleaves an upsert and a delete into the request mix.  A Searcher is
 a snapshot plan (LSM readers pin a manifest version, DESIGN.md §10), so
-each write op applies the mutation and re-plans the session; the report
-separates query latency from write+replan latency.
+a write re-plans the session — **unless the mutation left the manifest
+epoch unchanged** (no-op delete, memtable-only upsert below the seal
+threshold): those skip the re-plan and are counted as
+``replans_avoided``; under snapshot semantics the write simply becomes
+visible at the next structural re-plan.
 
     PYTHONPATH=src python -m repro.launch.serve --index flat,lpq4+r32 \
         --requests 4
-    PYTHONPATH=src python -m repro.launch.serve --index hnsw32,lpq8 \
-        --n 20000 --d 64 --batch 32 --mixed
-    PYTHONPATH=src python -m repro.launch.serve --index flat,lpq8 --shards 2
+    PYTHONPATH=src python -m repro.launch.serve --index flat,lpq8 \
+        --profile ci-cpu --cache 64 --hot-repeat 2
     PYTHONPATH=src python -m repro.launch.serve \
-        --index "stream(flat,lpq4)+r32" --requests 6 --mutate
+        --index "stream(flat,lpq4)+r32" --requests 8 --mutate \
+        --admission --max-queue 6 --maintenance \
+        --telemetry-out TELEMETRY_serve.json
 """
 
 from __future__ import annotations
@@ -34,11 +51,9 @@ import argparse
 import collections
 import time
 
-import jax
 import numpy as np
 
-from repro.data import synthetic
-from repro.knn import SearchParams, make_index
+from repro.runtime import profile as rtprofile
 
 #: stats keys summed across requests and reported as per-request means
 _AGG_KEYS = ("candidates", "bytes_read", "chunks", "padded_q", "reranked")
@@ -53,7 +68,7 @@ def _request_sizes(n_requests: int, batch: int, mixed: bool) -> list[int]:
     return [cycle[i % len(cycle)] for i in range(n_requests)]
 
 
-def main(argv: list[str] | None = None) -> None:
+def _parse_args(argv):
     ap = argparse.ArgumentParser()
     ap.add_argument("--index", default="flat,lpq8@gaussian:3",
                     help="factory string, e.g. flat,lpq4+r32 / ivf64,lpq8 / "
@@ -80,7 +95,70 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--mutate", action="store_true",
                     help="interleave an upsert and a delete request into "
                          "the traffic (stream(...) indexes only)")
-    args = ap.parse_args(argv)
+    # -- runtime subsystem flags (DESIGN.md §12) ---------------------------
+    ap.add_argument("--profile", default=None,
+                    help="named runtime profile (default: "
+                         "$REPRO_RUNTIME_PROFILE or 'default'); see "
+                         "repro.runtime.profile.PROFILES")
+    ap.add_argument("--cache", type=int, default=0,
+                    help="result-cache capacity in entries (0 = off)")
+    ap.add_argument("--cache-ttl", type=float, default=0.0,
+                    help="result-cache TTL seconds (0 = no TTL)")
+    ap.add_argument("--hot-repeat", type=int, default=0,
+                    help="replay the first request every Nth request "
+                         "(hot-query traffic shape; exercises the cache)")
+    ap.add_argument("--admission", action="store_true",
+                    help="enable token-bucket admission control with the "
+                         "degrade/shed ladder")
+    ap.add_argument("--rate", type=float, default=256.0,
+                    help="admission token rate, tokens(=queries)/s")
+    ap.add_argument("--burst", type=float, default=0.0,
+                    help="admission bucket burst (default 8 * batch)")
+    ap.add_argument("--max-queue", type=int, default=64,
+                    help="hard backlog bound; arrivals beyond it are shed")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request deadline budget (0 = none); blown "
+                         "deadlines shed, tight ones degrade")
+    ap.add_argument("--maintenance", action="store_true",
+                    help="run stream compaction/recalibration on a "
+                         "background scheduler (off the request path)")
+    ap.add_argument("--maintenance-interval", type=float, default=0.05,
+                    help="background maintenance poll interval, seconds")
+    ap.add_argument("--telemetry-out", default=None,
+                    help="write the structured telemetry JSON here")
+    return ap.parse_args(argv)
+
+
+def main(argv: list[str] | None = None) -> None:
+    args = _parse_args(argv)
+
+    # profile first: platform/XLA/core-pinning are process-start state
+    prof = rtprofile.apply(rtprofile.resolve(args.profile))
+
+    import jax
+
+    from repro.data import synthetic
+    from repro.knn import SearchParams, make_index
+    from repro.runtime import (
+        SHED,
+        AdmissionController,
+        CachedSearcher,
+        MaintenanceScheduler,
+        Telemetry,
+        TTLLRUCache,
+    )
+
+    stamp = rtprofile.stamp(prof)
+    telemetry = Telemetry(meta={
+        "runtime": stamp,
+        "index": args.index, "n": args.n, "d": args.d, "k": args.k,
+        "batch": args.batch, "requests": args.requests,
+        "mutate": bool(args.mutate), "admission": bool(args.admission),
+        "cache": args.cache, "maintenance": bool(args.maintenance),
+    })
+    print(f"[serve] profile={prof.name} backend={stamp['backend']} "
+          f"device={stamp['device_kind']} x{stamp['n_devices']} "
+          f"interpret={stamp['interpret']} seed={prof.seed}")
 
     sizes = _request_sizes(args.requests, args.batch, args.mixed)
     n_extra = 8 if args.mutate else 0
@@ -92,7 +170,7 @@ def main(argv: list[str] | None = None) -> None:
     corpus, extra_rows = corpus[: args.n], corpus[args.n:]
 
     t0 = time.perf_counter()
-    index = make_index(args.index, corpus, key=jax.random.PRNGKey(0))
+    index = make_index(args.index, corpus, key=rtprofile.key(prof))
     build_s = time.perf_counter() - t0
 
     sp = SearchParams(chunk=args.chunk, nprobe=args.nprobe,
@@ -109,8 +187,8 @@ def main(argv: list[str] | None = None) -> None:
         n_dev = len(jax.devices())
         if args.shards > n_dev:
             print(f"[serve] --shards {args.shards} > {n_dev} devices; "
-                  f"using {n_dev} (set XLA_FLAGS="
-                  "--xla_force_host_platform_device_count=N for more)")
+                  f"using {n_dev} (pick a profile with host_device_count, "
+                  "e.g. --profile cpu-mesh4, for more)")
         if min(args.shards, n_dev) > 1:
             mesh = jax.make_mesh((min(args.shards, n_dev),), ("data",))
         else:
@@ -122,93 +200,235 @@ def main(argv: list[str] | None = None) -> None:
             f"--mutate needs a mutable index; {args.index!r} is {index.kind!r}"
             " — wrap it: stream(" + args.index + ")"
         )
+    if args.maintenance and not hasattr(index, "compact_snapshot"):
+        raise SystemExit(
+            f"--maintenance needs a mutable (stream) index; {args.index!r} "
+            f"is {index.kind!r}"
+        )
 
-    def make_searcher():
-        return index.searcher(
+    # -- admission + degrade ladder ---------------------------------------
+    ctrl = None
+    if args.admission:
+        ctrl = AdmissionController(
+            rate_qps=args.rate,
+            burst=args.burst or 8.0 * args.batch,
+            max_queue=args.max_queue,
+            counters=telemetry.counters,
+        )
+
+    def make_searchers():
+        primary = index.searcher(
             args.k, sp, batch_sizes=buckets, shards=mesh,
             rerank=args.rerank_depth or None,
         )
+        degraded = None
+        if ctrl is not None:
+            d_depth = ctrl.policy.rerank_depth(
+                primary.rerank.depth if primary.rerank else 0, args.k
+            )
+            degraded = index.searcher(
+                args.k, ctrl.policy.params(sp), batch_sizes=buckets,
+                shards=mesh, rerank=(d_depth or False),
+            )
+        return primary, degraded
 
-    searcher = make_searcher()
+    searcher, searcher_deg = make_searchers()
+
+    # -- result cache tier -------------------------------------------------
+    cache = None
+    replan_gen = [0]                 # replan generation feeds cache keys
+    if args.cache:
+        cache = TTLLRUCache(args.cache, ttl_s=args.cache_ttl or None)
+
+    def wrap(s):
+        if s is None or cache is None:
+            return s
+        return CachedSearcher(s, cache, version=lambda: replan_gen[0])
+
+    serve_primary, serve_deg = wrap(searcher), wrap(searcher_deg)
+
     print(f"[serve] index={args.index} kind={index.kind} build={build_s:.2f}s "
           f"memory={index.memory_bytes() / 1e6:.1f}MB buckets={buckets} "
           f"shards={searcher.n_shards} "
-          f"rerank={searcher.rerank.depth if searcher.rerank else 0}")
+          f"rerank={searcher.rerank.depth if searcher.rerank else 0}"
+          + (f" degraded_rerank="
+             f"{searcher_deg.rerank.depth if searcher_deg and searcher_deg.rerank else 0}"
+             if searcher_deg else ""))
 
     # request queue (open loop: all arrivals enqueued up front); with
     # --mutate an upsert lands a third of the way in and a delete two
     # thirds in, between query requests (clamped so both ops always fire
-    # even at --requests 1)
+    # even at --requests 1).  Admission runs at the door: shed arrivals
+    # never enqueue; --hot-repeat replays the first payload every Nth
+    # request (the hot-query traffic the cache tier exists for).
     up_at = min(max(1, len(sizes) // 3), len(sizes) - 1)
     del_at = min(max(2, (2 * len(sizes)) // 3), len(sizes) - 1)
     queue: collections.deque = collections.deque()
     off = 0
+    first_payload = None
     for i, sz in enumerate(sizes):
         if args.mutate and i == up_at:
             queue.append(("upsert",
                           np.arange(args.n, args.n + extra_rows.shape[0]),
-                          extra_rows))
+                          extra_rows, None, None))
         if args.mutate and i == del_at:
-            queue.append(("delete", np.arange(0, 4), None))
-        queue.append(("query", queries[off : off + sz], None))
+            queue.append(("delete", np.arange(0, 4), None, None, None))
+        payload = queries[off : off + sz]
         off += sz
+        if first_payload is None:
+            first_payload = payload
+        elif args.hot_repeat and i % args.hot_repeat == 0:
+            payload = first_payload
+        now = time.perf_counter()
+        deadline = now + args.deadline_ms / 1e3 if args.deadline_ms else None
+        decision = None
+        if ctrl is not None:
+            decision = ctrl.admit(int(payload.shape[0]), len(queue), deadline)
+            if decision.action == SHED:
+                telemetry.event("shed", request=i, reason=decision.reason,
+                                queries=int(payload.shape[0]))
+                continue
+        queue.append(("query", payload, None, (now, deadline), decision))
 
-    # warmup: run every distinct request size once — this compiles each
-    # bucket executable the traffic will hit (incl. remainder-slice
-    # buckets of oversize requests, cf. Searcher.buckets_for) AND the
-    # per-shape pad/slice glue, so the timed percentiles measure serving
-    for sz in sorted(set(sizes)):
-        jax.block_until_ready(searcher(queries[:sz]).ids)
+    # warmup: run every distinct request size once through both plans —
+    # this compiles each bucket executable the traffic will hit (incl.
+    # remainder-slice buckets of oversize requests, cf.
+    # Searcher.buckets_for) AND the per-shape pad/slice glue, so the
+    # timed percentiles measure serving.  Warmup goes through the raw
+    # searchers: the cache must not be pre-populated.
+    def warm(primary, degraded):
+        for sz in sorted(set(sizes)):
+            jax.block_until_ready(primary(queries[:sz]).ids)
+            if degraded is not None:
+                jax.block_until_ready(degraded(queries[:sz]).ids)
+
+    warm(searcher, searcher_deg)
+
+    maint = None
+    if args.maintenance:
+        maint = MaintenanceScheduler(
+            index, interval_s=args.maintenance_interval, telemetry=telemetry,
+        ).start()
 
     latencies = []
     write_latencies = []
     totals: collections.Counter = collections.Counter()
     served = 0
     writes = 0
+    seq = 0
     t0 = time.perf_counter()
     while queue:
-        op, payload, vecs = queue.popleft()
+        op, payload, vecs, timing, decision = queue.popleft()
         t_req = time.perf_counter()
         if op == "query":
-            res = searcher(payload)
-            jax.block_until_ready(res.ids)
-            latencies.append(time.perf_counter() - t_req)
+            t_enq, deadline = timing
+            tr = telemetry.request(seq)
+            seq += 1
+            tr.phase("queue_wait", t_req - t_enq)
+            if ctrl is not None and decision is not None:
+                decision = ctrl.recheck(decision, deadline)
+                if decision.action == SHED:
+                    tr.annotate(outcome="shed", reason=decision.reason)
+                    tr.finish()
+                    continue
+            degraded = decision.degraded if decision is not None else False
+            sx = serve_deg if degraded else serve_primary
+            with tr.span("execute"):
+                res = sx(payload)
+                jax.block_until_ready(res.ids)
+            dt_req = time.perf_counter() - t_req
+            latencies.append(dt_req)
+            if ctrl is not None:
+                ctrl.observe(dt_req)
             served += int(payload.shape[0])
             for key in _AGG_KEYS:
                 totals[key] += int(res.stats.get(key, 0))
+            hit = res.stats.get("cache") == "hit"
+            telemetry.counters["queries_served"] += int(payload.shape[0])
+            if degraded:
+                telemetry.counters["requests_degraded"] += 1
+            tr.annotate(outcome="served", degraded=degraded,
+                        cache=res.stats.get("cache", "off"),
+                        bucket=res.stats.get("bucket"),
+                        padded_q=res.stats.get("padded_q"),
+                        reranked=res.stats.get("reranked"),
+                        queries=int(payload.shape[0]), cache_hit=hit)
+            tr.finish()
         else:
             # write op: apply, then re-plan — a Searcher is a snapshot
-            # (manifest-pinned) session, so writes cost a plan rebuild
+            # (manifest-pinned) session.  If the mutation left the
+            # manifest epoch unchanged (no-op delete, memtable-only
+            # upsert below the seal threshold) the pinned snapshot is
+            # still the authoritative sealed state and the re-plan is
+            # skipped (counted; the write surfaces at the next
+            # structural re-plan under LSM snapshot semantics).
+            epoch_before = getattr(index, "epoch", None)
             if op == "upsert":
                 index.upsert(payload, vecs)
             else:
                 index.delete(payload)
-            searcher = make_searcher()
-            # warm every distinct request size, as at startup — a cold
-            # bucket after the re-plan would pollute the query p95/p99
-            for sz in sorted(set(sizes)):
-                jax.block_until_ready(searcher(queries[:sz]).ids)
+            replanned = epoch_before is None or index.epoch != epoch_before
+            if replanned:
+                searcher, searcher_deg = make_searchers()
+                replan_gen[0] += 1
+                serve_primary, serve_deg = wrap(searcher), wrap(searcher_deg)
+                # warm every distinct request size, as at startup — a
+                # cold bucket after the re-plan would pollute the query
+                # p95/p99
+                warm(searcher, searcher_deg)
+                telemetry.counters["replans"] += 1
+            else:
+                telemetry.counters["replans_avoided"] += 1
             write_latencies.append(time.perf_counter() - t_req)
             writes += len(payload)
+            telemetry.event("write", op=op, rows=int(len(payload)),
+                            replanned=replanned, epoch=index.epoch
+                            if epoch_before is not None else None)
     dt = time.perf_counter() - t0
 
+    if maint is not None:
+        maint.stop()
+
     n_req = len(latencies)
-    p50, p95, p99 = (float(np.percentile(latencies, p)) for p in (50, 95, 99))
     # query throughput excludes write ops' apply+replan+re-warm time —
     # that cost is reported separately below
     query_dt = max(dt - sum(write_latencies), 1e-9)
     print(f"[serve] {served} queries / {n_req} requests in {dt:.3f}s -> "
           f"{served / query_dt:.1f} QPS (k={args.k}, corpus={index.n}, "
           f"kind={index.kind})")
-    print(f"[serve] latency p50={p50 * 1e3:.2f}ms p95={p95 * 1e3:.2f}ms "
-          f"p99={p99 * 1e3:.2f}ms")
+    if latencies:
+        p50, p95, p99 = (float(np.percentile(latencies, p))
+                         for p in (50, 95, 99))
+        print(f"[serve] latency p50={p50 * 1e3:.2f}ms p95={p95 * 1e3:.2f}ms "
+              f"p99={p99 * 1e3:.2f}ms")
     if write_latencies:
         print(f"[serve] writes: {writes} rows / {len(write_latencies)} ops, "
               f"apply+replan p50="
-              f"{float(np.percentile(write_latencies, 50)) * 1e3:.2f}ms; "
+              f"{float(np.percentile(write_latencies, 50)) * 1e3:.2f}ms "
+              f"replans={telemetry.counters['replans']} "
+              f"avoided={telemetry.counters['replans_avoided']}; "
               f"index now n={index.n} "
               f"segments={index.stats()['segments']} "
               f"tombstones={index.stats()['tombstones']}")
+    if cache is not None:
+        cs = cache.stats()
+        print(f"[serve] cache: hits={cs['hits']} misses={cs['misses']} "
+              f"evictions={cs['evictions']} entries={cs['entries']}"
+              + (f" ttl={cs['ttl_s']}s" if cs["ttl_s"] else ""))
+    if ctrl is not None:
+        c = telemetry.counters
+        print(f"[serve] admission: admit={c['admission_admit']} "
+              f"degrade={c['admission_degrade']} shed={c['admission_shed']} "
+              f"(queue={c['admission_shed_queue']} "
+              f"budget={c['admission_shed_budget']} "
+              f"deadline={c['admission_shed_deadline']}) "
+              f"shed_queries={c['admission_shed_queries']}")
+    if maint is not None:
+        c = telemetry.counters
+        print(f"[serve] maintenance: rounds={c['maintenance_rounds']} "
+              f"swaps={c['maintenance_swaps']} "
+              f"conflicts={c['maintenance_conflicts']} "
+              f"errors={c['maintenance_errors']}")
     # per-search engine accounting aggregated over the session (uniform
     # across kinds; DESIGN.md §8/§9) — means per request, plus totals for
     # the batch-cumulative keys (candidates/chunks/reranked are per-query
@@ -218,6 +438,15 @@ def main(argv: list[str] | None = None) -> None:
           + " ".join(f"{key}={means[key]:.1f}" for key in _AGG_KEYS))
     print(f"[serve] stats/session totals: "
           f"bytes_read={totals['bytes_read']} padded_q={totals['padded_q']}")
+
+    if args.telemetry_out:
+        telemetry.meta["report"] = {
+            "qps": served / query_dt, "served": served, "requests": n_req,
+            "writes": writes, **{f"mean_{k}": means[k] for k in _AGG_KEYS},
+        }
+        telemetry.to_json(args.telemetry_out)
+        print(f"[serve] telemetry -> {args.telemetry_out} "
+              f"({len(telemetry.events)} events)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,200 @@
+"""Hot-path cache tiers: exact-result cache and PQ LUT-block cache.
+
+Serving traffic is zipfian — a small set of hot queries repeats — and the
+Searcher recomputes every repeat from scratch.  Two tiers fix that
+(DESIGN.md §12):
+
+  * **result tier** (``CachedSearcher`` over a ``TTLLRUCache``): the
+    whole ``SearchResult`` keyed on a fingerprint of (query bytes, k,
+    params, index version).  A hit is **bit-identical** to the uncached
+    run — the cache stores the materialized score/id arrays the searcher
+    produced, so parity is structural, not approximate.  The version
+    component (serve wires the replan generation / manifest epoch in)
+    invalidates across mutations without any scan of the cache.
+  * **LUT tier** (``LUTCache`` installed via ``engine.set_lut_cache``):
+    per-query ADC lookup tables keyed on (query fingerprint, codebook
+    fingerprint, metric).  Repeated query batches skip the
+    ``build_pq_lut`` einsum + Eq. 1 int8 quantization on the eager/
+    one-shot path.  Inside a jitted Searcher bucket the LUT is fused
+    into the compiled executable (queries are tracers there — the hook
+    detects that and stands aside), so this tier serves exactly the
+    paths the compiler cannot: eager search, one-shot sessions, and
+    ad-hoc rescoring.
+
+Both tiers share one eviction discipline: LRU bounded by ``capacity``
+plus an optional TTL (stale results must age out even if hot), and both
+surface ``hits/misses/evictions/expirations`` counters that serve.py
+merges into session stats and telemetry.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+import time
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+#: sentinel distinguishing "miss" from a cached None
+MISS = object()
+
+
+def fingerprint(*parts: Any) -> str:
+    """Stable blake2b fingerprint of arrays / bytes / scalars / strings.
+
+    Arrays hash over dtype + shape + raw bytes, so two batches fingerprint
+    equal iff they are bit-identical — the invariant the result tier's
+    bit-parity guarantee rests on.
+    """
+    h = hashlib.blake2b(digest_size=16)
+    for p in parts:
+        if hasattr(p, "shape"):            # ndarray / jax.Array
+            a = np.asarray(p)
+            h.update(str(a.dtype).encode())
+            h.update(np.asarray(a.shape, np.int64).tobytes())
+            h.update(np.ascontiguousarray(a).tobytes())
+        elif isinstance(p, bytes):
+            h.update(p)
+        else:
+            h.update(repr(p).encode())
+        h.update(b"|")
+    return h.hexdigest()
+
+
+class TTLLRUCache:
+    """LRU cache with optional TTL and full hit/miss/eviction accounting.
+
+    ``clock`` is injectable (tests drive expiry deterministically).  Not
+    thread-safe by design: each tier lives on the request path of one
+    serving loop; the maintenance thread never touches caches.
+    """
+
+    def __init__(self, capacity: int, ttl_s: Optional[float] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        if capacity <= 0:
+            raise ValueError(f"cache capacity must be positive, got {capacity}")
+        if ttl_s is not None and ttl_s <= 0:
+            raise ValueError(f"cache ttl must be positive, got {ttl_s}")
+        self.capacity = int(capacity)
+        self.ttl_s = ttl_s
+        self.clock = clock
+        self._d: collections.OrderedDict[Any, tuple[float, Any]] = (
+            collections.OrderedDict()
+        )
+        self.counters = collections.Counter(
+            hits=0, misses=0, evictions=0, expirations=0
+        )
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def get(self, key):
+        """Cached value or the ``MISS`` sentinel (counts either way)."""
+        entry = self._d.get(key)
+        if entry is not None:
+            t, value = entry
+            if self.ttl_s is not None and self.clock() - t > self.ttl_s:
+                del self._d[key]
+                self.counters["expirations"] += 1
+            else:
+                self._d.move_to_end(key)
+                self.counters["hits"] += 1
+                return value
+        self.counters["misses"] += 1
+        return MISS
+
+    def put(self, key, value) -> None:
+        if key in self._d:
+            del self._d[key]
+        self._d[key] = (self.clock(), value)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+            self.counters["evictions"] += 1
+
+    def get_or_build(self, key, builder: Callable[[], Any]):
+        v = self.get(key)
+        if v is MISS:
+            v = builder()
+            self.put(key, v)
+        return v
+
+    def clear(self) -> None:
+        self._d.clear()
+
+    def stats(self) -> dict:
+        return {"entries": len(self._d), "capacity": self.capacity,
+                "ttl_s": self.ttl_s, **self.counters}
+
+
+class LUTCache(TTLLRUCache):
+    """The PQ LUT-block tier — install with ``engine.set_lut_cache``.
+
+    Keys combine the query-batch fingerprint with a fingerprint of the
+    store's codebooks (not ``id(store)``: object ids can be recycled,
+    array bytes cannot lie), so a cache shared across indexes can never
+    serve one index's tables to another.
+    """
+
+    def key_for(self, queries, codebooks, metric: str, lpq: bool):
+        return ("lut", fingerprint(queries), fingerprint(codebooks),
+                metric, bool(lpq))
+
+
+@dataclasses.dataclass
+class _CachedEntry:
+    scores: np.ndarray
+    ids: np.ndarray
+    stats: dict
+
+
+class CachedSearcher:
+    """The result tier: a drop-in wrapper over a planned ``Searcher``.
+
+    ``version`` feeds the cache key — serve passes a callable returning
+    its replan generation (bumped on every re-plan, i.e. whenever the
+    pinned snapshot changes), so entries from a superseded snapshot can
+    never satisfy a fresh request.  Hits return the stored arrays
+    verbatim (bit-identical to the miss that produced them) with
+    ``stats["cache"] = "hit"`` and zeroed read accounting — a hit reads
+    no corpus bytes, and the session totals should say so.
+    """
+
+    def __init__(self, searcher, cache: TTLLRUCache,
+                 version: Callable[[], Any] = lambda: 0):
+        self.searcher = searcher
+        self.cache = cache
+        self.version = version
+
+    @property
+    def rerank(self):
+        return self.searcher.rerank
+
+    @property
+    def n_shards(self) -> int:
+        return self.searcher.n_shards
+
+    def buckets_for(self, q_len: int):
+        return self.searcher.buckets_for(q_len)
+
+    def _key(self, q: np.ndarray):
+        s = self.searcher
+        return ("result", fingerprint(q), s.k, s.params, self.version())
+
+    def __call__(self, queries):
+        q = np.asarray(queries)
+        key = self._key(q)
+        entry = self.cache.get(key)
+        if entry is not MISS:
+            stats = dict(entry.stats)
+            stats.update(cache="hit", bytes_read=0, chunks=0, rerank_bytes=0)
+            from repro.knn import base as B
+
+            return B.SearchResult(entry.scores, entry.ids, stats)
+        res = self.searcher(q)
+        scores = np.asarray(res.scores)
+        ids = np.asarray(res.ids)
+        self.cache.put(key, _CachedEntry(scores, ids, dict(res.stats)))
+        res.stats["cache"] = "miss"
+        return res

@@ -1,0 +1,153 @@
+"""Background maintenance: compaction and drift-triggered recalibration
+off the request path.
+
+``MutableIndex.compact()`` blocks its caller for the whole merge build —
+in a serving loop that cost lands on request latency.  The
+``MaintenanceScheduler`` moves it to a daemon thread using the stream
+layer's three-phase protocol (DESIGN.md §12):
+
+    1. ``index.compact_snapshot()``   freeze the group under the write
+                                      lock (copy-only), release the lock
+    2. (off-lock)                     build the merged segment — the
+                                      expensive inner-index build +
+                                      possible Eq. 1 re-fit — while the
+                                      request path keeps serving
+    3. ``index.apply_compaction()``   atomic manifest swap under the
+                                      lock; concurrent deletes re-applied,
+                                      competing swaps detected and dropped
+
+Triggers, checked every ``interval_s``:
+
+  * **structural** — the compactor's own ``should_compact`` (too many
+    segments), running the policy's group pick;
+  * **drift** — ``stats()["max_drift"]`` beyond the compaction policy's
+    ``drift_threshold``: a *full* snapshot-compaction with
+    recalibration, repairing the §3.2 data-driven constants the insert
+    stream has left behind.
+
+The exact-parity invariant survives the background path: a full
+snapshot-compaction with no concurrent writes swaps in a segment
+bit-identical to a from-scratch build on ``live_items()``
+(tests/test_runtime.py re-asserts it through these hooks).
+
+``run_once`` is the synchronous entry (tests, serve's drain step);
+``start``/``stop`` manage the thread.  All outcomes are counted into the
+shared telemetry counters and logged as ``maintenance/*`` spans.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+
+class MaintenanceScheduler:
+    """Drives background compaction/recalibration for one mutable index."""
+
+    def __init__(
+        self,
+        index,
+        *,
+        interval_s: float = 0.25,
+        drift_threshold: Optional[float] = None,
+        telemetry=None,
+    ):
+        if not hasattr(index, "compact_snapshot"):
+            raise TypeError(
+                f"maintenance needs a mutable (stream) index, got "
+                f"{getattr(index, 'kind', type(index).__name__)!r}"
+            )
+        self.index = index
+        self.interval_s = float(interval_s)
+        # None -> the index's own compaction policy threshold
+        self.drift_threshold = (
+            float(drift_threshold) if drift_threshold is not None
+            else float(index.policy.drift_threshold)
+        )
+        self.telemetry = telemetry
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        import collections
+
+        self.counters = (telemetry.counters if telemetry is not None
+                         else collections.Counter())
+
+    # -- triggers ----------------------------------------------------------
+    def _trigger(self) -> Optional[str]:
+        idx = self.index
+        if idx.compactor.should_compact(idx.manifest.segments):
+            return "segments"
+        st = idx.stats()
+        if (st["segments"] > 0 and self.drift_threshold > 0
+                and st["max_drift"] > self.drift_threshold):
+            return "drift"
+        return None
+
+    # -- one maintenance round --------------------------------------------
+    def run_once(self, force_full: bool = False) -> dict:
+        """Check triggers; if one fires, snapshot-compact and swap.
+
+        Returns an outcome record (also appended to telemetry):
+        ``{"ran": bool, "trigger": ..., "swapped": bool, ...}``.
+        """
+        trigger = "forced" if force_full else self._trigger()
+        if trigger is None:
+            return {"ran": False}
+        full = force_full or trigger == "drift"
+        out = {"ran": True, "trigger": trigger, "full": full, "swapped": False}
+
+        def round_():
+            pending = self.index.compact_snapshot(full=full)
+            if pending is None:
+                out["empty"] = True
+                return
+            out["swapped"] = bool(self.index.apply_compaction(pending))
+            out["recalibrated"] = pending.recalibrated
+            out["epoch"] = self.index.epoch
+
+        if self.telemetry is not None:
+            with self.telemetry.span("maintenance/compact", trigger=trigger):
+                round_()
+        else:
+            round_()
+        self.counters["maintenance_rounds"] += 1
+        if out["swapped"]:
+            self.counters["maintenance_swaps"] += 1
+        elif not out.get("empty"):
+            self.counters["maintenance_conflicts"] += 1
+        if self.telemetry is not None:
+            self.telemetry.event("maintenance", **out)
+        return out
+
+    # -- thread lifecycle --------------------------------------------------
+    def start(self) -> "MaintenanceScheduler":
+        if self._thread is not None:
+            return self
+        self._stop.clear()
+        self._thread = threading.Thread(
+            target=self._loop, name="repro-maintenance", daemon=True
+        )
+        self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.interval_s):
+            try:
+                self.run_once()
+            except Exception as e:  # noqa: BLE001 — never kill the server
+                self.counters["maintenance_errors"] += 1
+                if self.telemetry is not None:
+                    self.telemetry.event("maintenance_error", error=repr(e))
+
+    def stop(self, timeout: float = 10.0) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join(timeout)
+        self._thread = None
+
+    def __enter__(self) -> "MaintenanceScheduler":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

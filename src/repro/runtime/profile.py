@@ -1,0 +1,218 @@
+"""Named runtime profiles: one reproducible environment per serve/bench run.
+
+Every serve report and ``BENCH_*.json`` so far recorded *ad-hoc* backend
+state — whatever platform/XLA flags the process happened to inherit.  A
+``RuntimeProfile`` makes that state a named, versioned artifact (in the
+spirit of bayespec's ``elisa/util/config.py`` environment helpers):
+platform/backend selection, an XLA flag set, host-core pinning
+(``--xla_force_host_platform_device_count``), the NaN-debug toggle, x64,
+and the deterministic-seed policy are resolved **once at process start**
+(``resolve`` + ``apply``) and stamped into every report (``stamp``), so
+CPU-interpret numbers can never be mistaken for hardware numbers and two
+runs of the same profile are comparable by construction.
+
+    from repro.runtime import profile as rt
+    rt.apply(rt.resolve("ci-cpu"))      # before the first jax op
+    meta["runtime"] = rt.stamp()        # in every BENCH_*.json / report
+
+Selection order: explicit name > ``REPRO_RUNTIME_PROFILE`` env var >
+``"default"``.  ``apply`` must run before JAX initializes its backend —
+platform/host-device-count/XLA flags are start-of-process knobs (the
+same contract as bayespec's ``set_platform``/``set_cpu_cores``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import platform as _platform
+import warnings
+from typing import Optional
+
+ENV_VAR = "REPRO_RUNTIME_PROFILE"
+
+_PROFILE_FIELDS = ("name", "platform", "host_device_count", "xla_flags",
+                   "nan_debug", "x64", "seed", "deterministic")
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeProfile:
+    """One named runtime environment, resolved at process start.
+
+    name               registry key, stamped into every artifact
+    platform           forced jax platform ("cpu"/"gpu"/"tpu"); None =
+                       let jax pick (the honest-autodetect default)
+    host_device_count  pin this many host CPU devices
+                       (``--xla_force_host_platform_device_count`` — the
+                       sharded-serving / core-pinning knob); None = leave
+    xla_flags          extra XLA_FLAGS tokens appended to the environment
+    nan_debug          ``jax_debug_nans`` (fail fast on NaN scores)
+    x64                ``jax_enable_x64``
+    seed               the deterministic-seed policy: the base PRNG seed
+                       every profiled entry point derives its keys from
+    deterministic      False marks a profile whose runs are *expected* to
+                       differ (e.g. time-seeded soak runs) — stamped so
+                       the trend gate can refuse to compare them
+    """
+
+    name: str
+    platform: Optional[str] = None
+    host_device_count: Optional[int] = None
+    xla_flags: tuple[str, ...] = ()
+    nan_debug: bool = False
+    x64: bool = False
+    seed: int = 0
+    deterministic: bool = True
+
+    # -- (de)serialization round-trip --------------------------------------
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["xla_flags"] = list(self.xla_flags)
+        return d
+
+    @staticmethod
+    def from_dict(d: dict) -> "RuntimeProfile":
+        unknown = set(d) - set(_PROFILE_FIELDS)
+        if unknown:
+            raise ValueError(f"unknown RuntimeProfile fields: {sorted(unknown)}")
+        d = dict(d)
+        d["xla_flags"] = tuple(d.get("xla_flags") or ())
+        return RuntimeProfile(**d)
+
+
+#: the named registry — every entry point resolves one of these (or a
+#: user-registered one) so serving/bench environments are enumerable
+PROFILES: dict[str, RuntimeProfile] = {
+    # honest autodetect: no forcing, deterministic seed 0
+    "default": RuntimeProfile(name="default"),
+    # single-process CPU dev box: pin platform so a stray GPU/TPU plugin
+    # cannot silently change the numbers a debug session reproduces
+    "cpu-dev": RuntimeProfile(name="cpu-dev", platform="cpu"),
+    # CI profile: CPU, one pinned host device, NaN debugging off, fixed
+    # seed — the environment every BENCH_*.json trend point shares
+    "ci-cpu": RuntimeProfile(name="ci-cpu", platform="cpu",
+                             host_device_count=1),
+    # sharded-serving rehearsal on one host: 4 pinned host devices so
+    # mesh plans (serve --shards) exercise the real collective paths
+    "cpu-mesh4": RuntimeProfile(name="cpu-mesh4", platform="cpu",
+                                host_device_count=4),
+    # debugging: fail fast on NaN scores (Eq. 1 constant bugs surface as
+    # NaN after division by zero-σ dims)
+    "debug-nan": RuntimeProfile(name="debug-nan", platform="cpu",
+                                nan_debug=True),
+    # TPU serving: leave the platform to autodetect-with-tpu-preference
+    # and enable the latency-hiding scheduler class of flags
+    "tpu-serve": RuntimeProfile(
+        name="tpu-serve", platform="tpu",
+        xla_flags=("--xla_tpu_enable_latency_hiding_scheduler=true",),
+    ),
+}
+
+#: the profile ``apply`` actually installed in this process (at most one)
+_ACTIVE: Optional[RuntimeProfile] = None
+
+
+def register(profile: RuntimeProfile) -> RuntimeProfile:
+    """Add/replace a named profile (config files can extend the registry)."""
+    PROFILES[profile.name] = profile
+    return profile
+
+
+def resolve(name: Optional[str] = None) -> RuntimeProfile:
+    """Resolve a profile: explicit name > $REPRO_RUNTIME_PROFILE > default."""
+    name = name or os.environ.get(ENV_VAR) or "default"
+    try:
+        return PROFILES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown runtime profile {name!r}; registered: "
+            f"{sorted(PROFILES)}"
+        ) from None
+
+
+def apply(profile: RuntimeProfile) -> RuntimeProfile:
+    """Install ``profile`` into this process (idempotent per profile).
+
+    Must run before the first jax operation: platform selection, host
+    device count and XLA flags only take effect at backend init.  A
+    second ``apply`` of the *same* profile is a no-op; a different one
+    warns and is ignored (the backend is already up — restart to switch).
+    """
+    global _ACTIVE
+    import jax
+
+    if _ACTIVE is not None:
+        if profile.name != _ACTIVE.name:
+            warnings.warn(
+                f"runtime profile {_ACTIVE.name!r} already applied; ignoring "
+                f"{profile.name!r} (profiles are process-start state)",
+                RuntimeWarning, stacklevel=2,
+            )
+        return _ACTIVE
+
+    tokens = list(profile.xla_flags)
+    if profile.host_device_count is not None:
+        tokens.append("--xla_force_host_platform_device_count="
+                      f"{int(profile.host_device_count)}")
+    if tokens:
+        existing = os.environ.get("XLA_FLAGS", "")
+        fresh = [t for t in tokens if t not in existing.split()]
+        if fresh:
+            os.environ["XLA_FLAGS"] = (existing + " " + " ".join(fresh)).strip()
+    if profile.platform is not None:
+        jax.config.update("jax_platform_name", profile.platform)
+    jax.config.update("jax_debug_nans", bool(profile.nan_debug))
+    jax.config.update("jax_enable_x64", bool(profile.x64))
+    _ACTIVE = profile
+    return profile
+
+
+def active() -> RuntimeProfile:
+    """The applied profile, or the resolved-but-unapplied default — so
+    ``stamp`` always has a name to report."""
+    return _ACTIVE if _ACTIVE is not None else resolve()
+
+
+def key(profile: Optional[RuntimeProfile] = None):
+    """The profile's deterministic base PRNG key (seed policy in one place)."""
+    import jax
+
+    return jax.random.PRNGKey((profile or active()).seed)
+
+
+def stamp(profile: Optional[RuntimeProfile] = None) -> dict:
+    """The runtime-metadata block every report/BENCH_*.json embeds.
+
+    Resolved *facts* (backend, device kind, device count, interpret-mode
+    flag) alongside the profile that asked for them — ``interpret`` is
+    the "honest perf story" bit: True means every Pallas number in the
+    artifact ran in CPU interpret mode and is a parity signal, not a
+    hardware perf signal.
+    """
+    import jax
+
+    p = profile or active()
+    backend = jax.default_backend()
+    dev = jax.devices()[0]
+    return {
+        "profile": p.name,
+        "applied": _ACTIVE is not None,
+        "backend": backend,
+        "device_kind": getattr(dev, "device_kind", str(dev)),
+        "n_devices": len(jax.devices()),
+        "interpret": backend != "tpu",
+        "platform": _platform.platform(),
+        "jax_version": jax.__version__,
+        "seed": p.seed,
+        "deterministic": p.deterministic,
+        "nan_debug": p.nan_debug,
+        "x64": p.x64,
+        "xla_flags": list(p.xla_flags),
+        "host_device_count": p.host_device_count,
+    }
+
+
+def _reset_for_tests() -> None:
+    """Test hook: forget the applied profile (config flags stay as-is)."""
+    global _ACTIVE
+    _ACTIVE = None

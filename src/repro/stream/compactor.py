@@ -26,7 +26,7 @@ arrival order, so the internal id space stays a stable arrival log.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 import numpy as np
@@ -108,23 +108,23 @@ class Compactor:
             for seg in group
         )
 
-    def merge(
+    def freeze(
         self,
         group: list[Segment],
         *,
         live_stats: St.DimStats,
-        key: jax.Array,
         recalibrate: Optional[bool] = None,
-    ) -> tuple[Optional[Segment], bool]:
-        """Merge a segment group into one (None if nothing survives).
+    ) -> "FrozenMerge | None":
+        """Snapshot everything a merge needs from the (mutable) group:
+        surviving rows, external ids, the recalibrate verdict, and — on
+        the reuse path — the frozen constants + pooled calibration.
 
-        Returns (segment, recalibrated).  ``recalibrate=None`` lets the
-        drift policy decide (reuse only happens when the group shares
-        bit-identical constants and nothing drifted); True forces a
-        fresh fit (the full-compaction / exact-parity path); False
-        forces reuse of ``group[0]``'s constants even across a
-        mixed-constant group — deliberately unchecked, it is the
-        stale-compaction arm ``bench_stream`` measures recall decay on.
+        This is the cheap, copy-only half of :meth:`merge`.  The caller
+        holds the index's write lock across ``freeze`` and releases it
+        before the expensive :meth:`build`, which is how background
+        compaction stays off the request path (DESIGN.md §12): after
+        ``freeze`` the merge is a pure function of the snapshot, immune
+        to concurrent tombstones (those are re-applied at swap time).
         """
         from repro.knn.spec import parse_factory
 
@@ -136,7 +136,7 @@ class Compactor:
         vectors = np.concatenate(vecs)
         ext_ids = np.concatenate(ids)
         if vectors.shape[0] == 0:
-            return None, recalibrate
+            return None
 
         spec = parse_factory(self.inner_factory, metric=self.metric)
         if self.inner_overrides:
@@ -155,7 +155,52 @@ class Compactor:
             calib = group[0].calib
             for seg in group[1:]:
                 calib = St.merge_stats(calib, seg.calib)
-        return (
-            Segment.seal(vectors, ext_ids, spec, key=key, calib=calib),
-            recalibrate,
-        )
+        return FrozenMerge(vectors, ext_ids, spec, calib, bool(recalibrate))
+
+    @staticmethod
+    def build(frozen: "FrozenMerge", *, key: jax.Array) -> Segment:
+        """The expensive half: seal the frozen rows into the merged
+        segment (inner-index build, possibly re-learning Eq. 1 constants).
+        Pure w.r.t. the live index — safe to run off the write lock."""
+        return Segment.seal(frozen.vectors, frozen.ext_ids, frozen.spec,
+                            key=key, calib=frozen.calib)
+
+    def merge(
+        self,
+        group: list[Segment],
+        *,
+        live_stats: St.DimStats,
+        key: jax.Array,
+        recalibrate: Optional[bool] = None,
+    ) -> tuple[Optional[Segment], bool]:
+        """Merge a segment group into one (None if nothing survives).
+
+        Returns (segment, recalibrated).  ``recalibrate=None`` lets the
+        drift policy decide (reuse only happens when the group shares
+        bit-identical constants and nothing drifted); True forces a
+        fresh fit (the full-compaction / exact-parity path); False
+        forces reuse of ``group[0]``'s constants even across a
+        mixed-constant group — deliberately unchecked, it is the
+        stale-compaction arm ``bench_stream`` measures recall decay on.
+
+        ``merge`` == ``freeze`` + ``build`` done synchronously; the
+        background path calls the halves separately.
+        """
+        if recalibrate is None:
+            recalibrate = self.needs_recalibration(group, live_stats)
+        frozen = self.freeze(group, live_stats=live_stats,
+                             recalibrate=recalibrate)
+        if frozen is None:
+            return None, bool(recalibrate)
+        return self.build(frozen, key=key), frozen.recalibrated
+
+
+@dataclasses.dataclass(frozen=True)
+class FrozenMerge:
+    """The lock-free snapshot a merge is built from (see ``freeze``)."""
+
+    vectors: np.ndarray
+    ext_ids: np.ndarray
+    spec: Any
+    calib: Optional[St.DimStats]
+    recalibrated: bool

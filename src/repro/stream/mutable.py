@@ -32,6 +32,7 @@ scores/ids straight through.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Optional
 
 import jax
@@ -49,6 +50,27 @@ from repro.stream.memtable import Memtable, as_id_array
 from repro.stream.segment import Segment, _stats_arrays, _stats_from_arrays
 
 DEFAULT_SEAL_THRESHOLD = 4096
+
+
+@dataclasses.dataclass
+class PendingCompaction:
+    """A compaction prepared off-lock, awaiting its atomic swap.
+
+    ``group`` holds the *identity* of the input segments (the swap
+    refuses to apply if any has since been replaced by a competing
+    compaction), ``live_snapshot`` their tombstone bitmaps at snapshot
+    time (deletes that land during the background build are re-applied
+    to ``merged`` at swap time, so nothing resurrects), ``merged`` the
+    built replacement (None = everything was dead), ``epoch`` the
+    manifest epoch the snapshot was taken at (reporting/debugging).
+    """
+
+    group: list
+    live_snapshot: list[np.ndarray]
+    merged: Optional[Segment]
+    recalibrated: bool
+    epoch: int
+    full: bool = False
 
 
 @registry.register("stream")
@@ -99,7 +121,13 @@ class MutableIndex:
                                    self.policy, self.inner_overrides)
         self._key = key if key is not None else jax.random.PRNGKey(0)
         self.counters = {"seals": 0, "compactions": 0, "recalibrations": 0,
-                         "upserts": 0, "deletes": 0}
+                         "upserts": 0, "deletes": 0, "swap_conflicts": 0}
+        # serializes writes/seals/compaction swaps against each other and
+        # against plan-time snapshot assembly; reentrant because compact
+        # -> _seal -> maybe_compact nests.  The expensive background
+        # merge *build* runs outside this lock (compact_snapshot /
+        # apply_compaction) — that is the off-request-path contract.
+        self._lock = threading.RLock()
 
     # -- construction ------------------------------------------------------
     @staticmethod
@@ -173,6 +201,13 @@ class MutableIndex:
         return self.manifest.live_rows + self.memtable.live_count
 
     @property
+    def epoch(self) -> int:
+        """Manifest epoch: bumps on every structural change (seal /
+        compaction swap / segment-hitting delete).  Serve's write path
+        skips the session re-plan when a mutation leaves it unchanged."""
+        return self.manifest.epoch
+
+    @property
     def quantized(self) -> bool:
         return "lpq" in self.inner_factory
 
@@ -224,34 +259,38 @@ class MutableIndex:
         """Insert-or-replace rows by external id; returns rows written.
         Replaced copies in sealed segments become tombstones; the new
         rows are searchable from the next plan."""
-        vectors = np.asarray(vectors, np.float32)
-        ids = self.memtable.upsert(ids, vectors)
-        self.manifest.delete(ids)            # shadow sealed copies
-        self.live_stats.update(jnp.asarray(vectors))
-        self.counters["upserts"] += int(ids.size)
-        while self.memtable.full:
-            self._seal()
-        return int(ids.size)
+        with self._lock:
+            vectors = np.asarray(vectors, np.float32)
+            ids = self.memtable.upsert(ids, vectors)
+            self.manifest.delete(ids)            # shadow sealed copies
+            self.live_stats.update(jnp.asarray(vectors))
+            self.counters["upserts"] += int(ids.size)
+            while self.memtable.full:
+                self._seal()
+            return int(ids.size)
 
     def delete(self, ids) -> int:
         """Tombstone rows by external id wherever they live; returns how
         many live rows were deleted."""
-        ids = as_id_array(ids)
-        hit = self.memtable.delete(ids) + self.manifest.delete(ids)
-        self.counters["deletes"] += hit
-        return hit
+        with self._lock:
+            ids = as_id_array(ids)
+            hit = self.memtable.delete(ids) + self.manifest.delete(ids)
+            self.counters["deletes"] += hit
+            return hit
 
     def _seal(self) -> None:
-        vecs, ids = self.memtable.snapshot()
-        self.memtable.clear()
-        if not vecs.shape[0]:
-            return
-        self.manifest.add(
-            Segment.seal(vecs, ids, self._inner_spec(), key=self._next_key())
-        )
-        self.counters["seals"] += 1
-        if self.auto_compact:
-            self.maybe_compact()
+        with self._lock:
+            vecs, ids = self.memtable.snapshot()
+            self.memtable.clear()
+            if not vecs.shape[0]:
+                return
+            self.manifest.add(
+                Segment.seal(vecs, ids, self._inner_spec(),
+                             key=self._next_key())
+            )
+            self.counters["seals"] += 1
+            if self.auto_compact:
+                self.maybe_compact()
 
     # -- compaction --------------------------------------------------------
     def seal(self) -> None:
@@ -274,29 +313,104 @@ class MutableIndex:
         compaction defaults to True: re-learn Eq. 1 constants from
         exactly the surviving rows — the from-scratch-parity path);
         False forces constant reuse (the stale arm bench_stream measures
-        against).  Returns whether anything changed."""
-        if full:
-            self._seal()
-            group = list(self.manifest.segments)
+        against).  Returns whether anything changed.
+
+        This is the synchronous (caller-blocking) path; the serving loop
+        uses :meth:`compact_snapshot` + :meth:`apply_compaction` to run
+        the merge build off the request path."""
+        with self._lock:
+            if full:
+                self._seal()
+                group = list(self.manifest.segments)
+                if not group:
+                    return False
+                merged, recal = self.compactor.merge(
+                    group, live_stats=self.live_stats.stats,
+                    key=self._next_key(),
+                    recalibrate=True if recalibrate is None else recalibrate,
+                )
+            else:
+                group = self.compactor.pick_group(self.manifest.segments)
+                if not group:
+                    return False
+                merged, recal = self.compactor.merge(
+                    group, live_stats=self.live_stats.stats,
+                    key=self._next_key(), recalibrate=recalibrate,
+                )
+            self.manifest.replace(group, [merged] if merged else [])
+            self.counters["compactions"] += 1
+            self.counters["recalibrations"] += int(recal)
+            return True
+
+    # -- background compaction (snapshot -> build off-lock -> atomic swap) -
+    def compact_snapshot(
+        self, full: bool = False, recalibrate: Optional[bool] = None
+    ) -> Optional[PendingCompaction]:
+        """Phase 1+2 of background compaction: under the write lock,
+        pick the group and freeze its surviving rows (+ the recalibrate
+        verdict, tombstone bitmaps and epoch); then — **lock released**
+        — run the expensive merge build on the frozen snapshot.
+
+        Returns a :class:`PendingCompaction` to hand to
+        :meth:`apply_compaction`, or None when there is nothing to do.
+        Request-path impact is the lock hold of the copy-only freeze,
+        not the inner-index build (DESIGN.md §12)."""
+        with self._lock:
+            if full:
+                self._seal()
+                group = list(self.manifest.segments)
+                recal = True if recalibrate is None else recalibrate
+            else:
+                group = self.compactor.pick_group(self.manifest.segments)
+                recal = recalibrate
             if not group:
-                return False
-            merged, recal = self.compactor.merge(
-                group, live_stats=self.live_stats.stats,
-                key=self._next_key(),
-                recalibrate=True if recalibrate is None else recalibrate,
+                return None
+            live_snapshot = [seg.live.copy() for seg in group]
+            frozen = self.compactor.freeze(
+                group, live_stats=self.live_stats.stats, recalibrate=recal
             )
+            epoch = self.manifest.epoch
+            key = self._next_key()
+        # -- off-lock: the expensive part (inner build / Eq. 1 re-fit) ----
+        if frozen is None:
+            merged, recalibrated = None, bool(recal)
         else:
-            group = self.compactor.pick_group(self.manifest.segments)
-            if not group:
+            merged = self.compactor.build(frozen, key=key)
+            recalibrated = frozen.recalibrated
+        return PendingCompaction(group=group, live_snapshot=live_snapshot,
+                                 merged=merged, recalibrated=recalibrated,
+                                 epoch=epoch, full=bool(full))
+
+    def apply_compaction(self, pending: PendingCompaction) -> bool:
+        """Phase 3: the atomic manifest swap.  Under the write lock,
+        verify every input segment is still present (a competing
+        compaction invalidates the snapshot -> False, counted as a
+        ``swap_conflict``), re-apply tombstones that landed during the
+        build (snapshot-live rows now dead are deleted from the merged
+        segment, so concurrent deletes never resurrect), then swap the
+        group for the merged segment in one ``manifest.replace``.
+
+        Readers are never torn: a Searcher planned before the swap keeps
+        serving its pinned snapshot; the next plan sees the new manifest
+        (and its bumped epoch)."""
+        with self._lock:
+            current = self.manifest.segments
+            if any(seg not in current for seg in pending.group):
+                self.counters["swap_conflicts"] += 1
                 return False
-            merged, recal = self.compactor.merge(
-                group, live_stats=self.live_stats.stats,
-                key=self._next_key(), recalibrate=recalibrate,
-            )
-        self.manifest.replace(group, [merged] if merged else [])
-        self.counters["compactions"] += 1
-        self.counters["recalibrations"] += int(recal)
-        return True
+            merged = pending.merged
+            if merged is not None:
+                newly_dead = [
+                    seg.ext_ids[snap & ~seg.live]
+                    for seg, snap in zip(pending.group, pending.live_snapshot)
+                ]
+                dead_ids = np.concatenate(newly_dead) if newly_dead else None
+                if dead_ids is not None and dead_ids.size:
+                    merged.delete(dead_ids)
+            self.manifest.replace(pending.group, [merged] if merged else [])
+            self.counters["compactions"] += 1
+            self.counters["recalibrations"] += int(pending.recalibrated)
+            return True
 
     def live_items(self) -> tuple[np.ndarray, np.ndarray]:
         """(ext_ids [n], vectors [n, d]) of every live row in internal
@@ -340,62 +454,66 @@ class MutableIndex:
 
         sp = params or B.SearchParams()
         depth = rerank_depth or k
-        sources = []
-        for seg, base in zip(self.manifest.segments, self.manifest.bases()):
-            # over-fetch by the dead count so k live rows survive the
-            # tombstone mask on exact sources
-            kj = min(seg.n, depth + seg.dead_count)
-            sources.append((seg.index.plan(kj, sp), base, kj))
-        mvecs, mids = self.memtable.snapshot()
-        m = int(mvecs.shape[0])
-        if m:
-            mem_index = FlatIndex(
-                metric=self.metric,
-                store=engine.CodeStore.dense(jnp.asarray(mvecs)),
-            )
-            sources.append(
-                (mem_index.plan(min(m, depth), sp), self.manifest.total_rows,
-                 min(m, depth))
-            )
-
-        # manifest-side concatenated views + the memtable tail (all
-        # np.concatenate copies: a frozen snapshot of the mutable bitmaps)
-        id_map_np = self.manifest.id_map()
-        live_np = self.manifest.live_map()
-        if m:
-            id_map_np = np.concatenate([id_map_np, mids])
-            live_np = np.concatenate([live_np, np.ones(m, bool)])
-
-        rescore = len(sources) > 1 or rerank_depth is not None
-        merge_store = None
-        if rescore and sources:
-            if self.rerank_bits == 8:
-                # int8 merge codes need constants learned over the union
-                parts = ([self.manifest.raw_concat()]
-                         if self.manifest.segments else [])
-                if m:
-                    parts.append(mvecs)
-                merge_store = QuantSpec(bits=8).build_store(
-                    jnp.asarray(np.concatenate(parts))
+        # the whole snapshot assembly holds the write lock: a background
+        # compaction swap must never interleave between reading the
+        # segment list and the concatenated id/live/raw views
+        with self._lock:
+            sources = []
+            for seg, base in zip(self.manifest.segments, self.manifest.bases()):
+                # over-fetch by the dead count so k live rows survive the
+                # tombstone mask on exact sources
+                kj = min(seg.n, depth + seg.dead_count)
+                sources.append((seg.index.plan(kj, sp), base, kj))
+            mvecs, mids = self.memtable.snapshot()
+            m = int(mvecs.shape[0])
+            if m:
+                mem_index = FlatIndex(
+                    metric=self.metric,
+                    store=engine.CodeStore.dense(jnp.asarray(mvecs)),
                 )
-            else:                               # None / 32 -> exact fp32
-                merge_store = engine.CodeStore.concat(
-                    [engine.CodeStore.dense(jnp.asarray(seg.raw))
-                     for seg in self.manifest.segments]
-                    + ([engine.CodeStore.dense(jnp.asarray(mvecs))]
-                       if m else [])
+                sources.append(
+                    (mem_index.plan(min(m, depth), sp),
+                     self.manifest.total_rows, min(m, depth))
                 )
 
-        live = self.live_stats.stats
-        drifts = [seg.drift(live) for seg in self.manifest.segments]
-        finite = [x for x in drifts if np.isfinite(x)]
-        stats_extra = {
-            "segments": len(self.manifest.segments),
-            "memtable_rows": m,
-            "tombstones": self.manifest.tombstones,
-            "epoch": self.manifest.epoch,
-            "max_drift": max(finite) if finite else 0.0,
-        }
+            # manifest-side concatenated views + the memtable tail (all
+            # np.concatenate copies: a frozen snapshot of the bitmaps)
+            id_map_np = self.manifest.id_map()
+            live_np = self.manifest.live_map()
+            if m:
+                id_map_np = np.concatenate([id_map_np, mids])
+                live_np = np.concatenate([live_np, np.ones(m, bool)])
+
+            rescore = len(sources) > 1 or rerank_depth is not None
+            merge_store = None
+            if rescore and sources:
+                if self.rerank_bits == 8:
+                    # int8 merge codes need constants learned over the union
+                    parts = ([self.manifest.raw_concat()]
+                             if self.manifest.segments else [])
+                    if m:
+                        parts.append(mvecs)
+                    merge_store = QuantSpec(bits=8).build_store(
+                        jnp.asarray(np.concatenate(parts))
+                    )
+                else:                           # None / 32 -> exact fp32
+                    merge_store = engine.CodeStore.concat(
+                        [engine.CodeStore.dense(jnp.asarray(seg.raw))
+                         for seg in self.manifest.segments]
+                        + ([engine.CodeStore.dense(jnp.asarray(mvecs))]
+                           if m else [])
+                    )
+
+            live = self.live_stats.stats
+            drifts = [seg.drift(live) for seg in self.manifest.segments]
+            finite = [x for x in drifts if np.isfinite(x)]
+            stats_extra = {
+                "segments": len(self.manifest.segments),
+                "memtable_rows": m,
+                "tombstones": self.manifest.tombstones,
+                "epoch": self.manifest.epoch,
+                "max_drift": max(finite) if finite else 0.0,
+            }
         return multi_source_plan(
             sources,
             k=k,
