@@ -1,0 +1,196 @@
+"""Tuned-vs-default dispatch benchmark → ``BENCH_autotune.json``.
+
+Runs the measured autotuner (``repro.tune``) on this backend, then
+drives ``engine.topk`` through each kernel family twice — once with no
+table installed (today's hardcoded constants) and once with the fresh
+``TuneTable`` pinned — and reports the QPS ratio, the chosen config, and
+the fused-vs-scan crossover decision per arm:
+
+    fused_topk   int8 flat scan, ip
+    packed       int4 packed flat scan, l2
+    fused_adc    pq8x8+lpq ADC, ip
+    scan         angular (never fusable — pure chunk tuning; the smoke
+                 corpus is deliberately an awkward n=20480, where the
+                 default 16384 chunk pads to 32768 scored rows and the
+                 tuned chunk eliminates the waste)
+
+**Gate**: the tuned arm must be >= 1.0x default QPS on every arm.  By
+construction that holds when the tuner's hysteresis kept the default
+config (same config ⇒ same executable ⇒ ratio reported as exactly 1.0);
+when the tuner picked a different config, the pair is measured (and
+re-measured once on a sub-1.0 reading — shared-runner noise, not a real
+inversion, is the common cause) and a persistent sub-``--min-ratio``
+reading fails the run.  Both arms must also agree bitwise on the top-k
+*scores* (ids may legally permute within tied scores across different
+chunkings — score equality is the engine's cross-path invariant).
+
+On CPU all fused-kernel timings are interpret-mode parity signals
+(README "Autotuning"); the measured crossover therefore lands on the
+XLA scan, which is exactly the honest answer for this backend.
+
+    PYTHONPATH=src python -m benchmarks.bench_autotune            # full
+    PYTHONPATH=src python -m benchmarks.bench_autotune --smoke    # CI
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, runtime_meta, timeit
+from repro import engine
+from repro.knn import make_index
+from repro.tune import autotuner as AT
+from repro.tune import space as S
+from repro.tune import table as T
+
+K_TOP = 10
+
+
+def _arms(smoke: bool):
+    """(name, workload, factory spec) per benchmarked family — shapes
+    mirror ``autotuner.default_workloads`` so every arm's dispatch lookup
+    lands in a bucket the fresh table actually measured."""
+    ws = AT.default_workloads(smoke)
+    by_kernel = {w.kernel: w for w in ws}
+    out = []
+    for name, w in by_kernel.items():
+        if w.kernel == "fused_adc":
+            spec = f"pq{w.d}x{w.bits}+lpq"
+        elif w.bits == 4:
+            spec = "flat,lpq4"
+        else:
+            spec = "flat,lpq8"
+        out.append((name, w, spec))
+    return out
+
+
+def _build(w, spec):
+    dim = w.d * AT.ADC_DS if w.kernel == "fused_adc" else w.d
+    corpus = jax.random.normal(jax.random.PRNGKey(0), (w.n, dim)) * 0.1
+    queries = jax.random.normal(jax.random.PRNGKey(1), (w.q, dim)) * 0.1
+    kwargs = ({"kmeans_iters": 2, "key": jax.random.PRNGKey(2)}
+              if w.kernel == "fused_adc" else {})
+    idx = make_index(spec, corpus, metric=w.metric, **kwargs)
+    return idx.store, queries
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_autotune.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI shapes (small fused corpora, awkward scan n)")
+    ap.add_argument("--repeats", type=int, default=5,
+                    help="timing repeats when tuned != default config")
+    ap.add_argument("--min-ratio", type=float, default=1.0,
+                    help="tuned/default QPS floor that fails the run")
+    args = ap.parse_args(argv)
+
+    T.clear()                            # measure from a clean slate
+    table = AT.autotune(smoke=args.smoke, verbose=True)
+
+    results = {
+        "meta": {
+            "k": K_TOP,
+            "backend": jax.default_backend(),
+            "interpret": jax.default_backend() != "tpu",
+            "smoke": bool(args.smoke),
+            "table_hash": table.table_hash(),
+            "runtime": runtime_meta(),   # pre-install: untuned stamp
+        },
+        "cells": {},
+        "crossover": {},
+    }
+
+    failures, diverged = [], []
+    for name, w, spec in _arms(args.smoke):
+        store, queries = _build(w, spec)
+        entry = table.get(w.kernel, w.metric, w.bits, w.q, w.n, w.d)
+        assert entry is not None, f"tuner produced no entry for {w}"
+        default_cfg = S.default_config(w)
+        same = entry.dispatch_dict() == default_cfg.dispatch_dict()
+
+        def run(table_or_none):
+            with T.pinned(table_or_none):
+                return engine.topk(queries, store, K_TOP, w.metric)
+
+        s_def, i_def, st_def = run(None)
+        s_tun, i_tun, st_tun = run(table)
+        assert st_def["tuned"] is False and st_tun["tuned"] is True, (
+            f"{name}: dispatch did not consult the pinned table "
+            f"(stats {st_def.get('tuned')}/{st_tun.get('tuned')})"
+        )
+        if not np.array_equal(np.asarray(s_def), np.asarray(s_tun)):
+            diverged.append(name)
+
+        if same:
+            # identical dispatch ⇒ identical executable; one measurement,
+            # ratio exactly 1.0 (timing the same code twice only reports
+            # runner noise as a fake speedup/regression)
+            t_def = t_tun = timeit(lambda: run(None)[1],
+                                   repeats=max(1, args.repeats - 2))
+            ratio = 1.0
+        else:
+            for attempt in range(2):
+                t_def = timeit(lambda: run(None)[1], repeats=args.repeats)
+                t_tun = timeit(lambda: run(table)[1], repeats=args.repeats)
+                ratio = t_def / max(t_tun, 1e-12)
+                if ratio >= args.min_ratio:
+                    break
+            if ratio < args.min_ratio:
+                failures.append((name, ratio))
+
+        results["cells"][name] = {
+            "workload": {"metric": w.metric, "bits": w.bits, "q": w.q,
+                         "n": w.n, "d": w.d, "spec": spec},
+            "default_us": t_def * 1e6,
+            "tuned_us": t_tun * 1e6,
+            # deliberately NOT named *qps*: the ratio is this run's
+            # gate (below), not a trend.py-gated trajectory metric —
+            # which tuned config wins can legitimately differ run to run
+            "speedup_tuned_over_default": ratio,
+            "tuned_config": entry.dispatch_dict(),
+            "default_config": default_cfg.dispatch_dict(),
+            "config_changed": not same,
+        }
+        results["crossover"][name] = {
+            "chosen_impl": entry.impl,
+            "fused_candidates_exist": w.kernel != "scan",
+            "tuner_measured_us": entry.measured_us,
+            "tuner_default_us": entry.default_us,
+        }
+        emit(f"bench_autotune/{name}", t_tun,
+             f"ratio={ratio:.3f} impl={entry.impl} changed={not same}")
+
+    results["parity"] = {"diverged": diverged}
+    results["gate"] = {
+        "min_ratio": args.min_ratio,
+        "failed_arms": [n for n, _ in failures],
+        "any_strict_win": any(
+            c["speedup_tuned_over_default"] > 1.0
+            for c in results["cells"].values()
+        ),
+    }
+
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    print(f"[bench_autotune] wrote {args.out} "
+          f"({len(results['cells'])} arms, table {table.table_hash()})")
+
+    if diverged:
+        raise SystemExit(
+            f"tuned-vs-default score divergence in {diverged}: a tuned "
+            "config changed the exact top-k scores"
+        )
+    if failures:
+        raise SystemExit(
+            "tuned config slower than default on "
+            + ", ".join(f"{n} ({r:.3f}x)" for n, r in failures)
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -25,10 +25,11 @@ import glob
 import json
 import os
 
-PEAK_BF16 = 197e12
-PEAK_INT8 = 394e12
-HBM_BW = 819e9
-ICI_BW = 50e9
+# hardware peaks live with the tuning space (repro/tune/space.py): the
+# autotuner's candidate pruning and this table must price a byte/flop
+# identically, so there is exactly one copy of the constants
+from repro.tune.space import HBM_BW, ICI_BW, PEAK_BF16, PEAK_INT8
+
 CHIPS = 256
 DP, TP = 16, 16   # single-pod mesh factors
 

@@ -21,6 +21,7 @@ rtprofile.apply(rtprofile.resolve())
 
 from benchmarks import (  # noqa: E402 — profile must precede jax init
     bench_adc,
+    bench_autotune,
     bench_kernels,
     bench_serve,
     bench_stream,
@@ -44,6 +45,8 @@ SUITES = {
     "bench_serve": lambda: bench_serve.main(["--smoke"]),
     "bench_stream": lambda: bench_stream.main(["--smoke"]),
     "bench_adc": lambda: bench_adc.main(["--smoke"]),
+    # tuned-vs-default dispatch (runs the measured autotuner first)
+    "bench_autotune": lambda: bench_autotune.main(["--smoke"]),
     "table3": table3_graph_recall.main,
     "table1": table1_build_memory.main,
     "fig2": fig2_qps_recall.main,

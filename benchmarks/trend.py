@@ -25,6 +25,9 @@ two runs are not comparable by construction:
   * ``meta["smoke"]`` differs (smoke shapes vs full shapes);
   * the backend / interpret-mode / profile stamp differs (CPU-interpret
     numbers vs hardware numbers — the "honest perf story" rule);
+  * the TuneTable dispatch hash differs (``runtime.tune_table``): a run
+    served through measured tile tables is not the same machine as an
+    untuned or differently-tuned run;
   * either run's profile is marked non-deterministic.
 
     python -m benchmarks.trend --baseline-dir .bench-baseline BENCH_*.json
@@ -50,8 +53,11 @@ DEFAULT_RECALL_DROP = 0.01
 
 #: meta keys that must match for two runs to be comparable at all
 _META_KEYS = ("smoke", "backend")
-#: runtime-stamp keys that must match (profile/interpret/backend)
-_RUNTIME_KEYS = ("profile", "backend", "interpret")
+#: runtime-stamp keys that must match (profile/interpret/backend, plus
+#: the TuneTable dispatch hash — two runs dispatching through different
+#: measured tunings are different machines as far as QPS is concerned;
+#: old baselines without the key compare as None == None)
+_RUNTIME_KEYS = ("profile", "backend", "interpret", "tune_table")
 
 
 def walk_metrics(node, path: str = "") -> Iterator[tuple[str, str, float]]:
@@ -227,11 +233,22 @@ def _self_test() -> None:
         (r,) = run_gate([fp], base_dir)
         assert r["status"] == "skipped", r
 
-        # 5. missing baseline: skipped with a note
+        # 5. tuning flip: a run dispatching through a measured TuneTable
+        # must never be trended against an untuned (or differently
+        # tuned) baseline — refused on the dispatch hash, not failed
+        tuned = json.loads(json.dumps(bad))
+        tuned["meta"]["runtime"]["tune_table"] = "833e7be25e72d995"
+        with open(fp, "w") as f:
+            json.dump(tuned, f)
+        (r,) = run_gate([fp], base_dir)
+        assert r["status"] == "skipped" and "tune_table" in r["note"], r
+
+        # 6. missing baseline: skipped with a note
         (r,) = run_gate([fp], os.path.join(td, "nowhere"))
         assert r["status"] == "skipped" and "no baseline" in r["note"], r
     print("[trend] self-test OK (clean pass, noise tolerated, injected "
-          "QPS+recall regressions tripped, backend flip refused)")
+          "QPS+recall regressions tripped, backend and tuning flips "
+          "refused)")
 
 
 def main(argv: Optional[list[str]] = None) -> None:

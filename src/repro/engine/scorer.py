@@ -41,11 +41,13 @@ from repro.core import distances as D
 from repro.core import pack as PK
 from repro.engine.store import CodeStore, PQStore
 from repro.kernels import ops as K
+from repro.tune import table as T
 
 NEG = float(jnp.finfo(jnp.float32).min)
 
-#: corpus rows per fused-kernel tile (reporting; the kernel may shrink it
-#: for small corpora)
+#: corpus rows per fused-kernel tile — the *fallback* when no TuneTable
+#: entry matches (dispatch precedence: tuned table > these constants;
+#: the kernel may still shrink the tile for small corpora)
 FUSED_TILE = 512
 
 
@@ -241,6 +243,11 @@ def topk(
     already in the store's code space (skip ``encode_queries``).
     ``chunk`` sizes the scan chunks on the unfused path and caps the
     fused kernel's corpus tile (the working-set bound either way).
+
+    Dispatch consults the installed TuneTable first (``repro.tune``):
+    a matching entry decides fused-vs-scan and the tile/chunk shapes;
+    on a miss, today's constants apply unchanged.  ``stats["tuned"]``
+    records which happened.
     """
     if isinstance(store, PQStore):
         if metric == "angular":
@@ -248,30 +255,47 @@ def topk(
                 "PQ/ADC scoring supports ip and l2 only (see the dispatch "
                 "table in this module's docstring)"
             )
+        cfg = T.lookup("fused_adc", metric, store.bits,
+                       jnp.shape(queries)[0], store.n, store.m)
         s, i = _topk_pq(queries, store, k, metric, chunk,
-                        use_pallas=use_pallas, interpret=interpret)
+                        use_pallas=use_pallas, interpret=interpret, cfg=cfg)
         if s.shape[1] < k:               # uniform [Q, k] contract: -1 pads
             s = jnp.pad(s, ((0, 0), (0, k - s.shape[1])), constant_values=NEG)
             i = jnp.pad(i, ((0, 0), (0, k - i.shape[1])), constant_values=-1)
-        fused, tile = _pq_fused(store, metric, chunk, use_pallas, interpret)
+        fused, tile, chunk_eff = _pq_fused(store, metric, chunk,
+                                           use_pallas, interpret, cfg)
         if fused:
             n_chunks = -(-store.n // tile)
             # like the CodeStore kernel, the fused grid re-streams the
             # code matrix once per query tile (the LUT block is what
             # stays VMEM-resident, not the codes)
-            passes = max(1, -(-jnp.shape(queries)[0]
-                              // K.fused_adc_query_tile()))
+            bq = (cfg.bq if cfg is not None and cfg.bq is not None
+                  else K.fused_adc_query_tile())
+            passes = max(1, -(-jnp.shape(queries)[0] // bq))
         else:
-            n_chunks = max(1, -(-store.n // chunk))
+            n_chunks = max(1, -(-store.n // chunk_eff))
             passes = 1
         stats = search_stats(store, candidates=store.n, chunks=n_chunks,
                              rows_read=store.n * passes)
+        stats["tuned"] = cfg is not None
         return s, i, stats
 
     q = queries if prepared else store.encode_queries(queries)
     k_eff = min(k, store.n)
 
+    kernel = "packed" if store.packed else "fused_topk"
+    cfg = T.lookup(kernel if metric in ("ip", "l2") else "scan",
+                   metric, store.bits, jnp.shape(q)[0], store.n,
+                   jnp.shape(q)[1])
     tile = min(FUSED_TILE, max(8, chunk))
+    chunk_eff = chunk
+    bq = None
+    if cfg is not None:
+        if cfg.impl == "fused":
+            tile = cfg.bn or tile
+            bq = cfg.bq
+        else:                            # measured crossover says scan
+            chunk_eff = max(8, cfg.chunk or chunk)
     # The fused Pallas kernel is the TPU hot path (or forced via
     # interpret=True for CI wiring tests).  Off-TPU, interpret mode is a
     # parity tool, not a serving path — the XLA streaming scan is ~20x
@@ -282,20 +306,21 @@ def topk(
         metric in ("ip", "l2")
         and use_pallas
         and store.n > tile
+        and (cfg is None or cfg.impl == "fused")
         and (bool(interpret) or jax.default_backend() == "tpu")
     )
     if fused:
         s, i = K.fused_topk(
-            q, store.data, k_eff, metric, packed=store.packed, bn=tile,
-            interpret=interpret,
+            q, store.data, k_eff, metric, packed=store.packed,
+            bq=bq, bn=tile, interpret=interpret,
         )
         chunks = -(-store.n // tile)
-        # the fused grid re-streams the corpus once per BQ-row query tile
+        # the fused grid re-streams the corpus once per bq-row query tile
         # (queries are VMEM-resident within a tile, not across tiles)
-        passes = max(1, -(-q.shape[0] // K.fused_query_tile()))
+        passes = max(1, -(-q.shape[0] // (bq or K.fused_query_tile())))
     else:
-        s, i = _scan_topk(q, store, k_eff, metric, chunk)
-        chunks = max(1, -(-store.n // chunk))
+        s, i = _scan_topk(q, store, k_eff, metric, chunk_eff)
+        chunks = max(1, -(-store.n // chunk_eff))
         passes = 1                       # one scan, all queries resident
 
     if k_eff < k:                        # uniform [Q, k] contract: -1 pads
@@ -305,6 +330,7 @@ def topk(
         i = jnp.where(i >= 0, i + store.base, -1)
     stats = search_stats(store, candidates=store.n, chunks=chunks,
                          rows_read=store.n * passes)
+    stats["tuned"] = cfg is not None
     return s, i, stats
 
 
@@ -447,24 +473,35 @@ def quantize_pq_lut(lut: jax.Array) -> jax.Array:
 
 
 def _pq_fused(store: PQStore, metric: str, chunk: int,
-              use_pallas: bool, interpret) -> tuple[bool, int]:
-    """Fused-vs-reference dispatch for the ADC scan (and its tile size).
+              use_pallas: bool, interpret,
+              cfg=None) -> tuple[bool, int, int]:
+    """Fused-vs-reference dispatch for the ADC scan: (fused, fused tile,
+    scan chunk).
 
     The fused Pallas kernel needs integer LUTs (``lpq_tables``: int8
     entries it holds VMEM-resident and accumulates in int32); fp32-LUT
     stores take the streaming gather-sum scan.  Backend gating matches
     the CodeStore path: TPU hot path, ``interpret=True`` for CI wiring,
-    single-tile corpora skip the kernel.
+    single-tile corpora skip the kernel.  A TuneTable entry (``cfg``)
+    overrides the tile/chunk shapes and can force the measured
+    crossover's scan choice; the gating conditions still apply.
     """
     tile = min(FUSED_TILE, max(8, chunk))
+    chunk_eff = chunk
+    if cfg is not None:
+        if cfg.impl == "fused":
+            tile = cfg.bn or tile
+        else:
+            chunk_eff = max(8, cfg.chunk or chunk)
     fused = (
         metric in ("ip", "l2")
         and store.lpq_tables
         and use_pallas
         and store.n > tile
+        and (cfg is None or cfg.impl == "fused")
         and (bool(interpret) or jax.default_backend() == "tpu")
     )
-    return fused, tile
+    return fused, tile, chunk_eff
 
 
 #: optional runtime LUT-block cache (repro.runtime.cache.LUTCache) — the
@@ -501,6 +538,7 @@ def _topk_pq(
     chunk: int,
     use_pallas: bool = True,
     interpret: bool | None = None,
+    cfg=None,
 ):
     """Asymmetric distance computation over the code matrix.
 
@@ -524,11 +562,12 @@ def _topk_pq(
     else:
         lut = _prepare_pq_lut(queries, store, metric)
     return _topk_pq_from_lut(lut, store, k, metric, chunk,
-                             use_pallas=use_pallas, interpret=interpret)
+                             use_pallas=use_pallas, interpret=interpret,
+                             cfg=cfg)
 
 
 @partial(jax.jit, static_argnames=("k", "metric", "chunk", "use_pallas",
-                                   "interpret"))
+                                   "interpret", "cfg"))
 def _topk_pq_from_lut(
     lut: jax.Array,
     store: PQStore,
@@ -537,15 +576,18 @@ def _topk_pq_from_lut(
     chunk: int,
     use_pallas: bool = True,
     interpret: bool | None = None,
+    cfg=None,
 ):
     n = store.n
     k_eff = min(k, n)
 
-    fused, tile = _pq_fused(store, metric, chunk, use_pallas, interpret)
+    fused, tile, chunk = _pq_fused(store, metric, chunk, use_pallas,
+                                   interpret, cfg)
     if fused:
         return K.fused_adc_topk(lut, store.codes, k_eff,
-                                packed=store.packed, bn=tile,
-                                interpret=interpret)
+                                packed=store.packed,
+                                bq=(cfg.bq if cfg is not None else None),
+                                bn=tile, interpret=interpret)
 
     ilut = lut.astype(jnp.int32) if store.lpq_tables else lut
 

@@ -25,6 +25,7 @@ from repro.kernels import qmip as _qmip
 from repro.kernels import ql2 as _ql2
 from repro.kernels import quantize as _quantize
 from repro.kernels import ref as _ref
+from repro.tune import table as _tune
 
 
 def _on_tpu() -> bool:
@@ -36,10 +37,27 @@ def _round_up(n: int, m: int) -> int:
 
 
 def _pick_tile(n: int, pref: int, unit: int = 8) -> int:
-    """Largest tile <= pref that keeps padding waste small for tiny n."""
+    """Largest tile <= pref that keeps padding waste small for tiny n.
+
+    ``pref`` is rounded up to the unit first — a tuned (or caller-passed)
+    tile that is off-unit would otherwise leak an illegal block shape
+    into the kernel grid.
+    """
+    pref = max(unit, _round_up(pref, unit))
     if n >= pref:
         return pref
     return max(unit, _round_up(n, unit))
+
+
+# -- registered fallback rows: today's constants, the dispatch floor -------
+# (dispatch precedence is tuned table > these rows; DESIGN.md §13)
+_tune.register_fallback("fused_topk", _tune.TuneConfig(
+    "fused", bq=_fused.BQ, bn=_fused.BN, chunk=16384))
+_tune.register_fallback("packed", _tune.TuneConfig(
+    "fused", bq=_packed.BQ, bn=_packed.BN, chunk=16384))
+_tune.register_fallback("fused_adc", _tune.TuneConfig(
+    "fused", bq=_adc.BQ, bn=_adc.BN, chunk=16384))
+_tune.register_fallback("scan", _tune.TuneConfig("scan", chunk=16384))
 
 
 def _pad_rows(a: jax.Array, rows: int) -> jax.Array:
@@ -93,15 +111,45 @@ def ql2(
     return out[:Q, :N]
 
 
-def fused_query_tile() -> int:
+def fused_query_tile(
+    q: int | None = None,
+    n: int | None = None,
+    d: int | None = None,
+    *,
+    metric: str = "ip",
+    bits: int = 8,
+    packed: bool = False,
+) -> int:
     """Query rows per fused-kernel tile — the corpus re-stream granularity
-    (engine stats derive bytes_read from it; one source of truth)."""
-    return _fused.BQ
+    (engine stats derive bytes_read from it; one source of truth).
+
+    With a workload shape, the installed TuneTable is consulted first
+    (the entry's ``bq``); without one — or on a table miss — the kernel
+    family's registered fallback constant answers, exactly as before.
+    """
+    kernel = "packed" if packed else "fused_topk"
+    if q is not None and n is not None and d is not None:
+        cfg = _tune.lookup(kernel, metric, bits, q, n, d)
+        if cfg is not None and cfg.bq is not None:
+            return cfg.bq
+    return _tune.fallback(kernel).bq
 
 
-def fused_adc_query_tile() -> int:
-    """Query rows per fused-ADC tile (each carries its LUT block)."""
-    return _adc.BQ
+def fused_adc_query_tile(
+    q: int | None = None,
+    n: int | None = None,
+    m: int | None = None,
+    *,
+    metric: str = "ip",
+    bits: int = 8,
+) -> int:
+    """Query rows per fused-ADC tile (each carries its LUT block) —
+    table-first, registered constant as the fallback row."""
+    if q is not None and n is not None and m is not None:
+        cfg = _tune.lookup("fused_adc", metric, bits, q, n, m)
+        if cfg is not None and cfg.bq is not None:
+            return cfg.bq
+    return _tune.fallback("fused_adc").bq
 
 
 def _split_nibble_queries(q_codes: jax.Array):
@@ -164,7 +212,8 @@ def ql24(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "metric", "packed", "bn", "use_pallas", "interpret"),
+    static_argnames=("k", "metric", "packed", "bq", "bn", "use_pallas",
+                     "interpret"),
 )
 def fused_topk(
     q: jax.Array,
@@ -173,6 +222,7 @@ def fused_topk(
     metric: str,
     *,
     packed: bool = False,
+    bq: int | None = None,
     bn: int | None = None,
     use_pallas: bool = True,
     interpret: bool | None = None,
@@ -182,8 +232,10 @@ def fused_topk(
     ``metric`` is ``ip`` or ``l2`` (angular needs norm rescale — engine
     routes it to the unfused scan).  With ``packed=True``, ``x`` is
     [N, d/2] uint8 int4 codes and ``q`` full-width [Q, d] int4-valued
-    int8.  ``bn`` caps the corpus tile (the VMEM working-set knob).  The
-    [Q, N] score matrix never reaches HBM on the Pallas path;
+    int8.  ``bq`` overrides the query tile and ``bn`` caps the corpus
+    tile (the VMEM working-set knobs — tuned dispatch threads the
+    TuneTable entry through both; bare calls keep the family constants).
+    The [Q, N] score matrix never reaches HBM on the Pallas path;
     ``use_pallas=False`` is the XLA reference (materializes scores, used
     for parity tests and as the shard_map cell fallback).
     """
@@ -202,8 +254,10 @@ def fused_topk(
             s = D.scores(q, x, metric)
         return _ref.topk_ref(s, k, N)
     interp = (not _on_tpu()) if interpret is None else interpret
-    bq = _pick_tile(Q, _fused.BQ)
-    bn = _pick_tile(N, min(bn, _fused.BN) if bn else _fused.BN)
+    bq = _pick_tile(Q, bq or _fused.BQ)
+    # an explicit bn is honored (tuned tiles may exceed the constant —
+    # the tuning space owns the VMEM bound); bare calls keep the constant
+    bn = _pick_tile(N, bn or _fused.BN)
     if packed:
         qe, qo = _split_nibble_queries(q)
         qe = _pad_rows(qe, _round_up(Q, bq))
@@ -224,7 +278,8 @@ def fused_topk(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "packed", "bn", "use_pallas", "interpret")
+    jax.jit,
+    static_argnames=("k", "packed", "bq", "bn", "use_pallas", "interpret"),
 )
 def fused_adc_topk(
     lut: jax.Array,
@@ -232,6 +287,7 @@ def fused_adc_topk(
     k: int,
     *,
     packed: bool = False,
+    bq: int | None = None,
     bn: int | None = None,
     use_pallas: bool = True,
     interpret: bool | None = None,
@@ -256,8 +312,8 @@ def fused_adc_topk(
         s = _ref.adc4_ref(lut, codes) if packed else _ref.adc_ref(lut, codes)
         return _ref.topk_ref(s, k, N)
     interp = (not _on_tpu()) if interpret is None else interpret
-    bq = _pick_tile(Q, _adc.BQ)
-    bn = _pick_tile(N, min(bn, _adc.BN) if bn else _adc.BN)
+    bq = _pick_tile(Q, bq or _adc.BQ)
+    bn = _pick_tile(N, bn or _adc.BN)
     cp = _pad_rows(codes, _round_up(N, bn))
     if packed:
         le = lut[:, 0::2, :].reshape(Q, -1)

@@ -144,7 +144,16 @@ def save_state(path, arrays: dict[str, Any], meta: dict[str, Any]) -> None:
     stream manifest embeds each sealed segment's inner-index npz as a
     byte blob inside its own npz, so index save/load must compose through
     in-memory buffers (DESIGN.md §10).
+
+    When a TuneTable is installed (``repro.tune``), it rides along under
+    ``meta["tune"]`` so a reloaded index serves with the configs it was
+    tuned with (``registry.load_index`` adopts it, stamp-checked).
     """
+    from repro.tune import table as tunetable
+
+    active_table = tunetable.active()
+    if active_table is not None and "tune" not in meta:
+        meta = {**meta, "tune": active_table.to_dict()}
     out = {k: np.asarray(v) for k, v in arrays.items() if v is not None}
     out[_META_KEY] = np.frombuffer(
         json.dumps(meta).encode("utf-8"), dtype=np.uint8

@@ -84,8 +84,21 @@ def make_index(
     return get_impl(resolved.kind).build(corpus, resolved, key=key)
 
 
-def load_index(path: str):
-    """Load a saved index, dispatching on the recorded kind."""
+def load_index(path: str, *, adopt_tune: bool = True):
+    """Load a saved index, dispatching on the recorded kind.
+
+    A TuneTable embedded by ``save_state`` is adopted into the process's
+    dispatch (``adopt_tune=False`` opts out) — stamp-checked: a table
+    measured on a different backend is parked for the maintenance
+    re-tune trigger (a counter, not a crash), and dispatch keeps its
+    current configs.
+    """
     from repro.knn import base
 
-    return get_impl(base.load_meta(path)["kind"]).load(path)
+    meta = base.load_meta(path)
+    idx = get_impl(meta["kind"]).load(path)
+    if adopt_tune:
+        from repro.tune import table as tunetable
+
+        tunetable.adopt_from_meta(meta)
+    return idx

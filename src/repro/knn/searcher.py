@@ -40,6 +40,7 @@ import jax.numpy as jnp
 
 from repro import engine
 from repro.knn import base as B
+from repro.tune import table as tunetable
 
 __all__ = ["Searcher", "Rerank", "one_shot", "sharded_scan_plan",
            "multi_source_plan", "DEFAULT_BATCH_SIZES", "DEFAULT_RERANK_DEPTH"]
@@ -402,7 +403,14 @@ class Searcher:
         self._counts: collections.Counter = collections.Counter()
 
         n_shards = int(shards.devices.size) if shards is not None else 1
-        self._extras = {"shards": n_shards}
+        # plan-time table resolution: the active TuneTable (if it matches
+        # this backend's stamp) is snapshotted NOW and pinned around every
+        # runner execution, so bucketed executables compile with the
+        # tuned shapes this plan saw — a table installed later cannot
+        # silently retile a compiled plan (DESIGN.md §13)
+        self.tune_table = tunetable.snapshot_for_plan()
+        self._extras = {"shards": n_shards,
+                        "tuned": self.tune_table is not None}
 
         rr = self.rerank
         if rr is not None and rr.store is None:
@@ -417,7 +425,8 @@ class Searcher:
 
         def run(queries: jax.Array) -> B.SearchResult:
             self._counts[int(queries.shape[0])] += 1   # fires once per trace
-            res = inner(queries)
+            with tunetable.pinned(self.tune_table):    # plan-time snapshot
+                res = inner(queries)
             stats = dict(res.stats)
             s, i = res.scores, res.ids
             if rr is not None:

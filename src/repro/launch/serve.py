@@ -25,6 +25,14 @@ core, ``repro.runtime`` supplies the production machinery:
     ``compact()`` never blocks a query.
   * ``--telemetry-out`` — the structured event log (per-request
     queue-wait/execute spans, shared cache/admission counters) as JSON.
+  * ``--tune`` / ``--index-path`` / ``--save-index`` — measured-dispatch
+    plumbing (DESIGN.md §13): adopt a standalone TuneTable JSON, load a
+    saved index (its embedded table adopted, stamp-checked), or save the
+    served index with the active table embedded.  The runtime stamp is
+    taken *after* adoption so the report/telemetry records the tuning
+    hash the session actually dispatched through; a foreign-backend
+    table parks as a pending mismatch that the maintenance scheduler's
+    lowest-priority trigger re-measures off the request path.
 
 Mutable (``stream(...)``) indexes serve writes too: ``--mutate``
 interleaves an upsert and a delete into the request mix.  A Searcher is
@@ -126,7 +134,31 @@ def _parse_args(argv):
                     help="background maintenance poll interval, seconds")
     ap.add_argument("--telemetry-out", default=None,
                     help="write the structured telemetry JSON here")
+    # -- measured-dispatch (TuneTable) flags (DESIGN.md §13) ---------------
+    ap.add_argument("--tune", default=None,
+                    help="adopt a standalone TuneTable JSON (e.g. "
+                         "TUNE_cpu.json) before planning; stamp-checked — "
+                         "a foreign-backend table is parked for the "
+                         "maintenance re-tune trigger, not crashed on")
+    ap.add_argument("--index-path", default=None,
+                    help="load a saved .npz index instead of building "
+                         "(--index/--n/--d then come from the file; an "
+                         "embedded TuneTable is adopted, stamp-checked)")
+    ap.add_argument("--save-index", default=None,
+                    help="save the served index to this .npz after build "
+                         "(the active TuneTable rides along embedded)")
     return ap.parse_args(argv)
+
+
+def _index_dim(index) -> int | None:
+    """Logical query dimension of a loaded index (any kind)."""
+    store = getattr(index, "store", None)
+    if store is None:
+        return None
+    if hasattr(store, "d"):
+        return int(store.d)
+    # PQStore: m subspaces x ds dims per codebook
+    return int(store.m * store.codebooks.shape[-1])
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -148,6 +180,25 @@ def main(argv: list[str] | None = None) -> None:
         TTLLRUCache,
     )
 
+    # -- measured dispatch: adopt tables BEFORE stamping, so the stamp
+    # (and therefore the telemetry report + trend comparability key)
+    # records the tuning the session actually serves through
+    from repro.knn import registry as knn_registry
+    from repro.tune import table as tunetable
+
+    if args.tune:
+        tunetable.adopt(tunetable.TuneTable.from_json(args.tune))
+
+    index = None
+    build_s = 0.0
+    if args.index_path:
+        t0 = time.perf_counter()
+        index = knn_registry.load_index(args.index_path)  # adopts any
+        build_s = time.perf_counter() - t0                # embedded table
+        args.index = f"loaded:{args.index_path}"
+        args.n = index.n
+        args.d = _index_dim(index) or args.d
+
     stamp = rtprofile.stamp(prof)
     telemetry = Telemetry(meta={
         "runtime": stamp,
@@ -159,6 +210,10 @@ def main(argv: list[str] | None = None) -> None:
     print(f"[serve] profile={prof.name} backend={stamp['backend']} "
           f"device={stamp['device_kind']} x{stamp['n_devices']} "
           f"interpret={stamp['interpret']} seed={prof.seed}")
+    pend = tunetable.pending_mismatch()
+    print(f"[serve] tune: table={stamp['tune_table'] or 'none'}"
+          + (f" pending_mismatch={pend.table_hash()}" if pend is not None
+             else ""))
 
     sizes = _request_sizes(args.requests, args.batch, args.mixed)
     n_extra = 8 if args.mutate else 0
@@ -169,9 +224,14 @@ def main(argv: list[str] | None = None) -> None:
     queries = queries[:, : args.d]
     corpus, extra_rows = corpus[: args.n], corpus[args.n:]
 
-    t0 = time.perf_counter()
-    index = make_index(args.index, corpus, key=rtprofile.key(prof))
-    build_s = time.perf_counter() - t0
+    if index is None:
+        t0 = time.perf_counter()
+        index = make_index(args.index, corpus, key=rtprofile.key(prof))
+        build_s = time.perf_counter() - t0
+    if args.save_index:
+        index.save(args.save_index)   # active TuneTable embeds via save_state
+        print(f"[serve] saved index -> {args.save_index} "
+              f"(tune={tunetable.active_hash() or 'none'})")
 
     sp = SearchParams(chunk=args.chunk, nprobe=args.nprobe,
                       ef_search=args.ef_search)
@@ -306,8 +366,17 @@ def main(argv: list[str] | None = None) -> None:
 
     maint = None
     if args.maintenance:
+        # lowest-priority trigger: a loaded index carried a TuneTable
+        # measured on a foreign backend — re-measure here, off the
+        # request path (only fires when pending_mismatch() is set)
+        def retune_fn():
+            from repro.tune import autotune
+
+            return autotune(smoke=True)
+
         maint = MaintenanceScheduler(
             index, interval_s=args.maintenance_interval, telemetry=telemetry,
+            retune_fn=retune_fn,
         ).start()
 
     latencies = []
@@ -428,6 +497,7 @@ def main(argv: list[str] | None = None) -> None:
         print(f"[serve] maintenance: rounds={c['maintenance_rounds']} "
               f"swaps={c['maintenance_swaps']} "
               f"conflicts={c['maintenance_conflicts']} "
+              f"retunes={c['maintenance_retunes']} "
               f"errors={c['maintenance_errors']}")
     # per-search engine accounting aggregated over the session (uniform
     # across kinds; DESIGN.md §8/§9) — means per request, plus totals for

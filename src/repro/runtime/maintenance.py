@@ -23,7 +23,15 @@ Triggers, checked every ``interval_s``:
   * **drift** — ``stats()["max_drift"]`` beyond the compaction policy's
     ``drift_threshold``: a *full* snapshot-compaction with
     recalibration, repairing the §3.2 data-driven constants the insert
-    stream has left behind.
+    stream has left behind;
+
+  * **tune** (lowest priority, only with a ``retune_fn``) — a loaded
+    index carried a TuneTable measured on a different backend
+    (``repro.tune.table.pending_mismatch()``): re-measure on *this*
+    backend off the request path, install the fresh table, clear the
+    pending one.  Counted as ``maintenance_retunes``; a failing re-tune
+    counts ``maintenance_errors`` and leaves dispatch on its current
+    (fallback or previously-adopted) configs.
 
 The exact-parity invariant survives the background path: a full
 snapshot-compaction with no concurrent writes swaps in a segment
@@ -51,6 +59,7 @@ class MaintenanceScheduler:
         interval_s: float = 0.25,
         drift_threshold: Optional[float] = None,
         telemetry=None,
+        retune_fn=None,
     ):
         if not hasattr(index, "compact_snapshot"):
             raise TypeError(
@@ -65,6 +74,10 @@ class MaintenanceScheduler:
             else float(index.policy.drift_threshold)
         )
         self.telemetry = telemetry
+        # zero-arg callable returning a fresh TuneTable for this backend
+        # (e.g. lambda: repro.tune.autotune(smoke=True)); None disables
+        # the re-tune trigger
+        self.retune_fn = retune_fn
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         import collections
@@ -81,7 +94,26 @@ class MaintenanceScheduler:
         if (st["segments"] > 0 and self.drift_threshold > 0
                 and st["max_drift"] > self.drift_threshold):
             return "drift"
+        if self.retune_fn is not None:
+            from repro.tune import table as tunetable
+
+            if tunetable.pending_mismatch() is not None:
+                return "tune"
         return None
+
+    # -- low-priority re-tune (saved-index table from a foreign backend) ---
+    def _run_retune(self, out: dict) -> None:
+        from repro.tune import table as tunetable
+
+        pending = tunetable.pending_mismatch()
+        out["pending_hash"] = (pending.table_hash() if pending is not None
+                               else None)
+        fresh = self.retune_fn()
+        if fresh is not None:
+            tunetable.install(fresh)
+            out["table_hash"] = fresh.table_hash()
+            out["swapped"] = True
+        tunetable.clear_pending()
 
     # -- one maintenance round --------------------------------------------
     def run_once(self, force_full: bool = False) -> dict:
@@ -93,6 +125,18 @@ class MaintenanceScheduler:
         trigger = "forced" if force_full else self._trigger()
         if trigger is None:
             return {"ran": False}
+        if trigger == "tune":
+            out = {"ran": True, "trigger": "tune", "swapped": False}
+            if self.telemetry is not None:
+                with self.telemetry.span("maintenance/retune"):
+                    self._run_retune(out)
+            else:
+                self._run_retune(out)
+            self.counters["maintenance_rounds"] += 1
+            self.counters["maintenance_retunes"] += 1
+            if self.telemetry is not None:
+                self.telemetry.event("maintenance", **out)
+            return out
         full = force_full or trigger == "drift"
         out = {"ran": True, "trigger": trigger, "full": full, "swapped": False}
 

@@ -196,6 +196,10 @@ def stamp(profile: Optional[RuntimeProfile] = None) -> dict:
     dev = jax.devices()[0]
     return {
         "profile": p.name,
+        # the installed TuneTable's dispatch hash (None = fallback
+        # constants) — trend.py keys comparability on it, so two runs
+        # with different tunings never get compared as one trajectory
+        "tune_table": _tune_table_hash(),
         "applied": _ACTIVE is not None,
         "backend": backend,
         "device_kind": getattr(dev, "device_kind", str(dev)),
@@ -210,6 +214,14 @@ def stamp(profile: Optional[RuntimeProfile] = None) -> dict:
         "xla_flags": list(p.xla_flags),
         "host_device_count": p.host_device_count,
     }
+
+
+def _tune_table_hash() -> Optional[str]:
+    """The active TuneTable's dispatch hash (lazy import — tune.table
+    depends on this module for ``live_stamp``)."""
+    from repro.tune import table as tunetable
+
+    return tunetable.active_hash()
 
 
 def _reset_for_tests() -> None:

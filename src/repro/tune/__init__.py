@@ -1,0 +1,39 @@
+"""Kernel autotuning: measured dispatch tables instead of hardcoded
+tile shapes (DESIGN.md §13).
+
+    table      TuneConfig/TuneTable, the process-wide lookup point every
+               kernel dispatch consults, fallback-constant registry,
+               adoption of persisted tables (import-light: safe from
+               engine/kernels/knn without cycles)
+    space      per-family candidate enumeration + roofline pruning
+    autotuner  the measured search itself (imports engine — load lazily)
+
+CLI: ``python -m repro.tune --smoke --out TUNE_cpu.json``.
+"""
+
+from repro.tune.table import (  # noqa: F401
+    COUNTERS,
+    TuneConfig,
+    TuneTable,
+    active,
+    active_hash,
+    adopt,
+    adopt_from_meta,
+    clear,
+    clear_pending,
+    fallback,
+    install,
+    lookup,
+    pending_mismatch,
+    pinned,
+    register_fallback,
+    snapshot_for_plan,
+)
+
+
+def autotune(*args, **kwargs):
+    """Lazy forward to :func:`repro.tune.autotuner.autotune` (that module
+    imports the engine — eager import here would cycle)."""
+    from repro.tune.autotuner import autotune as _autotune
+
+    return _autotune(*args, **kwargs)

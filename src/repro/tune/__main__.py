@@ -1,0 +1,41 @@
+"""CLI: measure a TuneTable on the live backend and write it to JSON.
+
+    PYTHONPATH=src python -m repro.tune --smoke --out TUNE_cpu.json
+
+The emitted file carries the measuring process's runtime-profile stamp;
+``launch/serve.py --tune TUNE_cpu.json`` adopts it (stamp-checked) and
+``trend.py`` refuses to compare artifacts across different table hashes.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.runtime import profile as rtprofile
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(prog="python -m repro.tune")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI shapes (parity-first, minutes not hours)")
+    ap.add_argument("--out", default="TUNE.json")
+    ap.add_argument("--profile", default=None,
+                    help="runtime profile to apply before measuring")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=None,
+                    help="override the profile's seed policy")
+    args = ap.parse_args(argv)
+
+    rtprofile.apply(rtprofile.resolve(args.profile))
+    from repro.tune.autotuner import autotune
+
+    table = autotune(smoke=args.smoke, seed=args.seed, repeats=args.repeats,
+                     verbose=True)
+    table.to_json(args.out)
+    print(f"[tune] wrote {args.out}: {len(table.entries)} entries, "
+          f"hash {table.table_hash()}, "
+          f"backend {table.stamp['backend']}/{table.stamp['device_kind']}")
+
+
+if __name__ == "__main__":
+    main()

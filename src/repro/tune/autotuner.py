@@ -1,0 +1,252 @@
+"""The measured autotuner: time surviving candidates on the live
+backend, assert bit-parity for every one, emit a ``TuneTable``.
+
+Per workload (DESIGN.md §13):
+
+    1. build a deterministic store from the runtime profile's seed
+       (``fold_in`` per workload — same backend + seed ⇒ same data),
+    2. enumerate the family's legal candidates (:mod:`repro.tune.space`)
+       and prune them with the roofline model,
+    3. for each survivor: run it once, assert **bit-parity** against the
+       reference-oracle score matrix (a candidate that cannot reproduce
+       the oracle's top-k scores exactly is a bug, not a slow config —
+       the tuner raises), then time it (warm-up + median-of-n),
+    4. pick with hysteresis: keep the default-dispatch config unless a
+       candidate beats it by more than ``margin`` — measurement noise
+       must not flap the table between equivalent configs,
+    5. record the choice (with its measured and default medians) under
+       the workload's bucket key.
+
+Parity is tie-robust: the candidate's top-k *scores* must bit-match
+``lax.top_k`` of the full oracle matrix, and every returned id must
+point at a row whose oracle score equals the returned score — int8 score
+ties make id-level equality fragile across chunkings, score-level
+equality is the invariant all engine paths actually guarantee.
+
+``timer`` is injectable (same pattern as the runtime cache's clock): the
+determinism tests swap in a cost-model-based fake so table construction
+is a pure function of (backend, seed); parity always runs on the real
+executions regardless of the timer.
+
+Off-TPU, fused candidates run in interpret mode — their timings are
+parity-only signals (README "Autotuning") and the scan baseline wins the
+crossover on merit; the hysteresis rule then keeps the table honest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine import scorer
+from repro.kernels import ops as K
+from repro.kernels import ref as R
+from repro.runtime import profile as rtprofile
+from repro.tune import space as S
+from repro.tune.table import TuneConfig, TuneTable, live_stamp
+
+#: PQ subspace width the ADC tuning workloads use (dim = M * ADC_DS)
+ADC_DS = 8
+
+
+def default_workloads(smoke: bool = False) -> tuple[S.Workload, ...]:
+    """The shapes a ``python -m repro.tune`` run measures.
+
+    Smoke keeps fused-capable corpora small (interpret-mode fused
+    candidates are 5–30× slower than the scan on CPU — the parity check
+    is the point there, not the wall time) and gives the scan family an
+    awkward ``n`` (20480: not a multiple of the 16384 default chunk, so
+    the default scan pads to 32768 rows and the exact-fit candidate has
+    a structural 1.6× less work to do).
+    """
+    if smoke:
+        return (
+            S.Workload("fused_topk", "ip", 8, 8, 1536, 32),
+            S.Workload("packed", "l2", 4, 8, 1536, 32),
+            S.Workload("fused_adc", "ip", 8, 8, 1536, 8),
+            S.Workload("scan", "angular", 8, 8, 20480, 32),
+        )
+    return (
+        S.Workload("fused_topk", "ip", 8, 16, 8192, 64),
+        S.Workload("fused_topk", "l2", 8, 16, 8192, 64),
+        S.Workload("packed", "ip", 4, 16, 8192, 64),
+        S.Workload("fused_adc", "ip", 8, 16, 8192, 16),
+        S.Workload("fused_adc", "ip", 4, 16, 8192, 16),
+        S.Workload("scan", "angular", 8, 16, 20480, 64),
+    )
+
+
+def wall_timer(fn: Callable, *, cfg: TuneConfig, workload: S.Workload,
+               repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds with block_until_ready (the default timer)."""
+    del cfg, workload
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def estimate_timer(fn: Callable, *, cfg: TuneConfig, workload: S.Workload,
+                   repeats: int = 3, warmup: int = 1) -> float:
+    """Deterministic fake timer: the roofline estimate stands in for the
+    wall clock (the determinism tests' injection; never the default)."""
+    del fn, repeats, warmup
+    return S.estimate(workload, cfg)
+
+
+@dataclasses.dataclass
+class _Ctx:
+    """One workload's measured fixtures: the store, prepared queries (or
+    the int8 ADC LUT), and the full oracle score matrix."""
+
+    store: object
+    q: Optional[jax.Array]
+    lut: Optional[jax.Array]
+    full: np.ndarray
+
+
+def _build_ctx(w: S.Workload, key: jax.Array) -> _Ctx:
+    from repro.knn import make_index
+
+    kc, kq, kb = jax.random.split(key, 3)
+    if w.kernel == "fused_adc":
+        dim = w.d * ADC_DS
+        corpus = jax.random.normal(kc, (w.n, dim)) * 0.1
+        queries = jax.random.normal(kq, (w.q, dim)) * 0.1
+        idx = make_index(f"pq{w.d}x{w.bits}+lpq", corpus, metric=w.metric,
+                         kmeans_iters=2, key=kb)
+        store = idx.store
+        lut = jax.block_until_ready(
+            scorer._prepare_pq_lut(queries, store, w.metric))
+        full = (R.adc4_ref(lut, store.codes) if store.packed
+                else R.adc_ref(lut, store.codes))
+        return _Ctx(store, None, lut, np.asarray(full, np.float32))
+
+    spec = "flat,lpq4" if w.bits == 4 else "flat,lpq8"
+    corpus = jax.random.normal(kc, (w.n, w.d)) * 0.1
+    queries = jax.random.normal(kq, (w.q, w.d)) * 0.1
+    store = make_index(spec, corpus, metric=w.metric).store
+    qc = store.encode_queries(queries)
+    if w.metric == "ip":
+        full = (R.qmip4_ref(qc, store.data) if store.packed
+                else R.qmip_ref(qc, store.data))
+    elif w.metric == "l2":
+        full = (R.ql24_ref(qc, store.data) if store.packed
+                else R.ql2_ref(qc, store.data))
+    else:
+        from repro.core import distances as D
+        from repro.core import pack as PK
+
+        rows = PK.unpack_int4(store.data) if store.packed else store.data
+        full = D.scores(qc, rows, w.metric, quantized=store.quantized)
+    return _Ctx(store, qc, None, np.asarray(full, np.float32))
+
+
+def _make_runner(w: S.Workload, ctx: _Ctx, cfg: TuneConfig,
+                 interp) -> Callable:
+    """A zero-arg (scores, ids) thunk executing ``cfg`` on the live
+    backend — exactly the executable dispatch would run for this entry."""
+    k = min(w.k, w.n)
+    if cfg.impl == "scan":
+        chunk = cfg.chunk or S.DEFAULT_CHUNK
+        if w.kernel == "fused_adc":
+            return lambda: scorer._topk_pq_from_lut(
+                ctx.lut, ctx.store, k, w.metric, chunk, use_pallas=False)
+        return lambda: scorer._scan_topk(ctx.q, ctx.store, k, w.metric, chunk)
+    if w.kernel == "fused_adc":
+        return lambda: K.fused_adc_topk(
+            ctx.lut, ctx.store.codes, k, packed=ctx.store.packed,
+            bq=cfg.bq, bn=cfg.bn, interpret=interp)
+    return lambda: K.fused_topk(
+        ctx.q, ctx.store.data, k, w.metric, packed=ctx.store.packed,
+        bq=cfg.bq, bn=cfg.bn, interpret=interp)
+
+
+def _parity_ok(full: np.ndarray, s, i, k: int) -> bool:
+    """Tie-robust bit-parity vs the oracle matrix (see module docstring)."""
+    exp_s = np.asarray(jax.lax.top_k(jnp.asarray(full), k)[0])
+    s = np.asarray(s)
+    i = np.asarray(i)
+    if not np.array_equal(s, exp_s):
+        return False
+    if (i < 0).any() or (i >= full.shape[1]).any():
+        return False
+    return np.array_equal(np.take_along_axis(full, i, axis=1), s)
+
+
+def autotune(
+    workloads: Optional[Sequence[S.Workload]] = None,
+    *,
+    smoke: bool = False,
+    seed: Optional[int] = None,
+    repeats: int = 3,
+    warmup: int = 1,
+    margin: float = 0.03,
+    max_candidates: int = 10,
+    prune_ratio: float = 4.0,
+    timer: Optional[Callable] = None,
+    verbose: bool = False,
+) -> TuneTable:
+    """Measure the workloads and return the resulting ``TuneTable``.
+
+    The table is NOT installed — callers decide (``table.install`` for
+    this process, ``to_json`` / ``save_state`` for persistence).
+    """
+    prof = rtprofile.active()
+    seed = prof.seed if seed is None else int(seed)
+    timer = timer or wall_timer
+    workloads = (default_workloads(smoke) if workloads is None
+                 else tuple(workloads))
+    backend = jax.default_backend()
+    interp = True if backend != "tpu" else None
+    table = TuneTable(stamp=live_stamp())
+    base_key = jax.random.PRNGKey(seed)
+
+    for wi, w in enumerate(workloads):
+        ctx = _build_ctx(w, jax.random.fold_in(base_key, wi))
+        default_cfg = S.default_config(w, backend)
+        cands = S.prune(w, S.candidates(w), ratio=prune_ratio,
+                        keep=default_cfg)
+        cands = sorted(cands, key=lambda c: (S.estimate(w, c), repr(c)))
+        cands = cands[:max_candidates]
+        if default_cfg not in cands:
+            cands.append(default_cfg)
+
+        timed: list[tuple[float, TuneConfig]] = []
+        for cfg in cands:
+            fn = _make_runner(w, ctx, cfg, interp)
+            s, i = fn()
+            if not _parity_ok(ctx.full, s, i, min(w.k, w.n)):
+                raise AssertionError(
+                    f"tuner candidate {cfg} failed bit-parity against the "
+                    f"reference oracle on {w}"
+                )
+            timed.append((timer(fn, cfg=cfg, workload=w, repeats=repeats,
+                                warmup=warmup), cfg))
+
+        default_t = next(t for t, c in timed if c == default_cfg)
+        best_t, best_cfg = min(timed, key=lambda tc: tc[0])
+        chosen, chosen_t = default_cfg, default_t
+        # hysteresis: a candidate must *clearly* beat the default — noise
+        # must not flap the table (or the bench's >= 1.0 gate)
+        if best_cfg != default_cfg and best_t < default_t * (1.0 - margin):
+            chosen, chosen_t = best_cfg, best_t
+        entry = dataclasses.replace(chosen, measured_us=chosen_t * 1e6,
+                                    default_us=default_t * 1e6)
+        key = table.put(w.kernel, w.metric, w.bits, w.q, w.n, w.d, entry)
+        if verbose:
+            print(f"[tune] {key} -> {entry.impl} bq={entry.bq} "
+                  f"bn={entry.bn} chunk={entry.chunk} "
+                  f"({len(timed)} candidates, chosen {chosen_t * 1e6:.0f}us "
+                  f"vs default {default_t * 1e6:.0f}us)")
+    return table

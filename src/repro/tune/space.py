@@ -1,0 +1,221 @@
+"""Tuning spaces: legal tile/chunk candidates per kernel family, plus
+the roofline cost model that prunes them before anything is timed.
+
+One space per kernel family (DESIGN.md §13):
+
+    fused_topk   streaming fused score+top-k over int8 codes
+    packed       the same kernel over bit-packed int4 codes
+    fused_adc    fused PQ ADC (int8 LUT block VMEM-resident)
+    scan         the XLA streaming-scan formulation (the only legal
+                 family for metrics the fused kernels do not cover)
+
+Candidates come from shape constraints, not guesses: fused tiles must
+land on sublane units (``SUBLANE``), the per-tile working set (query
+block + corpus block + score tile + top-k carry — for ADC, the LUT block)
+must fit the VMEM budget, and int8 products accumulated over ``d`` must
+stay inside int32.  The fused families also enumerate ``scan`` candidates
+— the fused-vs-``_stream_topk`` crossover is part of the space, so the
+autotuner *measures* the decision today's dispatch hardcodes as a
+backend ``if``.  Scan chunks include ``round_up(n, SUBLANE)`` alongside
+the power-of-two ladder: ``_stream_topk`` pads the corpus to a chunk
+multiple, so for an awkward ``n`` the exact-fit chunk eliminates pad
+rows the default chunk would score and throw away.
+
+``estimate`` is the same napkin math as ``benchmarks/roofline.py``
+(which imports its hardware constants from here — one source of truth):
+max(compute term, memory term) per device, with the fused re-stream
+(one corpus pass per ``bq`` query rows) and the scan's pad waste both
+counted as real bytes.  ``prune`` keeps candidates within ``ratio``× the
+best estimate — the model is only trusted to rule out order-of-magnitude
+losers; measurement decides the rest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.tune.table import TuneConfig
+
+#: TPU tiling units (second-to-last / last dim register granularity)
+SUBLANE = 8
+LANE = 128
+
+#: hardware peaks (TPU v5e) — benchmarks/roofline.py imports these
+PEAK_BF16 = 197e12
+PEAK_INT8 = 394e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+#: per-core VMEM we allow one fused tile's working set to occupy
+VMEM_BUDGET = 8 * 1024 * 1024
+
+#: kernel families a TuneTable may carry entries for
+KERNELS = ("fused_topk", "packed", "fused_adc", "scan")
+
+#: the candidate ladders (filtered by legality per workload)
+BQ_CANDIDATES = (32, 64, 128, 256)
+BN_CANDIDATES = (128, 256, 512, 1024, 2048)
+CHUNK_CANDIDATES = (2048, 4096, 8192, 16384, 32768, 65536)
+
+#: today's hardcoded scan chunk (SearchParams.chunk default)
+DEFAULT_CHUNK = 16384
+#: today's hardcoded fused corpus-tile cap (engine.scorer.FUSED_TILE)
+DEFAULT_FUSED_TILE = 512
+
+INT32_MAX = 2**31 - 1
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """One tuning cell: the shape/dtype facts dispatch keys on.
+
+    For ``fused_adc``, ``d`` is the number of PQ subspaces M (the LUT's
+    middle axis) and ``bits`` the code width {4, 8} — matching how the
+    dispatch lookup keys ADC workloads.
+    """
+
+    kernel: str
+    metric: str
+    bits: int
+    q: int
+    n: int
+    d: int
+    k: int = 10
+
+    def __post_init__(self):
+        if self.kernel not in KERNELS:
+            raise ValueError(f"kernel must be one of {KERNELS}, "
+                             f"got {self.kernel!r}")
+        for name in ("bits", "q", "n", "d", "k"):
+            v = getattr(self, name)
+            if not isinstance(v, int) or v <= 0:
+                raise ValueError(f"Workload.{name} must be a positive int, "
+                                 f"got {v!r}")
+
+
+def row_bytes(w: Workload) -> int:
+    """Streamed bytes per corpus row (codes for ADC, codes for flat)."""
+    if w.kernel == "fused_adc":
+        return -(-w.d // 2) if w.bits == 4 else w.d
+    if w.bits == 4:
+        return -(-w.d // 2)
+    if w.bits == 8:
+        return w.d
+    return 4 * w.d
+
+
+def working_set_bytes(w: Workload, cfg: TuneConfig) -> int:
+    """The VMEM bytes one fused grid step holds live."""
+    bq, bn = cfg.bq or SUBLANE, cfg.bn or SUBLANE
+    score_tile = bq * bn * 4                       # int32 accumulator tile
+    carry = bq * max(w.k, SUBLANE) * 8             # running top-k (f32+i32)
+    if w.kernel == "fused_adc":
+        lut_block = bq * w.d * (2 ** w.bits)       # int8 LUT, VMEM-resident
+        return lut_block + bn * row_bytes(w) + score_tile + carry
+    q_block = bq * w.d                             # queries stay full-width
+    return q_block + bn * row_bytes(w) + score_tile + carry
+
+
+def accum_bound_ok(w: Workload) -> bool:
+    """int32 accumulation: worst-case |sum of products| must fit."""
+    if w.kernel == "fused_adc":
+        return 127 * w.d < INT32_MAX               # sum of M int8 entries
+    c = 2 ** (w.bits - 1) - 1
+    return c * c * w.d < INT32_MAX
+
+
+def legal(w: Workload, cfg: TuneConfig) -> bool:
+    if cfg.impl == "scan":
+        return cfg.chunk is not None and cfg.chunk % SUBLANE == 0
+    if w.kernel == "scan":
+        return False                               # no fused form exists
+    if w.metric not in ("ip", "l2"):
+        return False
+    if cfg.bq is None or cfg.bn is None:
+        return False
+    if cfg.bq % SUBLANE or cfg.bn % SUBLANE:
+        return False
+    if not accum_bound_ok(w):
+        return False
+    return working_set_bytes(w, cfg) <= VMEM_BUDGET
+
+
+def scan_chunks(w: Workload) -> tuple[int, ...]:
+    """Chunk ladder for this corpus: every chunk >= n scores identical
+    rows (the single-tile path), so the exact-fit ``round_up(n)`` stands
+    in for all of them — and is the pad-waste killer for awkward n."""
+    ladder = [c for c in CHUNK_CANDIDATES if c < w.n]
+    return tuple(sorted(set(ladder + [round_up(w.n, SUBLANE)])))
+
+
+def candidates(w: Workload) -> list[TuneConfig]:
+    """Every legal candidate for the workload (fused grid + scan ladder
+    for fused families; scan ladder only for the scan family)."""
+    out: list[TuneConfig] = []
+    if w.kernel != "scan":
+        for bq in BQ_CANDIDATES:
+            for bn in BN_CANDIDATES:
+                cfg = TuneConfig("fused", bq=bq, bn=bn)
+                if legal(w, cfg):
+                    out.append(cfg)
+    for c in scan_chunks(w):
+        cfg = TuneConfig("scan", chunk=c)
+        if legal(w, cfg):
+            out.append(cfg)
+    return out
+
+
+def estimate(w: Workload, cfg: TuneConfig) -> float:
+    """Roofline seconds: max(compute, memory) per device, counting the
+    fused re-stream (ceil(Q/bq) corpus passes) and scan pad waste."""
+    flops = 2.0 * w.q * w.n * w.d
+    peak = PEAK_INT8 if w.bits <= 8 else PEAK_BF16
+    if cfg.impl == "fused":
+        bq = cfg.bq or SUBLANE
+        bn = cfg.bn or SUBLANE
+        passes = -(-w.q // bq)
+        n_rows = round_up(w.n, bn) * passes
+    else:
+        chunk = cfg.chunk or DEFAULT_CHUNK
+        n_rows = w.n if w.n <= chunk else round_up(w.n, chunk)
+    mem_bytes = n_rows * row_bytes(w) + w.q * w.d
+    return max(flops / peak, mem_bytes / HBM_BW)
+
+
+def prune(w: Workload, cands: Sequence[TuneConfig], *, ratio: float = 4.0,
+          keep: Optional[TuneConfig] = None) -> list[TuneConfig]:
+    """Drop candidates the cost model says are > ``ratio``× the best
+    estimate; ``keep`` (the default-dispatch config) always survives."""
+    if not cands:
+        return [keep] if keep is not None else []
+    best = min(estimate(w, c) for c in cands)
+    out = [c for c in cands if estimate(w, c) <= ratio * best]
+    if keep is not None and keep not in out:
+        out.append(keep)
+    return out
+
+
+def default_config(w: Workload, backend: Optional[str] = None) -> TuneConfig:
+    """What today's table-less dispatch would run for this workload —
+    the honest baseline every measured speedup is reported against.
+
+    Mirrors ``engine.scorer``: fused on TPU for fusable metrics when the
+    corpus exceeds one tile; the 16384-chunk streaming scan otherwise.
+    """
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    fusable = w.kernel != "scan" and w.metric in ("ip", "l2")
+    tile = min(DEFAULT_FUSED_TILE, max(SUBLANE, DEFAULT_CHUNK))
+    if fusable and backend == "tpu" and w.n > tile:
+        from repro.tune import table as T
+
+        fb = T.fallback(w.kernel)
+        return TuneConfig("fused", bq=fb.bq, bn=tile)
+    return TuneConfig("scan", chunk=DEFAULT_CHUNK)

@@ -1,0 +1,373 @@
+"""Measured dispatch tables: ``TuneTable`` + the process-wide lookup
+point every kernel dispatch consults (DESIGN.md §13).
+
+Every tile shape in the hot path so far was a hardcoded guess
+(``fused_topk.BQ = 128``, ``FUSED_TILE = 512``, ``chunk = 16384``) that
+no measurement ever revisited — and the fused-vs-scan decision was a
+backend ``if``, not a measured crossover.  A ``TuneTable`` replaces both
+with *measured facts*: a mapping from
+
+    (backend, device_kind, kernel, metric, bits, Q-bucket, N-bucket,
+     d-bucket)  ->  TuneConfig(impl, bq, bn, chunk)
+
+produced by :mod:`repro.tune.autotuner` on the live backend, where every
+candidate was bit-parity-checked against the reference oracle before it
+was timed.  Dispatch precedence is **tuned > fallback constants**: when
+no entry matches (or no table is installed, or the table was measured on
+a different backend), callers fall back to the registered default rows —
+exactly today's constants — and the miss is counted, never raised.
+
+Shape buckets are powers of two (``bucket(40960) == 65536``): a table
+tuned at one shape per bucket serves every shape in the bucket, and the
+bucket boundaries align with the jit specialization callers already pay.
+
+Tables persist two ways: standalone JSON (``to_json``/``from_json``,
+stamped with the runtime-profile facts of the machine that measured
+them) and embedded in the npz of saved indexes (``knn.base.save_state``
+attaches the active table; ``registry.load_index`` re-adopts it).  An
+adopted table whose stamp does not match the serving backend is *not*
+installed — it is parked as the pending-mismatch table (a counter, not a
+crash) for the maintenance scheduler's low-priority re-tune trigger.
+
+``table_hash`` covers the dispatch-relevant content only (stamp backend
+facts + per-entry impl/tile choices, **not** the measured timings), so
+two tunings that dispatch identically hash identically — this is the
+hash ``runtime.profile.stamp()`` exposes and ``benchmarks/trend.py``
+keys comparability on.
+
+Thread-safety: installation and ``pinned`` mutate one module-level slot;
+lookups happen at trace time on the serving thread.  The maintenance
+thread only ever *installs* a freshly built table (atomic rebind).
+"""
+
+from __future__ import annotations
+
+import collections
+import contextlib
+import dataclasses
+import hashlib
+import json
+from typing import Any, Optional
+
+#: dispatch implementations a table entry can choose between
+IMPLS = ("fused", "scan")
+
+#: stamp keys two tables/backends must agree on to be interchangeable
+STAMP_KEYS = ("backend", "device_kind", "interpret")
+
+TABLE_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneConfig:
+    """One chosen kernel configuration.
+
+    impl         "fused" (Pallas streaming kernel) or "scan" (the XLA
+                 streaming-scan formulation)
+    bq / bn      fused query/corpus tile rows (None = family fallback)
+    chunk        scan chunk rows (None = caller's / fallback chunk)
+    measured_us  median wall time the autotuner measured for this config
+    default_us   median wall time of the default-dispatch config on the
+                 same workload (the honest speedup denominator)
+
+    Frozen + primitive-typed so a config can ride through ``jax.jit`` as
+    a static argument.
+    """
+
+    impl: str
+    bq: Optional[int] = None
+    bn: Optional[int] = None
+    chunk: Optional[int] = None
+    measured_us: Optional[float] = None
+    default_us: Optional[float] = None
+
+    def __post_init__(self):
+        if self.impl not in IMPLS:
+            raise ValueError(f"impl must be one of {IMPLS}, got {self.impl!r}")
+        for name in ("bq", "bn", "chunk"):
+            v = getattr(self, name)
+            if v is not None and (not isinstance(v, int) or v <= 0):
+                raise ValueError(f"TuneConfig.{name} must be a positive int "
+                                 f"or None, got {v!r}")
+
+    def dispatch_dict(self) -> dict[str, Any]:
+        """The hash-relevant subset: what the config *does*, not how
+        fast it measured."""
+        return {"impl": self.impl, "bq": self.bq, "bn": self.bn,
+                "chunk": self.chunk}
+
+    def to_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict[str, Any]) -> "TuneConfig":
+        known = {f.name for f in dataclasses.fields(TuneConfig)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown TuneConfig fields: {sorted(unknown)}")
+        return TuneConfig(**d)
+
+
+def bucket(x: int) -> int:
+    """Power-of-two shape bucket: the smallest 2**i >= x (min 1)."""
+    x = max(1, int(x))
+    return 1 << (x - 1).bit_length()
+
+
+def key_for(backend: str, device_kind: str, kernel: str, metric: str,
+            bits: int, q: int, n: int, d: int) -> str:
+    """The canonical entry key — backend facts + kernel family + metric +
+    storage width + bucketed shape."""
+    return (f"{backend}|{device_kind}|{kernel}|{metric}|{bits}"
+            f"|q{bucket(q)}|n{bucket(n)}|d{bucket(d)}")
+
+
+def live_stamp() -> dict[str, Any]:
+    """The backend facts of *this* process, in TuneTable stamp form."""
+    from repro.runtime import profile as rtprofile
+
+    s = rtprofile.stamp()
+    return {k: s[k] for k in
+            ("profile", "backend", "device_kind", "interpret",
+             "jax_version", "seed")}
+
+
+@dataclasses.dataclass
+class TuneTable:
+    """A measured dispatch table: stamp (who measured it, where) plus
+    the entry mapping.  ``stamp`` must carry the :data:`STAMP_KEYS`."""
+
+    stamp: dict[str, Any]
+    entries: dict[str, TuneConfig] = dataclasses.field(default_factory=dict)
+    version: int = TABLE_VERSION
+
+    def __post_init__(self):
+        missing = [k for k in STAMP_KEYS if k not in self.stamp]
+        if missing:
+            raise ValueError(f"TuneTable stamp is missing {missing}")
+
+    # -- entry access ------------------------------------------------------
+    def _key(self, kernel: str, metric: str, bits: int,
+             q: int, n: int, d: int) -> str:
+        return key_for(self.stamp["backend"], self.stamp["device_kind"],
+                       kernel, metric, bits, q, n, d)
+
+    def put(self, kernel: str, metric: str, bits: int, q: int, n: int,
+            d: int, cfg: TuneConfig) -> str:
+        key = self._key(kernel, metric, bits, q, n, d)
+        self.entries[key] = cfg
+        return key
+
+    def get(self, kernel: str, metric: str, bits: int,
+            q: int, n: int, d: int) -> Optional[TuneConfig]:
+        return self.entries.get(self._key(kernel, metric, bits, q, n, d))
+
+    def matches(self, stamp: Optional[dict] = None) -> bool:
+        """Was this table measured on the backend ``stamp`` describes
+        (default: the live process)?"""
+        other = stamp if stamp is not None else live_stamp()
+        return all(self.stamp.get(k) == other.get(k) for k in STAMP_KEYS)
+
+    # -- identity ----------------------------------------------------------
+    def table_hash(self) -> str:
+        """Stable hash of the dispatch-relevant content (backend facts +
+        per-entry choices; measured timings excluded, so re-measuring the
+        same choices keeps the hash)."""
+        doc = {
+            "version": self.version,
+            "stamp": {k: self.stamp.get(k) for k in STAMP_KEYS},
+            "entries": {k: self.entries[k].dispatch_dict()
+                        for k in sorted(self.entries)},
+        }
+        blob = json.dumps(doc, sort_keys=True).encode("utf-8")
+        return hashlib.blake2b(blob, digest_size=8).hexdigest()
+
+    # -- (de)serialization -------------------------------------------------
+    def to_dict(self) -> dict[str, Any]:
+        return {
+            "version": self.version,
+            "stamp": dict(self.stamp),
+            "entries": {k: self.entries[k].to_dict()
+                        for k in sorted(self.entries)},
+        }
+
+    @staticmethod
+    def from_dict(d: dict[str, Any]) -> "TuneTable":
+        if int(d.get("version", 0)) != TABLE_VERSION:
+            raise ValueError(
+                f"unsupported TuneTable version {d.get('version')!r} "
+                f"(this build reads version {TABLE_VERSION})"
+            )
+        return TuneTable(
+            stamp=dict(d["stamp"]),
+            entries={k: TuneConfig.from_dict(v)
+                     for k, v in d.get("entries", {}).items()},
+            version=TABLE_VERSION,
+        )
+
+    def to_json(self, path) -> None:
+        doc = json.dumps(self.to_dict(), indent=2, sort_keys=True)
+        if hasattr(path, "write"):
+            path.write(doc)
+            return
+        with open(path, "w") as f:
+            f.write(doc)
+
+    @staticmethod
+    def from_json(path) -> "TuneTable":
+        if hasattr(path, "read"):
+            return TuneTable.from_dict(json.loads(path.read()))
+        with open(path) as f:
+            return TuneTable.from_dict(json.load(f))
+
+
+# --------------------------------------------------------------------------
+# the process-wide dispatch point
+# --------------------------------------------------------------------------
+
+#: the installed table every dispatch consults (None = fallback constants)
+_ACTIVE: Optional[TuneTable] = None
+#: a table adopted from a saved index whose stamp did NOT match this
+#: backend — parked for the maintenance re-tune trigger, never served
+_PENDING_MISMATCH: Optional[TuneTable] = None
+
+#: lookup / adoption accounting (tests and serve reports read these)
+COUNTERS: collections.Counter = collections.Counter()
+
+#: kernel family -> the registered fallback row (today's constants);
+#: kernels/ops.py registers these at import time
+_FALLBACKS: dict[str, TuneConfig] = {}
+
+
+def register_fallback(kernel: str, cfg: TuneConfig) -> TuneConfig:
+    """Register the default-constants row dispatch falls back to when no
+    table entry matches."""
+    _FALLBACKS[kernel] = cfg
+    return cfg
+
+
+def fallback(kernel: str) -> TuneConfig:
+    """The registered fallback row for a kernel family."""
+    try:
+        return _FALLBACKS[kernel]
+    except KeyError:
+        raise KeyError(
+            f"no fallback row registered for kernel {kernel!r}; "
+            f"registered: {sorted(_FALLBACKS)}"
+        ) from None
+
+
+def fallback_kernels() -> tuple[str, ...]:
+    return tuple(sorted(_FALLBACKS))
+
+
+def install(table: Optional[TuneTable]) -> Optional[TuneTable]:
+    """Install ``table`` as the process-wide dispatch table (None clears)."""
+    global _ACTIVE
+    _ACTIVE = table
+    return table
+
+
+def active() -> Optional[TuneTable]:
+    return _ACTIVE
+
+
+def active_hash() -> Optional[str]:
+    """The installed table's dispatch hash (None = constants only) — the
+    value ``runtime.profile.stamp()`` reports and trend.py compares."""
+    return _ACTIVE.table_hash() if _ACTIVE is not None else None
+
+
+def clear() -> None:
+    """Forget the installed and pending tables (tests)."""
+    global _ACTIVE, _PENDING_MISMATCH
+    _ACTIVE = None
+    _PENDING_MISMATCH = None
+
+
+@contextlib.contextmanager
+def pinned(table: Optional[TuneTable]):
+    """Temporarily make ``table`` (which may be None) the active table.
+
+    The Searcher's plan-time resolution: a plan snapshots the active
+    table at construction and traces its bucket executables under
+    ``pinned(snapshot)``, so a table installed *after* plan time cannot
+    change shapes the plan already compiled.
+    """
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = table
+    try:
+        yield table
+    finally:
+        _ACTIVE = prev
+
+
+def snapshot_for_plan() -> Optional[TuneTable]:
+    """The table a new plan should freeze: the active table if it was
+    measured on this backend, else None (counted, never raised)."""
+    t = _ACTIVE
+    if t is None:
+        return None
+    if not t.matches():
+        COUNTERS["tune_stamp_mismatch"] += 1
+        return None
+    return t
+
+
+def lookup(kernel: str, metric: str, bits: int, q: int, n: int,
+           d: int) -> Optional[TuneConfig]:
+    """The dispatch query: the active table's entry for this workload
+    bucket, or None (fall back to the registered constants).
+
+    Misses and stamp mismatches are counted; a lookup never raises.
+    """
+    t = _ACTIVE
+    if t is None:
+        return None
+    if not t.matches():
+        COUNTERS["tune_stamp_mismatch"] += 1
+        return None
+    cfg = t.get(kernel, metric, bits, q, n, d)
+    COUNTERS["tune_lookup_hit" if cfg is not None else
+             "tune_lookup_miss"] += 1
+    return cfg
+
+
+# -- adoption (saved-index / JSON tables entering a serving process) -------
+
+def adopt(table: TuneTable) -> bool:
+    """Install ``table`` if it was measured on this backend.
+
+    On a stamp mismatch the table is parked as the pending-mismatch
+    table (the maintenance scheduler's re-tune trigger) and dispatch
+    keeps using whatever was active — a counter, not a crash.
+    """
+    global _PENDING_MISMATCH
+    if table.matches():
+        install(table)
+        COUNTERS["tune_adopted"] += 1
+        return True
+    _PENDING_MISMATCH = table
+    COUNTERS["tune_adopt_mismatch"] += 1
+    return False
+
+
+def adopt_from_meta(meta: dict) -> Optional[bool]:
+    """Adopt the table embedded in a saved index's meta record (the
+    ``"tune"`` key ``knn.base.save_state`` writes).  Returns None when
+    the record carries no table."""
+    doc = meta.get("tune")
+    if doc is None:
+        return None
+    return adopt(TuneTable.from_dict(doc))
+
+
+def pending_mismatch() -> Optional[TuneTable]:
+    """The adopted-but-mismatched table awaiting a re-tune (or None)."""
+    return _PENDING_MISMATCH
+
+
+def clear_pending() -> None:
+    global _PENDING_MISMATCH
+    _PENDING_MISMATCH = None

@@ -1,0 +1,290 @@
+"""Kernel autotuner + measured dispatch tables (DESIGN.md §13): tuning-
+space legality and pruning, tuner determinism under the injected
+cost-model timer, JSON and saved-index round-trips, stamp-mismatch
+adoption (parked, counted, never raised), tuned-vs-untuned dispatch
+bit-parity, tile-query routing, plan-time table pinning, and the
+maintenance scheduler's low-priority re-tune trigger."""
+
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.data import synthetic
+from repro.knn import make_index
+from repro.knn.registry import load_index
+from repro.runtime import MaintenanceScheduler
+from repro.runtime import profile as rtprofile
+from repro.tune import autotuner as AT
+from repro.tune import space as S
+from repro.tune import table as T
+from repro.tune.table import TuneConfig, TuneTable
+
+K = 10
+
+
+@pytest.fixture(autouse=True)
+def clean_table_state():
+    """Every test starts and ends with no installed/pending table (the
+    registered fallback rows are process state and stay)."""
+    T.clear()
+    yield
+    T.clear()
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    c, _q, _m = synthetic.load("product", 3000, 8)
+    return np.asarray(c[:, :16])
+
+
+@pytest.fixture(scope="module")
+def queries():
+    _c, q, _m = synthetic.load("product", 64, 8)
+    return np.asarray(q[:8, :16])
+
+
+def _foreign_stamp() -> dict:
+    """A stamp from a machine this process is not."""
+    return {**T.live_stamp(), "backend": "tpu", "device_kind": "TPU v5e"}
+
+
+def _tiny_table(entries=None) -> TuneTable:
+    t = TuneTable(stamp=T.live_stamp())
+    for (kernel, metric, bits, q, n, d), cfg in (entries or {}).items():
+        t.put(kernel, metric, bits, q, n, d, cfg)
+    return t
+
+
+# --------------------------------------------------------------------------
+# tuning space
+# --------------------------------------------------------------------------
+
+class TestSpace:
+    def test_bucket_powers_of_two(self):
+        assert [T.bucket(x) for x in (1, 2, 3, 8, 9, 20480)] == [
+            1, 2, 4, 8, 16, 32768]
+        # same bucket -> same key; different bucket -> different key
+        k = lambda n: T.key_for("cpu", "cpu", "scan", "ip", 8, 8, n, 16)
+        assert k(20000) == k(32768) != k(32769)
+
+    def test_fused_candidates_are_legal(self):
+        w = S.Workload("fused_topk", "ip", 8, q=64, n=8192, d=64)
+        cands = S.candidates(w)
+        fused = [c for c in cands if c.impl == "fused"]
+        assert fused, "fused family must enumerate fused tiles"
+        for c in fused:
+            assert c.bq % S.SUBLANE == 0 and c.bn % S.SUBLANE == 0
+            assert S.working_set_bytes(w, c) <= S.VMEM_BUDGET
+        # the scan crossover is part of every fused family's space
+        assert any(c.impl == "scan" for c in cands)
+
+    def test_scan_family_has_no_fused_candidates(self):
+        w = S.Workload("scan", "angular", 8, q=8, n=20480, d=32)
+        cands = S.candidates(w)
+        assert cands and all(c.impl == "scan" for c in cands)
+        # the exact-fit chunk (the pad-waste killer for awkward n) is in
+        assert any(c.chunk == S.round_up(20480, S.SUBLANE) for c in cands)
+
+    def test_prune_keeps_default_and_drops_losers(self):
+        w = S.Workload("scan", "angular", 8, q=8, n=20480, d=32)
+        cands = S.candidates(w)
+        keep = TuneConfig("scan", chunk=S.DEFAULT_CHUNK)
+        pruned = S.prune(w, cands, keep=keep)
+        assert keep in pruned
+        assert set(pruned) <= set(cands) | {keep}
+        best = min(S.estimate(w, c) for c in cands)
+        for c in pruned:
+            if c != keep:
+                assert S.estimate(w, c) <= 4.0 * best
+
+    def test_vmem_budget_excludes_oversize_tiles(self):
+        # a huge-d fused tile cannot fit: no fused candidate survives
+        w = S.Workload("fused_topk", "ip", 8, q=64, n=8192, d=65536)
+        assert all(c.impl == "scan" for c in S.candidates(w))
+
+
+# --------------------------------------------------------------------------
+# tuner determinism + persistence round-trips
+# --------------------------------------------------------------------------
+
+WORKLOADS = (S.Workload("scan", "angular", 8, q=4, n=3000, d=16, k=K),)
+
+
+class TestTunerAndRoundTrips:
+    def test_tuner_is_deterministic(self):
+        """Same backend + seed + timer ⇒ bit-identical tables."""
+        a = AT.autotune(WORKLOADS, seed=0, timer=AT.estimate_timer)
+        b = AT.autotune(WORKLOADS, seed=0, timer=AT.estimate_timer)
+        assert a.to_dict() == b.to_dict()
+        assert a.table_hash() == b.table_hash()
+
+    def test_json_round_trip_bit_exact(self, tmp_path):
+        table = AT.autotune(WORKLOADS, seed=0, timer=AT.estimate_timer)
+        p = tmp_path / "TUNE.json"
+        table.to_json(p)
+        back = TuneTable.from_json(p)
+        assert back.to_dict() == table.to_dict()
+        assert back.table_hash() == table.table_hash()
+
+    def test_json_version_gate(self):
+        doc = _tiny_table().to_dict()
+        doc["version"] = 99
+        with pytest.raises(ValueError, match="version"):
+            TuneTable.from_dict(doc)
+
+    def test_hash_ignores_timings_but_not_dispatch(self):
+        key = ("scan", "angular", 8, 8, 3000, 16)
+        a = _tiny_table({key: TuneConfig("scan", chunk=1024,
+                                           measured_us=1.0)})
+        b = _tiny_table({key: TuneConfig("scan", chunk=1024,
+                                           measured_us=99.0)})
+        c = _tiny_table({key: TuneConfig("scan", chunk=2048,
+                                           measured_us=1.0)})
+        assert a.table_hash() == b.table_hash() != c.table_hash()
+
+    def test_npz_round_trip_via_saved_index(self, tmp_path, corpus):
+        table = _tiny_table({("scan", "ip", 8, 8, 3000, 16):
+                               TuneConfig("scan", chunk=1024,
+                                          measured_us=12.5)})
+        T.install(table)
+        idx = make_index("flat,lpq8", corpus, metric="ip")
+        path = tmp_path / "idx.npz"
+        idx.save(str(path))
+
+        T.clear()
+        assert T.active() is None
+        before = T.COUNTERS["tune_adopted"]
+        idx2 = load_index(str(path))
+        assert T.COUNTERS["tune_adopted"] == before + 1
+        assert T.active() is not None
+        assert T.active().to_dict() == table.to_dict()
+        assert idx2.n == idx.n
+
+    def test_stamp_mismatch_parks_not_crashes(self, tmp_path, corpus):
+        """A table measured on a foreign backend is parked for the
+        maintenance re-tune trigger; dispatch keeps its configs."""
+        foreign = TuneTable(stamp=_foreign_stamp())
+        foreign.put("scan", "ip", 8, 8, 3000, 16,
+                    TuneConfig("scan", chunk=1024))
+        before = T.COUNTERS["tune_adopt_mismatch"]
+        assert T.adopt(foreign) is False
+        assert T.COUNTERS["tune_adopt_mismatch"] == before + 1
+        assert T.active() is None                      # not installed
+        assert T.pending_mismatch() is foreign         # parked
+
+        # the same protocol through a saved index
+        T.clear()
+        T.install(foreign)      # force the foreign table into the save
+        idx = make_index("flat,lpq8", corpus, metric="ip")
+        path = tmp_path / "idx.npz"
+        idx.save(str(path))
+        T.clear()
+        load_index(str(path))
+        assert T.active() is None
+        assert T.pending_mismatch() is not None
+
+    def test_stamp_integration(self):
+        """runtime.profile.stamp() reports the active table's hash (the
+        trend.py comparability key)."""
+        assert rtprofile.stamp()["tune_table"] is None
+        table = _tiny_table({("scan", "ip", 8, 8, 3000, 16):
+                               TuneConfig("scan", chunk=1024)})
+        T.install(table)
+        assert rtprofile.stamp()["tune_table"] == table.table_hash()
+
+
+# --------------------------------------------------------------------------
+# dispatch integration
+# --------------------------------------------------------------------------
+
+class TestDispatch:
+    def test_tuned_scan_is_bit_identical(self, corpus, queries):
+        idx = make_index("flat,lpq8", corpus, metric="ip")
+        s0, i0, st0 = engine.topk(jnp_q := np.asarray(queries),
+                                  idx.store, K, "ip")
+        assert st0["tuned"] is False
+
+        table = _tiny_table({("fused_topk", "ip", 8, len(queries),
+                                idx.store.n, 16):
+                               TuneConfig("scan", chunk=1024)})
+        with T.pinned(table):
+            s1, i1, st1 = engine.topk(jnp_q, idx.store, K, "ip")
+        assert st1["tuned"] is True
+        assert st1["chunks"] > st0["chunks"]           # config really used
+        np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+
+    def test_tile_query_routing(self):
+        from repro.kernels import ops as Kops
+
+        fb = T.fallback("fused_topk").bq
+        assert Kops.fused_query_tile() == fb
+        table = _tiny_table({("fused_topk", "ip", 8, 64, 8192, 64):
+                               TuneConfig("fused", bq=64, bn=256)})
+        T.install(table)
+        assert Kops.fused_query_tile(64, 8192, 64, metric="ip",
+                                     bits=8) == 64
+        # a bucket the table never measured -> fallback constants
+        assert Kops.fused_query_tile(64, 8192, 128, metric="ip",
+                                     bits=8) == fb
+
+    def test_lookup_counters(self):
+        table = _tiny_table({("scan", "ip", 8, 8, 3000, 16):
+                               TuneConfig("scan", chunk=1024)})
+        T.install(table)
+        hits, misses = (T.COUNTERS["tune_lookup_hit"],
+                        T.COUNTERS["tune_lookup_miss"])
+        assert T.lookup("scan", "ip", 8, 8, 3000, 16) is not None
+        assert T.lookup("scan", "l2", 8, 8, 3000, 16) is None
+        assert T.COUNTERS["tune_lookup_hit"] == hits + 1
+        assert T.COUNTERS["tune_lookup_miss"] == misses + 1
+
+    def test_searcher_pins_table_at_plan_time(self, corpus, queries):
+        """A plan freezes the table active at construction; installing
+        or clearing afterwards cannot change its compiled shapes."""
+        idx = make_index("flat,lpq8", corpus, metric="ip")
+        table = _tiny_table({("fused_topk", "ip", 8,
+                                T.bucket(len(queries)), idx.store.n, 16):
+                               TuneConfig("scan", chunk=1024)})
+        T.install(table)
+        searcher = idx.searcher(K, batch_sizes=(len(queries),))
+        T.clear()                                      # after plan time
+        res = searcher(queries)
+        assert res.stats["tuned"] is True
+
+        # and the inverse: a plan made untuned stays untuned
+        untuned = idx.searcher(K, batch_sizes=(len(queries),))
+        T.install(table)
+        res2 = untuned(queries)
+        assert res2.stats["tuned"] is False
+        np.testing.assert_array_equal(np.asarray(res.ids),
+                                      np.asarray(res2.ids))
+
+
+# --------------------------------------------------------------------------
+# maintenance re-tune trigger
+# --------------------------------------------------------------------------
+
+class TestMaintenanceRetune:
+    def test_pending_mismatch_triggers_retune(self, corpus):
+        idx = make_index("stream(flat,lpq8)", corpus, metric="ip")
+        fresh = _tiny_table({("scan", "ip", 8, 8, 3000, 16):
+                               TuneConfig("scan", chunk=1024)})
+        sched = MaintenanceScheduler(idx, retune_fn=lambda: fresh)
+
+        assert sched.run_once() == {"ran": False}      # nothing pending
+
+        T.adopt(TuneTable(stamp=_foreign_stamp()))     # parks
+        out = sched.run_once()
+        assert out["trigger"] == "tune" and out["swapped"] is True
+        assert out["table_hash"] == fresh.table_hash()
+        assert sched.counters["maintenance_retunes"] == 1
+        assert T.active() is fresh                     # re-tune installed
+        assert T.pending_mismatch() is None            # pending consumed
+        assert sched.run_once() == {"ran": False}      # trigger cleared
+
+    def test_no_retune_fn_means_no_trigger(self, corpus):
+        idx = make_index("stream(flat,lpq8)", corpus, metric="ip")
+        sched = MaintenanceScheduler(idx)
+        T.adopt(TuneTable(stamp=_foreign_stamp()))
+        assert sched.run_once() == {"ran": False}
