@@ -1,0 +1,175 @@
+"""Cascade benchmark + acceptance gate: multi-stage pipelines vs their
+single-stage ancestors on the fig2 grid → QPS, recall@10, bytes read per
+query (with the per-stage breakdown), written to ``BENCH_cascade.json``.
+
+The claim under test is the cascade subsystem's reason to exist: a
+coarse-head pipeline (``cascade(pq16x4|lpq8|r32)``) should reach the
+recall of the int8 single-stage scan (``flat,lpq8``) while reading no
+more bytes per query than the int4 single-stage scan (``flat,lpq4``) —
+precision where it matters, bandwidth where it doesn't.  The gate
+enforces exactly that; every cascade cell also records its measured
+per-stage ``(label, candidates, bytes, bits)`` rows so a regression is
+attributable to a stage, not just an arm.
+
+Bytes accounting: the engine's ``stats["bytes_read"]`` amortizes a full
+scan over the query batch (the code matrix is streamed once per pass),
+while refinement gathers are inherently per query.  The gate therefore
+compares ``model_bytes_per_query`` — the bytes ONE query must touch with
+no cross-query amortization: ``n * row_bytes`` for a scan stage plus
+``budget * row_bytes`` per refinement stage.  The measured whole-batch
+numbers ride along in each cell for attribution.
+
+    PYTHONPATH=src python -m benchmarks.bench_cascade            # full
+    PYTHONPATH=src python -m benchmarks.bench_cascade --smoke    # CI gate
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, runtime_meta, sized, timeit
+from repro.core.preserve import recall_at_k
+from repro.data import synthetic
+from repro.data.groundtruth import exact_topk
+from repro.knn import SearchParams, make_index
+
+K_TOP = 10
+
+#: arm -> cascade stage budgets (None for single-stage arms).  Budgets
+#: are the plan-time schedule a served cascade would run with — wide
+#: enough for the coarse head's candidate list to cover the true top-k,
+#: narrow enough that the refinement gathers stay under the int4 scan's
+#: per-query byte ceiling.  Smoke shapes get a proportionally narrower
+#: schedule (the head covers a 2048-row corpus with a shallower fetch).
+ARMS_FULL: dict[str, tuple[int, ...] | None] = {
+    "flat,lpq8": None,
+    "flat,lpq4": None,
+    "pq16x4": None,
+    "cascade(pq16x4|lpq8|r32)": (768, 96),
+    "cascade(flat,lpq4|r32)": (64,),
+}
+ARMS_SMOKE: dict[str, tuple[int, ...] | None] = {
+    **ARMS_FULL,
+    "cascade(pq16x4|lpq8|r32)": (512, 64),
+}
+
+#: the acceptance baselines: recall floor and per-query byte ceiling
+RECALL_FLOOR_ARM = "flat,lpq8"
+BYTES_CEIL_ARM = "flat,lpq4"
+
+
+def model_bytes_per_query(idx, budgets) -> int:
+    """Bytes one query touches, no cross-query amortization.
+
+    A scan stage streams every stored row (``n * row_bytes``); a cascade
+    adds one gathered row per surviving candidate per refinement stage
+    (``budget * row_bytes``).
+    """
+    if hasattr(idx, "stage_stores"):  # cascade: head scan + budgeted gathers
+        head = model_bytes_per_query(idx.head, None)
+        return head + sum(
+            int(b) * st.row_bytes for b, st in zip(budgets, idx.stage_stores)
+        )
+    return int(idx.store.n) * int(idx.store.row_bytes)
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=3000)
+    ap.add_argument("--q", type=int, default=64)
+    ap.add_argument("--out", default="BENCH_cascade.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="smaller shapes + 1 repeat (the CI gate)")
+    args = ap.parse_args(argv)
+
+    n, q_rows = (2048, 16) if args.smoke else (sized(args.n), args.q)
+    repeats = 1 if args.smoke else 3
+    arms = ARMS_SMOKE if args.smoke else ARMS_FULL
+
+    corpus, queries, metric = synthetic.load("product", n, q_rows)
+    queries = queries[:q_rows]
+    _gt_s, gt_i = exact_topk(corpus, queries, K_TOP, metric)
+
+    results = {
+        "meta": {
+            "n": n, "d": int(corpus.shape[1]), "q": q_rows, "k": K_TOP,
+            "backend": jax.default_backend(),
+            "platform": platform.platform(),
+            "smoke": bool(args.smoke),
+            "runtime": runtime_meta(),
+        },
+        "cells": {},
+    }
+
+    for factory, budgets in arms.items():
+        idx = make_index(factory, corpus, metric=metric, kmeans_iters=4,
+                         key=jax.random.PRNGKey(0))
+        sp = SearchParams(budgets=budgets)
+        sec = timeit(lambda i=idx, p=sp: i.search(queries, K_TOP, p),
+                     repeats=repeats, warmup=1)
+        res = idx.search(queries, K_TOP, sp)
+        rec = float(recall_at_k(gt_i, np.asarray(res.ids)))
+        per_q = model_bytes_per_query(idx, budgets)
+        cell = {
+            "us_per_call": sec * 1e6,
+            "qps": q_rows / max(sec, 1e-12),
+            "recall_at_10": rec,
+            "bytes_read_per_query": per_q,
+            "batch_bytes_read": int(res.stats["bytes_read"]),
+            "memory_bytes": idx.memory_bytes(),
+        }
+        if "stages" in res.stats:
+            # measured (label, candidates, whole-batch bytes, bits) per
+            # stage — the attribution rows the gate's postmortem needs
+            cell["stages"] = [
+                {"label": s[0], "candidates": int(s[1]),
+                 "bytes_read": int(s[2]), "bits": int(s[3])}
+                for s in res.stats["stages"]
+            ]
+            cell["budgets"] = list(budgets)
+        results["cells"][factory] = cell
+        emit(f"bench_cascade/{factory}", sec,
+             f"recall={rec:.4f} bytes_per_q={per_q}")
+
+    cells = results["cells"]
+    floor = cells[RECALL_FLOOR_ARM]["recall_at_10"]
+    ceiling = cells[BYTES_CEIL_ARM]["bytes_read_per_query"]
+    passing = [
+        name for name, cell in cells.items()
+        if "stages" in cell
+        and cell["recall_at_10"] >= floor
+        and cell["bytes_read_per_query"] <= ceiling
+    ]
+    results["gate"] = {
+        "recall_floor": floor,
+        "bytes_ceiling": ceiling,
+        "passing_arms": passing,
+        "ok": bool(passing),
+    }
+
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    print(f"[bench_cascade] wrote {args.out} ({len(cells)} cells), "
+          f"gate passing: {passing or 'NONE'}")
+
+    if not passing:
+        detail = {
+            name: (round(cell["recall_at_10"], 4),
+                   cell["bytes_read_per_query"])
+            for name, cell in cells.items() if "stages" in cell
+        }
+        raise SystemExit(
+            "cascade acceptance failed: no cascade arm reaches recall@10 "
+            f">= {floor:.4f} ({RECALL_FLOOR_ARM}) within {ceiling} "
+            f"bytes/query ({BYTES_CEIL_ARM}); cascade cells "
+            f"(recall, bytes/q): {detail}"
+        )
+
+
+if __name__ == "__main__":
+    main()

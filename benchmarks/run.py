@@ -22,6 +22,7 @@ rtprofile.apply(rtprofile.resolve())
 from benchmarks import (  # noqa: E402 — profile must precede jax init
     bench_adc,
     bench_autotune,
+    bench_cascade,
     bench_kernels,
     bench_serve,
     bench_stream,
@@ -45,6 +46,8 @@ SUITES = {
     "bench_serve": lambda: bench_serve.main(["--smoke"]),
     "bench_stream": lambda: bench_stream.main(["--smoke"]),
     "bench_adc": lambda: bench_adc.main(["--smoke"]),
+    # multi-stage cascade vs single-stage ancestors (recall/bytes gate)
+    "bench_cascade": lambda: bench_cascade.main(["--smoke"]),
     # tuned-vs-default dispatch (runs the measured autotuner first)
     "bench_autotune": lambda: bench_autotune.main(["--smoke"]),
     "table3": table3_graph_recall.main,

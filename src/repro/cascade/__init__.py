@@ -1,0 +1,7 @@
+# The cascade subsystem (DESIGN.md §14): multi-stage quantization
+# pipelines — a head index pruning into budgeted refinement stages — and
+# density-aware per-region Eq. 1 constants for the partitioned kinds.
+from repro.cascade.index import CascadeIndex
+from repro.cascade.regions import RegionQuant, density_scales
+
+__all__ = ["CascadeIndex", "RegionQuant", "density_scales"]

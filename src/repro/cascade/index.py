@@ -1,0 +1,292 @@
+"""The N-stage scoring cascade (kind ``"cascade"``, DESIGN.md §14).
+
+``cascade(pq16x4|lpq8|r32)`` generalizes the binary ``+rN`` rerank tail:
+the *head* stage (any non-stream factory) prunes the corpus to a
+per-stage candidate budget, every later stage re-scores the survivors at
+higher precision through ``engine.refine_among`` (the same compiled body
+as the rerank tail), and the final stage settles the top-k.  A cascade
+whose final stage is ``r32`` at budget n is therefore bit-identical to
+the exact fp32 search — the depth=n ``+rN`` equivalence, generalized.
+
+Budgets are plan-time knobs, not build-time structure: one built cascade
+serves any schedule.  ``SearchParams.budgets`` gives them explicitly
+(``budgets[i]`` = candidates entering refinement stage ``i``); when
+absent they derive geometrically from the rerank depth the Searcher
+resolves (final budget = depth, each earlier stage 4x wider, clamped to
+the corpus).  Monotonicity — each stage's fetch depth >= the next
+stage's >= k — is validated at plan time with a pointed ``ValueError``:
+a refinement stage can only prune candidates, never invent them.
+
+Per-stage stats ride in ``SearchResult.stats["stages"]`` as a tuple of
+``(label, candidates, bytes_read, bits)`` rows (tuples, not lists: stats
+are jit-static aux data and must stay hashable).
+"""
+
+from __future__ import annotations
+
+import io
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import engine
+from repro.knn import base as B
+from repro.knn import registry
+from repro.knn.spec import (
+    _QUANT_RE,
+    _RERANK_RE,
+    IndexSpec,
+    QuantSpec,
+    parse_factory,
+    resolve_build_spec,
+)
+
+
+def _build_stage_store(frag: str, corpus) -> engine.CodeStore:
+    """Materialize one refinement stage's store from its normalized
+    fragment: ``r32`` keeps the corpus verbatim, ``r8`` / ``lpq<bits>``
+    learn their own Eq. 1 constants (a refinement stage's accuracy must
+    not inherit the head's aggressive clamp — same rule as the ``+rN``
+    store)."""
+    mr = _RERANK_RE.match(frag)
+    if mr:
+        if int(mr.group(1)) == 32:
+            return engine.CodeStore.dense(corpus)
+        return QuantSpec(bits=8).build_store(corpus)
+    mq = _QUANT_RE.match(frag)
+    assert mq is not None, f"unparseable cascade stage {frag!r}"
+    return QuantSpec(
+        bits=int(mq.group(1)),
+        scheme=mq.group(2) or "gaussian",
+        sigmas=float(mq.group(3)) if mq.group(3) else 1.0,
+    ).build_store(corpus)
+
+
+def _stage_label(frag: str, store: engine.CodeStore) -> str:
+    return frag if store.bits < 32 else "r32"
+
+
+@registry.register("cascade")
+class CascadeIndex:
+    """Head index + ordered refinement stores over one id space."""
+
+    handles_rerank = True   # the plan owns every re-scoring pass
+
+    def __init__(
+        self,
+        metric: str,
+        head,
+        stage_specs: tuple[str, ...],
+        stage_stores: tuple[engine.CodeStore, ...],
+    ):
+        if not stage_stores:
+            raise ValueError("a cascade needs at least one refinement stage")
+        self.metric = metric
+        self.head = head
+        self.stage_specs = tuple(stage_specs)
+        self.stage_stores = tuple(stage_stores)
+
+    # -- protocol surface --------------------------------------------------
+    @property
+    def n(self) -> int:
+        return int(self.head.n)
+
+    @property
+    def d(self) -> Optional[int]:
+        from repro.knn.searcher import _query_dim
+
+        return _query_dim(self.head)
+
+    @property
+    def rerank_bits(self) -> int:
+        """Precision of the final (settling) stage — its presence is what
+        makes the Searcher thread a rerank depth into ``plan``."""
+        return int(self.stage_stores[-1].bits)
+
+    @property
+    def stages(self) -> str:
+        """The normalized '|'-joined stage list (head first)."""
+        head_factory = getattr(self.head, "factory", None)
+        if head_factory is None:
+            head_factory = self._head_factory
+        return "|".join((head_factory, *self.stage_specs))
+
+    # -- construction ------------------------------------------------------
+    @staticmethod
+    def build(
+        corpus,
+        spec: IndexSpec | str | None = None,
+        *,
+        key: jax.Array | None = None,
+        metric: str = "ip",
+        **overrides,
+    ) -> "CascadeIndex":
+        spec, params = resolve_build_spec("cascade", spec, metric=metric)
+        stages = str(params["stages"]).split("|")
+        head_spec = parse_factory(stages[0], metric=spec.metric)
+        # head build overrides (kmeans_iters, ef_construction...) pass
+        # through; 'stages' itself is the cascade's own parameter
+        head_overrides = {k: v for k, v in overrides.items() if k != "stages"}
+        head = registry.make_index(head_spec, corpus, key=key, **head_overrides)
+        idx = CascadeIndex(
+            metric=spec.metric,
+            head=head,
+            stage_specs=tuple(stages[1:]),
+            stage_stores=tuple(
+                _build_stage_store(f, corpus) for f in stages[1:]
+            ),
+        )
+        idx._head_factory = head_spec.to_factory()
+        return idx
+
+    # -- budgets -----------------------------------------------------------
+    def resolve_budgets(
+        self,
+        k: int,
+        explicit: Optional[tuple[int, ...]],
+        rerank_depth: Optional[int],
+    ) -> tuple[int, ...]:
+        """Per-stage fetch depths: ``out[i]`` candidates enter refinement
+        stage ``i`` (``out[0]`` is what the head returns); the final stage
+        emits k.  Explicit budgets are validated for monotonicity; derived
+        budgets are monotone by construction (final = resolved rerank
+        depth, each earlier stage 4x wider, clamped to the corpus)."""
+        n_stages = len(self.stage_stores)
+        n, cap = self.n, max(self.n, k)
+        if explicit is not None:
+            if len(explicit) != n_stages:
+                raise ValueError(
+                    f"cascade has {n_stages} refinement stage(s) "
+                    f"({'|'.join(self.stage_specs)}) but SearchParams.budgets "
+                    f"has {len(explicit)} entries: {explicit!r} — one fetch "
+                    "depth per refinement stage"
+                )
+            seq = tuple(int(b) for b in explicit) + (k,)
+            for i in range(len(seq) - 1):
+                if seq[i] < seq[i + 1]:
+                    raise ValueError(
+                        f"cascade budgets must be non-increasing and >= k: "
+                        f"stage {i} fetches {seq[i]} candidates but the next "
+                        f"stage needs {seq[i + 1]} (budgets={tuple(explicit)}, "
+                        f"k={k}) — a refinement stage can only prune "
+                        "candidates, never invent them"
+                    )
+            return tuple(min(b, cap) for b in seq[:-1])
+        from repro.knn.searcher import DEFAULT_RERANK_DEPTH
+
+        last = (max(k, min(int(rerank_depth), cap))
+                if rerank_depth is not None else DEFAULT_RERANK_DEPTH(k, n))
+        out = [last]
+        for _ in range(n_stages - 1):
+            out.append(min(cap, out[-1] * 4))
+        return tuple(reversed(out))
+
+    # -- query -------------------------------------------------------------
+    def plan(
+        self,
+        k: int,
+        params: Optional[B.SearchParams] = None,
+        *,
+        mesh=None,
+        rerank_depth: Optional[int] = None,
+    ):
+        """Freeze budgets + per-stage runners into one pure runner: the
+        head prunes, each stage refines via ``engine.refine_among``, and
+        the Searcher compiles the whole chain per batch bucket."""
+        sp = (params or B.SearchParams()).validate()
+        budgets = self.resolve_budgets(k, sp.budgets, rerank_depth)
+        head_runner = self.head.plan(budgets[0], sp, mesh=mesh)
+        outs = tuple(budgets[1:]) + (k,)
+        labels = tuple(
+            _stage_label(f, st)
+            for f, st in zip(self.stage_specs, self.stage_stores)
+        )
+
+        def run(queries: jax.Array) -> B.SearchResult:
+            q = jnp.asarray(queries, jnp.float32)
+            res = head_runner(q)
+            stats = dict(res.stats)
+            s, ids = res.scores, res.ids
+            total_bytes = int(stats.get("bytes_read", 0))
+            stage_rows = [(
+                f"head:{self.head.kind}", int(budgets[0]), total_bytes,
+                int(stats.get("bits", 32)),
+            )]
+            for store, out_k, label in zip(self.stage_stores, outs, labels):
+                s, ids, sst = engine.refine_among(
+                    q, store, ids, out_k, self.metric
+                )
+                total_bytes += sst["bytes_read"]
+                stage_rows.append(
+                    (label, sst["candidates"], sst["bytes_read"], sst["bits"])
+                )
+            stats.update(
+                kind="cascade",
+                bytes_read=total_bytes,
+                stages=tuple(stage_rows),
+                cascade_stages=1 + len(self.stage_stores),
+                reranked=int(budgets[-1]),
+                rerank_bits=self.rerank_bits,
+            )
+            return B.SearchResult(s, ids, stats)
+
+        return run
+
+    def searcher(self, k: int, params: Optional[B.SearchParams] = None, **kw):
+        from repro.knn.searcher import Searcher
+
+        return Searcher(self, k, params, **kw)
+
+    def search(
+        self,
+        queries,
+        k: int,
+        params: Optional[B.SearchParams] = None,
+    ) -> B.SearchResult:
+        from repro.knn import searcher as S
+
+        return S.one_shot(self, queries, k, params)
+
+    # -- accounting --------------------------------------------------------
+    def memory_bytes(self) -> int:
+        return int(self.head.memory_bytes()) + sum(
+            st.memory_bytes() for st in self.stage_stores
+        )
+
+    # -- disk round-trip ---------------------------------------------------
+    def save(self, path) -> None:
+        buf = io.BytesIO()
+        self.head.save(buf)
+        arrays = {"cs_blob": np.frombuffer(buf.getvalue(), np.uint8)}
+        meta = {
+            "kind": "cascade",
+            "metric": self.metric,
+            "n": self.n,
+            "stages": self.stages,
+            "head_kind": self.head.kind,
+        }
+        for idx, st in enumerate(self.stage_stores):
+            a, m = st.state(prefix=f"cs{idx}_")
+            arrays.update(a)
+            meta.update(m)
+        B.save_state(path, arrays, meta)
+
+    @staticmethod
+    def load(path) -> "CascadeIndex":
+        arrays, meta = B.load_state(path)
+        blob = io.BytesIO(np.asarray(arrays["cs_blob"]).tobytes())
+        head = registry.get_impl(meta["head_kind"]).load(blob)
+        stages = str(meta["stages"]).split("|")
+        idx = CascadeIndex(
+            metric=meta["metric"],
+            head=head,
+            stage_specs=tuple(stages[1:]),
+            stage_stores=tuple(
+                engine.CodeStore.from_state(arrays, meta, prefix=f"cs{i}_")
+                for i in range(len(stages) - 1)
+            ),
+        )
+        idx._head_factory = stages[0]
+        return idx

@@ -1,0 +1,209 @@
+"""Density-aware per-region Eq. 1 constants (DESIGN.md §14).
+
+The paper fits ONE set of Eq. 1 constants per corpus; the stream
+subsystem already relaxed that to one set per sealed segment.  This
+module lifts the idea into the static kinds: one constant set per
+*region* — an IVF list or a graph neighborhood — so each region's
+quantizer matches its own local distribution (AQR-HNSW's density-aware
+quantization, PAPERS.md arXiv 2602.21600).
+
+Density-scaled clipping: the clamp width (in sigma units) of region r is
+
+    sigmas_r = base_sigmas * clip((mean_count / count_r) ** 0.25, 0.5, 2.0)
+
+— dense regions concentrate, so fewer sigmas capture their mass and the
+LSB shrinks (finer resolution where points crowd); sparse regions spread
+and get a wider clamp so their tails are not all saturated.  The fourth
+root keeps the scaling gentle; the [0.5, 2.0] clip bounds the worst case.
+Only the Gaussian-family schemes consume sigmas; range schemes
+(absmax/minmax) ignore it, exactly as they do globally.
+
+Codes quantized under different regions' constants live in different
+integer spaces, so regional scoring dequantizes per row
+(``engine.topk_among_regional``) instead of comparing raw codes.  When no
+regions were requested the global single-constant path is untouched —
+the graceful-degradation contract.
+
+Persistence reuses the stream subsystem's DimStats<->npz representation
+(``core.stats.stats_arrays``), stacked one row per region, plus the
+[R, d] constant stacks and the [N] assignment — all plain npz fragments
+under a caller-chosen prefix, like ``CodeStore.state``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant as Qz
+from repro.core import stats as St
+
+#: density-scale bounds: sigmas_r / base_sigmas stays inside these
+DENSITY_SCALE_RANGE = (0.5, 2.0)
+DENSITY_SCALE_POWER = 0.25
+
+
+def density_scales(counts: np.ndarray) -> np.ndarray:
+    """Per-region clamp-width multipliers from region populations."""
+    counts = np.asarray(counts, np.float64)
+    occupied = counts[counts > 0]
+    mean_count = float(occupied.mean()) if occupied.size else 1.0
+    lo, hi = DENSITY_SCALE_RANGE
+    scales = (mean_count / np.maximum(counts, 1.0)) ** DENSITY_SCALE_POWER
+    return np.clip(scales, lo, hi).astype(np.float32)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RegionQuant:
+    """Per-region Eq. 1 constants + the row -> region assignment.
+
+    assign [N] i32; lo/hi/zero [R, d] f32 constant stacks; sigmas [R]
+    the density-scaled clamp widths actually used; stats the stacked
+    per-region calibration ``DimStats`` (count [R], moments [R, d]) kept
+    for drift reporting.
+    """
+
+    assign: jax.Array
+    lo: jax.Array
+    hi: jax.Array
+    zero: jax.Array
+    sigmas: jax.Array
+    stats: St.DimStats
+    bits: int = dataclasses.field(metadata=dict(static=True))
+    scheme: str = dataclasses.field(metadata=dict(static=True))
+
+    # -- accounting --------------------------------------------------------
+    @property
+    def n_regions(self) -> int:
+        return int(self.lo.shape[0])
+
+    @property
+    def scale(self) -> jax.Array:
+        """[R, d] LSB sizes — what the regional scorer gathers per row."""
+        return (self.hi - self.lo) / (2.0 ** self.bits)
+
+    def memory_bytes(self) -> int:
+        return int(self.assign.nbytes) + 3 * int(self.lo.size) * 4
+
+    # -- fit / encode ------------------------------------------------------
+    @staticmethod
+    def fit(
+        corpus,
+        assign,
+        n_regions: int,
+        *,
+        bits: int = 8,
+        scheme: str = "gaussian",
+        sigmas: float = 1.0,
+    ) -> "RegionQuant":
+        """Fit one Eq. 1 constant set per region, density-scaled.
+
+        ``assign`` [N] maps each corpus row to its region (IVF list id /
+        nearest graph seed).  Empty regions get the empty-stats constants
+        (never consulted: no row is assigned to them).
+        """
+        corpus = np.asarray(corpus, np.float32)
+        assign = np.asarray(assign, np.int32)
+        counts = np.bincount(assign, minlength=n_regions)[:n_regions]
+        scales = density_scales(counts)
+        per_stats, per_params = [], []
+        for r in range(n_regions):
+            rows = corpus[assign == r]
+            s = St.corpus_stats(rows)
+            per_stats.append(s)
+            per_params.append(
+                Qz.params_from_stats(
+                    s, bits=bits, scheme=scheme,
+                    sigmas=float(sigmas * scales[r]),
+                )
+            )
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *per_stats
+        )
+        return RegionQuant(
+            assign=jnp.asarray(assign),
+            lo=jnp.stack([p.lo for p in per_params]),
+            hi=jnp.stack([p.hi for p in per_params]),
+            zero=jnp.stack([p.zero for p in per_params]),
+            sigmas=jnp.asarray(sigmas * scales),
+            stats=stacked,
+            bits=int(bits),
+            scheme=str(scheme),
+        )
+
+    def region_params(self, r: int) -> Qz.QuantParams:
+        """The r-th region's constants as an ordinary ``QuantParams``."""
+        return Qz.QuantParams(
+            lo=self.lo[r], hi=self.hi[r], zero=self.zero[r],
+            bits=self.bits, scheme=self.scheme,
+        )
+
+    def encode(self, corpus) -> jax.Array:
+        """Eq. 1 per row under the row's own region constants."""
+        x = jnp.asarray(corpus, jnp.float32)
+        lo, hi, zero = self.lo[self.assign], self.hi[self.assign], self.zero[self.assign]
+        span = jnp.maximum(hi - lo, 1e-12)
+        q = jnp.round((2.0 ** self.bits) * (x - zero) / span)
+        qmin, qmax = -(2 ** (self.bits - 1)), 2 ** (self.bits - 1) - 1
+        return jnp.clip(q, qmin, qmax).astype(jnp.int8)
+
+    def dequant(self, codes: jax.Array, rows: jax.Array) -> jax.Array:
+        """Midpoint reconstruction of ``codes`` gathered at row ids
+        ``rows`` — each row through its own region's inverse map."""
+        reg = self.assign[rows]
+        return codes.astype(jnp.float32) * self.scale[reg] + self.zero[reg]
+
+    # -- drift -------------------------------------------------------------
+    def region_stats(self, r: int) -> St.DimStats:
+        """Unstack the r-th region's calibration stats."""
+        return jax.tree_util.tree_map(lambda x: x[r], self.stats)
+
+    def drift_report(self, live_corpus, live_assign) -> np.ndarray:
+        """Per-region calibration drift of a live corpus vs the fitted
+        constants: ``[R]`` floats from ``stats.calibration_drift`` (+inf
+        where either side is empty — stale by definition), the per-region
+        generalization of the stream subsystem's per-segment drift."""
+        live_corpus = np.asarray(live_corpus, np.float32)
+        live_assign = np.asarray(live_assign, np.int32)
+        out = np.zeros(self.n_regions, np.float64)
+        for r in range(self.n_regions):
+            live = St.corpus_stats(live_corpus[live_assign == r])
+            out[r] = St.calibration_drift(self.region_stats(r), live)
+        return out
+
+    # -- disk round-trip fragments ----------------------------------------
+    def state(self, prefix: str = "rg_") -> tuple[dict[str, Any], dict[str, Any]]:
+        """(arrays, meta) npz fragments, ``CodeStore.state``-style."""
+        arrays = {
+            f"{prefix}assign": np.asarray(self.assign),
+            f"{prefix}lo": np.asarray(self.lo),
+            f"{prefix}hi": np.asarray(self.hi),
+            f"{prefix}zero": np.asarray(self.zero),
+            f"{prefix}sigmas": np.asarray(self.sigmas),
+        }
+        arrays.update(St.stats_arrays(f"{prefix}st_", self.stats))
+        meta = {f"{prefix}regions": {
+            "n_regions": self.n_regions,
+            "bits": self.bits,
+            "scheme": self.scheme,
+        }}
+        return arrays, meta
+
+    @staticmethod
+    def from_state(arrays, meta, prefix: str = "rg_") -> "RegionQuant":
+        rm = meta[f"{prefix}regions"]
+        return RegionQuant(
+            assign=jnp.asarray(arrays[f"{prefix}assign"]),
+            lo=jnp.asarray(arrays[f"{prefix}lo"]),
+            hi=jnp.asarray(arrays[f"{prefix}hi"]),
+            zero=jnp.asarray(arrays[f"{prefix}zero"]),
+            sigmas=jnp.asarray(arrays[f"{prefix}sigmas"]),
+            stats=St.stats_from_arrays(f"{prefix}st_", arrays),
+            bits=int(rm["bits"]),
+            scheme=str(rm["scheme"]),
+        )

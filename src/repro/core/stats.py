@@ -167,6 +167,30 @@ def calibration_drift(calib: DimStats, live: DimStats) -> float:
     return float(jnp.mean(dmu + dsd))
 
 
+# -- DimStats <-> npz fragments --------------------------------------------
+# One representation for every persisted constant set: the stream
+# subsystem's per-segment calibration stats and the cascade subsystem's
+# per-region stats both round-trip through these.  Stacked variants
+# ([R] count, [R, d] moments — one row per region) serialize identically
+# because the helpers are shape-agnostic field maps.
+
+STATS_FIELDS = ("count", "mean", "m2", "amax", "vmin", "vmax")
+
+
+def stats_arrays(prefix: str, s: DimStats) -> dict:
+    """DimStats -> npz-fragment dict keyed ``{prefix}{field}``."""
+    import numpy as np
+
+    return {f"{prefix}{f}": np.asarray(getattr(s, f)) for f in STATS_FIELDS}
+
+
+def stats_from_arrays(prefix: str, arrays) -> DimStats:
+    """Inverse of :func:`stats_arrays`."""
+    return DimStats(
+        **{f: jnp.asarray(arrays[f"{prefix}{f}"]) for f in STATS_FIELDS}
+    )
+
+
 class StreamingStats:
     """Accumulate :class:`DimStats` over a stream of [n_i, d] batches.
 

@@ -17,12 +17,15 @@ from repro.engine.scorer import (
     merge_topk,
     pad_rows,
     quantize_pq_lut,
+    refine_among,
+    regional_stats,
     remap_ids,
     rerank_among,
     search_stats,
     set_lut_cache,
     topk,
     topk_among,
+    topk_among_regional,
 )
 from repro.engine.store import PQ_CODE_BITS, CodeStore, PQStore
 
@@ -34,6 +37,9 @@ __all__ = [
     "quantize_pq_lut",
     "topk",
     "topk_among",
+    "topk_among_regional",
+    "refine_among",
+    "regional_stats",
     "rerank_among",
     "make_score_set",
     "search_stats",

@@ -405,6 +405,96 @@ def rerank_among(
 
 
 # --------------------------------------------------------------------------
+# cascade stages (DESIGN.md §14): budgeted refinement + per-region lookup
+# --------------------------------------------------------------------------
+
+def refine_among(
+    queries: jax.Array,
+    store: CodeStore,
+    cand_ids: jax.Array,
+    out_k: int,
+    metric: str,
+):
+    """One cascade refinement stage: re-score the surviving candidates at
+    this store's precision and keep the best ``out_k``.
+
+    Same compiled body as the rerank tail (``topk_among``) — a cascade's
+    final fp32 stage is therefore bit-identical to the ``+r32`` tail at
+    the same depth — but reports the stage-stat names the cascade
+    aggregates: its own fetch budget (``candidates`` = the incoming
+    candidate-list width), gathered payload bytes, and code width.
+    """
+    q = store.encode_queries(jnp.asarray(queries, jnp.float32))
+    s, i = topk_among(q, store, cand_ids, out_k, metric)
+    depth = int(cand_ids.shape[1])
+    stats = {
+        "candidates": depth,
+        "bytes_read": int(cand_ids.shape[0]) * depth * store.row_bytes,
+        "bits": int(store.bits),
+    }
+    return s, i, stats
+
+
+@partial(jax.jit, static_argnames=("k", "metric"))
+def topk_among_regional(
+    queries: jax.Array,
+    store: CodeStore,
+    region_scale: jax.Array,
+    region_zero: jax.Array,
+    assign: jax.Array,
+    cand_ids: jax.Array,
+    k: int,
+    metric: str,
+):
+    """Candidate top-k with per-region Eq. 1 constant lookup.
+
+    Codes quantized under different regions' constants are not comparable
+    in integer space, so the regional path scores fp32 ``queries``
+    against *dequantized* rows: each gathered candidate's region id
+    (``assign [N]``) selects its own ``region_scale`` / ``region_zero``
+    rows ([R, d]) and the code is mapped back to fp32 before the metric.
+    Everything else (empty-slot masking, -1 pads, base rebasing) matches
+    ``topk_among``.
+    """
+    L = cand_ids.shape[1]
+    k_eff = min(k, L)
+
+    def per_query(qv, ids):
+        ok = ids >= 0
+        safe = jnp.where(ok, ids, 0)
+        codes = store.take(safe).astype(jnp.float32)
+        reg = assign[safe]
+        x = codes * region_scale[reg] + region_zero[reg]
+        s = D.scores(qv[None], x, metric, quantized=False)[0]
+        s = jnp.where(ok, s.astype(jnp.float32), NEG)
+        top_s, pos = jax.lax.top_k(s, k_eff)
+        top_i = jnp.where(top_s > NEG, ids[pos], -1).astype(jnp.int32)
+        return top_s, top_i
+
+    s, i = jax.vmap(per_query)(queries, cand_ids)
+    if k_eff < k:
+        s = jnp.pad(s, ((0, 0), (0, k - k_eff)), constant_values=NEG)
+        i = jnp.pad(i, ((0, 0), (0, k - k_eff)), constant_values=-1)
+    if store.base:
+        i = jnp.where(i >= 0, i + store.base, -1)
+    return s, i
+
+
+def regional_stats(store, cand_ids) -> dict[str, Any]:
+    """Stats delta of one ``topk_among_regional`` call: the gathered code
+    payload plus the per-row constant lookup (scale + zero, fp32 [d])."""
+    depth = int(cand_ids.shape[1])
+    const_bytes = 2 * 4 * int(store.d)
+    return {
+        "candidates": depth,
+        "bytes_read": int(cand_ids.shape[0]) * depth * (store.row_bytes + const_bytes),
+        "bits": int(store.bits),
+        "packed": bool(store.packed),
+        "regional": True,
+    }
+
+
+# --------------------------------------------------------------------------
 # Distributed merge (corpus row-sharded over one or more mesh axes)
 # --------------------------------------------------------------------------
 

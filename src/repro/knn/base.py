@@ -39,11 +39,18 @@ class SearchParams:
                kernels
     nprobe     probed lists per query (ivf)
     ef_search  beam width of the graph walk (hnsw, graph)
+    budgets    per-stage fetch depths of a cascade index (DESIGN.md §14):
+               ``budgets[i]`` is how many candidates refinement stage
+               ``i`` receives; must be non-increasing and each >= k
+               (validated at plan time).  ``None`` = geometric defaults.
+               A tuple (not a list) so SearchParams stays hashable — it
+               rides inside compiled-plan and result-cache keys.
     """
 
     chunk: int = 16384
     nprobe: int = 8
     ef_search: int = 100
+    budgets: Optional[tuple[int, ...]] = None
 
     def merged(self, **overrides) -> "SearchParams":
         live = {k: v for k, v in overrides.items() if v is not None}
@@ -58,6 +65,18 @@ class SearchParams:
                 raise ValueError(
                     f"SearchParams.{name} must be a positive int, got {v!r}"
                 )
+        if self.budgets is not None:
+            if not isinstance(self.budgets, tuple) or not self.budgets:
+                raise ValueError(
+                    f"SearchParams.budgets must be a non-empty tuple of "
+                    f"positive ints (or None), got {self.budgets!r}"
+                )
+            for v in self.budgets:
+                if not isinstance(v, int) or isinstance(v, bool) or v <= 0:
+                    raise ValueError(
+                        f"SearchParams.budgets entries must be positive "
+                        f"ints, got {v!r} in {self.budgets!r}"
+                    )
         return self
 
 

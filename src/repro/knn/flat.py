@@ -84,6 +84,12 @@ class FlatIndex:
             "flat", spec, metric=metric,
             quant=quant_spec_from_kwargs(quantized, bits, scheme, sigmas, params),
         )
+        if _p.get("regions"):
+            # spec parsing rejects this; guard direct-kwargs construction too
+            raise ValueError(
+                "per-region Eq. 1 constants need a partitioned kind (ivf / "
+                "hnsw / graph) — the flat scan has no regions to key them on"
+            )
         store = (
             engine.CodeStore.dense(corpus)
             if spec.quant is None

@@ -59,6 +59,14 @@ class GraphIndex:
     # becomes metric.  internal_metric is what the walk actually uses.
     internal_metric: str = "l2"
     aug: bool = False
+    # per-seed-neighborhood Eq. 1 constants ('graph,lpq8,regions' —
+    # DESIGN.md §14).  Neighborhood r = rows nearest seed r in USER space
+    # (the seeds' augmentation column is dropped for assignment, so live
+    # corpora assign identically to the build).  The walk store stays
+    # single-constant; walked candidates are re-scored through the
+    # regional dequant path in the user metric before the cut to k.
+    regions: Optional["RegionQuant"] = None
+    region_store: Optional[engine.CodeStore] = None   # user-space regional codes
 
     @property
     def n(self) -> int:
@@ -155,11 +163,32 @@ class GraphIndex:
         cents = IVF.kmeans(corpus, min(n_seeds, n), key)
         seed_ids = jnp.argmax(D.l2_scores(cents, corpus), axis=-1).astype(jnp.int32)
 
+        regions = region_store = None
+        if spec.params.get("regions"):
+            # seed neighborhoods double as quantization regions: one
+            # Eq. 1 constant set per seed, fitted in user space
+            from repro.cascade import RegionQuant
+
+            seeds_user = cents[:, : user_corpus.shape[1]]
+            r_assign = jnp.argmax(
+                D.l2_scores(user_corpus, seeds_user), axis=-1
+            )
+            regions = RegionQuant.fit(
+                user_corpus, np.asarray(r_assign), int(cents.shape[0]),
+                bits=spec.quant.bits, scheme=spec.quant.scheme,
+                sigmas=spec.quant.sigmas,
+            )
+            region_store = engine.CodeStore.from_codes(
+                regions.encode(user_corpus), spec.quant.learn(user_corpus),
+                pack=spec.quant.effective_packed,
+            )
+
         idx = GraphIndex(
             metric=metric, degree=degree, store=store,
             adj=jnp.asarray(adj), seeds=cents, seed_ids=seed_ids,
             internal_metric=internal_metric, aug=aug,
             rerank_store=build_rerank_store(spec, user_corpus),
+            regions=regions, region_store=region_store,
         )
         idx.build_seconds = time.perf_counter() - t0
         return idx
@@ -193,7 +222,8 @@ class GraphIndex:
         n_entry = min(8, self.seeds.shape[0])
 
         def run(queries: jax.Array) -> B.SearchResult:
-            qf = jnp.asarray(queries, jnp.float32)
+            qu = jnp.asarray(queries, jnp.float32)     # user space, for regions
+            qf = qu
             if self.aug:
                 qf = jnp.concatenate(
                     [qf, jnp.zeros((qf.shape[0], 1), jnp.float32)], axis=-1
@@ -215,6 +245,22 @@ class GraphIndex:
                      **engine.search_stats(
                          self.store, candidates=cand_bound, chunks=1,
                          rows_read=qf.shape[0] * cand_bound)}
+            if self.regions is not None:
+                # re-score walked candidates under each row's own seed-
+                # neighborhood constants, in the USER metric and space
+                # (the walk's augmented/internal scores only order)
+                rst = engine.regional_stats(self.region_store, ids)
+                scores, ids = engine.topk_among_regional(
+                    qu, self.region_store, self.regions.scale,
+                    self.regions.zero, self.regions.assign, ids, k,
+                    self.metric,
+                )
+                stats.update(
+                    regional=True,
+                    regional_candidates=rst["candidates"],
+                    bytes_read=stats["bytes_read"] + rst["bytes_read"],
+                )
+                return B.SearchResult(scores, ids, stats)
             return B.SearchResult(scores[:, :k], ids[:, :k], stats)
 
         return run
@@ -243,7 +289,25 @@ class GraphIndex:
         total = self.store.memory_bytes() + graph + seeds
         if self.rerank_store is not None:
             total += self.rerank_store.memory_bytes()
+        if self.regions is not None:
+            total += self.regions.memory_bytes()
+            total += self.region_store.memory_bytes()
         return total
+
+    def region_drift(self, live_corpus):
+        """Per-neighborhood calibration drift of a live corpus against the
+        fitted constants ([n_seeds] floats; +inf marks empty cells).  Live
+        rows assign by user-space seed proximity — the build's own
+        assignment rule, so drift against the build corpus is exactly 0."""
+        if self.regions is None:
+            raise ValueError(
+                "region_drift needs a per-region build — construct the "
+                "index with an '...,regions' factory (e.g. 'graph,lpq8,regions')"
+            )
+        live = jnp.asarray(live_corpus, jnp.float32)
+        seeds_user = self.seeds[:, : self.region_store.d]
+        live_assign = jnp.argmax(D.l2_scores(live, seeds_user), axis=-1)
+        return self.regions.drift_report(live, live_assign)
 
     # ------------------------------------------------------------------
     def save(self, path: str) -> None:
@@ -252,6 +316,11 @@ class GraphIndex:
             rr_a, rr_m = self.rerank_store.state(prefix="rr_")
             arrays.update(rr_a)
             meta.update(rr_m)
+        if self.regions is not None:
+            rg_a, rg_m = self.regions.state(prefix="rg_")
+            rs_a, rs_m = self.region_store.state(prefix="rgs_")
+            arrays.update({**rg_a, **rs_a})
+            meta.update({**rg_m, **rs_m})
         B.save_state(
             path,
             {"adj": self.adj, "seeds": self.seeds,
@@ -265,6 +334,12 @@ class GraphIndex:
     @staticmethod
     def load(path: str) -> "GraphIndex":
         arrays, meta = B.load_state(path)
+        regions = region_store = None
+        if "rg_regions" in meta:
+            from repro.cascade import RegionQuant
+
+            regions = RegionQuant.from_state(arrays, meta, prefix="rg_")
+            region_store = engine.CodeStore.from_state(arrays, meta, prefix="rgs_")
         return GraphIndex(
             metric=meta["metric"], degree=meta["degree"],
             store=engine.CodeStore.from_state(arrays, meta),
@@ -275,4 +350,5 @@ class GraphIndex:
             internal_metric=meta["internal_metric"], aug=meta["aug"],
             rerank_store=(engine.CodeStore.from_state(arrays, meta, prefix="rr_")
                           if "rr_store" in meta else None),
+            regions=regions, region_store=region_store,
         )

@@ -49,6 +49,14 @@ class HNSWIndex:
     entry: int
     build_seconds: float = 0.0
     rerank_store: Optional[engine.CodeStore] = None
+    # per-neighborhood Eq. 1 constants ('hnsw,lpq8,regions' — DESIGN.md
+    # §14).  The walk store stays single-constant (build-time host pruning
+    # compares raw codes, which is only valid inside one code space); the
+    # beam's ef candidates are then re-scored through the regional dequant
+    # path before the cut to k.  All three fields are None on global builds.
+    regions: Optional["RegionQuant"] = None
+    region_store: Optional[engine.CodeStore] = None   # regionally-coded corpus
+    region_cents: Optional[jax.Array] = None          # [R, d] neighborhood centers
 
     # ------------------------------------------------------------------
     @property
@@ -194,11 +202,34 @@ class HNSWIndex:
                 if levels[p] >= max_level and levels[p] > levels[entry]:
                     entry = int(p)
 
+        regions = region_store = region_cents = None
+        if spec.params.get("regions"):
+            # neighborhoods = ~sqrt(n) kmeans cells over the corpus; a
+            # folded key so global builds keep their exact level sampling
+            from repro.cascade import RegionQuant
+            from repro.core import distances as D
+            from repro.knn.ivf import kmeans
+
+            n_regions = max(1, min(64, int(round(math.sqrt(n)))))
+            region_cents = kmeans(corpus, n_regions, jax.random.fold_in(key, 1))
+            assign = jnp.argmax(D.l2_scores(corpus, region_cents), axis=-1)
+            regions = RegionQuant.fit(
+                corpus, np.asarray(assign), n_regions,
+                bits=spec.quant.bits, scheme=spec.quant.scheme,
+                sigmas=spec.quant.sigmas,
+            )
+            region_store = engine.CodeStore.from_codes(
+                regions.encode(corpus), spec.quant.learn(corpus),
+                pack=spec.quant.effective_packed,
+            )
+
         layers = [jnp.asarray(a) for a in adj]
         idx = HNSWIndex(
             metric=metric, m=m, store=store,
             layers=layers, levels=levels, entry=entry,
             rerank_store=build_rerank_store(spec, corpus),
+            regions=regions, region_store=region_store,
+            region_cents=region_cents,
         )
         idx.build_seconds = time.perf_counter() - t0
         return idx
@@ -227,6 +258,7 @@ class HNSWIndex:
         score_set = self._score_set()
 
         def run(queries: jax.Array) -> B.SearchResult:
+            qf = jnp.asarray(queries, jnp.float32)
             q = self.prepare_queries(queries)
             nq = q.shape[0]
 
@@ -250,6 +282,21 @@ class HNSWIndex:
                          self.store, candidates=cand_bound,
                          chunks=len(self.layers),
                          rows_read=nq * cand_bound)}
+            if self.regions is not None:
+                # re-score the beam's survivors under each row's own
+                # neighborhood constants before the cut to k
+                rst = engine.regional_stats(self.region_store, ids)
+                scores, ids = engine.topk_among_regional(
+                    qf, self.region_store, self.regions.scale,
+                    self.regions.zero, self.regions.assign, ids, k,
+                    self.metric,
+                )
+                stats.update(
+                    regional=True,
+                    regional_candidates=rst["candidates"],
+                    bytes_read=stats["bytes_read"] + rst["bytes_read"],
+                )
+                return B.SearchResult(scores, ids, stats)
             return B.SearchResult(scores[:, :k], ids[:, :k], stats)
 
         return run
@@ -279,7 +326,26 @@ class HNSWIndex:
         total = self.store.memory_bytes() + graph
         if self.rerank_store is not None:
             total += self.rerank_store.memory_bytes()
+        if self.regions is not None:
+            total += self.regions.memory_bytes()
+            total += self.region_store.memory_bytes()
+            total += int(self.region_cents.size) * 4
         return total
+
+    def region_drift(self, live_corpus):
+        """Per-neighborhood calibration drift of a live corpus against the
+        fitted constants ([R] floats; +inf marks empty cells).  Live rows
+        are assigned by the build-time neighborhood centers."""
+        if self.regions is None:
+            raise ValueError(
+                "region_drift needs a per-region build — construct the "
+                "index with an '...,regions' factory (e.g. 'hnsw,lpq8,regions')"
+            )
+        from repro.core import distances as D
+
+        live = jnp.asarray(live_corpus, jnp.float32)
+        live_assign = jnp.argmax(D.l2_scores(live, self.region_cents), axis=-1)
+        return self.regions.drift_report(live, live_assign)
 
     # ------------------------------------------------------------------
     def save(self, path: str) -> None:
@@ -288,6 +354,12 @@ class HNSWIndex:
             rr_a, rr_m = self.rerank_store.state(prefix="rr_")
             s_arrays = {**s_arrays, **rr_a}
             s_meta = {**s_meta, **rr_m}
+        if self.regions is not None:
+            rg_a, rg_m = self.regions.state(prefix="rg_")
+            rs_a, rs_m = self.region_store.state(prefix="rgs_")
+            s_arrays = {**s_arrays, **rg_a, **rs_a,
+                        "rg_cents": np.asarray(self.region_cents)}
+            s_meta = {**s_meta, **rg_m, **rs_m}
         arrays = {"levels": self.levels, **s_arrays}
         for l, adj in enumerate(self.layers):
             arrays[f"layer_{l}"] = adj
@@ -304,6 +376,13 @@ class HNSWIndex:
         layers = [
             jnp.asarray(arrays[f"layer_{l}"]) for l in range(meta["n_layers"])
         ]
+        regions = region_store = region_cents = None
+        if "rg_regions" in meta:
+            from repro.cascade import RegionQuant
+
+            regions = RegionQuant.from_state(arrays, meta, prefix="rg_")
+            region_store = engine.CodeStore.from_state(arrays, meta, prefix="rgs_")
+            region_cents = jnp.asarray(arrays["rg_cents"])
         return HNSWIndex(
             metric=meta["metric"], m=meta["m"],
             store=engine.CodeStore.from_state(arrays, meta),
@@ -312,4 +391,6 @@ class HNSWIndex:
             build_seconds=float(meta.get("build_seconds", 0.0)),
             rerank_store=(engine.CodeStore.from_state(arrays, meta, prefix="rr_")
                           if "rr_store" in meta else None),
+            regions=regions, region_store=region_store,
+            region_cents=region_cents,
         )

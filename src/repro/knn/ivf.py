@@ -79,6 +79,11 @@ class IVFIndex:
     lists: jax.Array                     # [nlist, max_list] i32, -1 pad
     store: engine.CodeStore              # corpus payload at any precision
     rerank_store: Optional[engine.CodeStore] = None
+    # per-list Eq. 1 constants ('ivf64,lpq8,regions' — DESIGN.md §14):
+    # the store's codes are encoded under each row's own list constants
+    # and fine scoring runs the regional dequant path; None = the global
+    # single-constant path, bit-identical to pre-region builds
+    regions: Optional["RegionQuant"] = None
 
     # -- legacy views ------------------------------------------------------
     @property
@@ -138,15 +143,35 @@ class IVFIndex:
         for c, b in enumerate(buckets):
             lists[c, : len(b)] = b
 
-        store = (
-            engine.CodeStore.dense(corpus)
-            if spec.quant is None
-            else spec.quant.build_store(corpus)
-        )
+        regions = None
+        if p.get("regions"):
+            # density-aware per-list constants: each row encoded under its
+            # own list's Eq. 1 fit (spec validation guarantees quant here)
+            from repro.cascade import RegionQuant
+
+            regions = RegionQuant.fit(
+                corpus, assign_np, nlist,
+                bits=spec.quant.bits, scheme=spec.quant.scheme,
+                sigmas=spec.quant.sigmas,
+            )
+            # the store keeps nominal global constants for persistence /
+            # compat, but its codes are regional — only the regional
+            # dequant path in plan() may score them
+            store = engine.CodeStore.from_codes(
+                regions.encode(corpus), spec.quant.learn(corpus),
+                pack=spec.quant.effective_packed,
+            )
+        else:
+            store = (
+                engine.CodeStore.dense(corpus)
+                if spec.quant is None
+                else spec.quant.build_store(corpus)
+            )
         return IVFIndex(
             metric=spec.metric, nlist=nlist, max_list=max_list,
             centroids=cents, lists=jnp.asarray(lists), store=store,
             rerank_store=build_rerank_store(spec, corpus),
+            regions=regions,
         )
 
     # ------------------------------------------------------------------
@@ -183,15 +208,27 @@ class IVFIndex:
             cand = self.lists[probe].reshape(qq.shape[0], -1)
 
             # 3) fine scoring + top-k through the engine (gather, unpack-
-            #    as-needed, mask empties, select)
-            scores, ids = engine.topk_among(qq, self.store, cand, k, self.metric)
-
-            stats = {"kind": "ivf", "nprobe": nprobe,
-                     **engine.search_stats(
-                         self.store,
-                         candidates=nprobe * self.max_list,
-                         chunks=nprobe,
-                         rows_read=qq.shape[0] * nprobe * self.max_list)}
+            #    as-needed, mask empties, select).  Regional builds must
+            #    dequantize per row — codes from different lists live in
+            #    different integer spaces, so raw-code scoring would
+            #    silently compare across constant sets.
+            if self.regions is not None:
+                scores, ids = engine.topk_among_regional(
+                    qf, self.store, self.regions.scale, self.regions.zero,
+                    self.regions.assign, cand, k, self.metric,
+                )
+                stats = {"kind": "ivf", "nprobe": nprobe, "chunks": nprobe,
+                         **engine.regional_stats(self.store, cand)}
+            else:
+                scores, ids = engine.topk_among(
+                    qq, self.store, cand, k, self.metric
+                )
+                stats = {"kind": "ivf", "nprobe": nprobe,
+                         **engine.search_stats(
+                             self.store,
+                             candidates=nprobe * self.max_list,
+                             chunks=nprobe,
+                             rows_read=qq.shape[0] * nprobe * self.max_list)}
             return B.SearchResult(scores, ids, stats)
 
         return run
@@ -221,7 +258,24 @@ class IVFIndex:
         base += self.centroids.size * 4 + self.lists.size * 4
         if self.rerank_store is not None:
             base += self.rerank_store.memory_bytes()
+        if self.regions is not None:
+            base += self.regions.memory_bytes()
         return base
+
+    def region_drift(self, live_corpus):
+        """Per-list calibration drift of a live corpus against the fitted
+        per-region constants ([nlist] floats; +inf marks stale/empty
+        lists).  Live rows are assigned by the build centroids, so the
+        report answers 'would this corpus still be well-served by the
+        constants each list learned at build time?'."""
+        if self.regions is None:
+            raise ValueError(
+                "region_drift needs a per-region build — construct the "
+                "index with an '...,regions' factory (e.g. 'ivf64,lpq8,regions')"
+            )
+        live = jnp.asarray(live_corpus, jnp.float32)
+        live_assign = jnp.argmax(D.l2_scores(live, self.centroids), axis=-1)
+        return self.regions.drift_report(live, live_assign)
 
     # ------------------------------------------------------------------
     def save(self, path: str) -> None:
@@ -230,6 +284,10 @@ class IVFIndex:
             rr_a, rr_m = self.rerank_store.state(prefix="rr_")
             arrays.update(rr_a)
             meta.update(rr_m)
+        if self.regions is not None:
+            rg_a, rg_m = self.regions.state(prefix="rg_")
+            arrays.update(rg_a)
+            meta.update(rg_m)
         B.save_state(
             path,
             {"centroids": self.centroids, "lists": self.lists, **arrays},
@@ -241,6 +299,11 @@ class IVFIndex:
     @staticmethod
     def load(path: str) -> "IVFIndex":
         arrays, meta = B.load_state(path)
+        regions = None
+        if "rg_regions" in meta:
+            from repro.cascade import RegionQuant
+
+            regions = RegionQuant.from_state(arrays, meta, prefix="rg_")
         return IVFIndex(
             metric=meta["metric"], nlist=meta["nlist"],
             max_list=meta["max_list"],
@@ -249,4 +312,5 @@ class IVFIndex:
             store=engine.CodeStore.from_state(arrays, meta),
             rerank_store=(engine.CodeStore.from_state(arrays, meta, prefix="rr_")
                           if "rr_store" in meta else None),
+            regions=regions,
         )

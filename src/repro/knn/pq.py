@@ -88,6 +88,13 @@ class PQIndex:
             "pq", spec, metric=metric,
             m=m, bits=bits, lpq_tables=lpq_tables, kmeans_iters=kmeans_iters,
         )
+        if p.get("regions"):
+            # spec parsing rejects this; guard direct-kwargs construction too
+            raise ValueError(
+                "per-region Eq. 1 constants need a partitioned kind (ivf / "
+                "hnsw / graph) — PQ codebooks already adapt per subspace, "
+                "and its codes carry no region assignment"
+            )
         m = int(p["m"])
         # codeword-count knob: 2^bits codewords per subspace codebook
         # (``pq16x4`` = 16, ``pq16`` = 256); PQStore validates the width

@@ -45,6 +45,7 @@ def _ensure_registered() -> None:
     if _IMPORTED:
         return
     _IMPORTED = True
+    from repro.cascade import index  # noqa: F401  (kind "cascade")
     from repro.knn import flat, graph_index, hnsw, ivf, pq  # noqa: F401
     from repro.stream import mutable  # noqa: F401  (kind "stream")
 

@@ -29,6 +29,15 @@ build parameters.  ``parse_factory`` turns FAISS-style strings into specs:
     "stream(ivf256,lpq4)+r32"  mutable LSM-style wrapper around any other
                             kind: memtable + quantized segments +
                             tombstones + live compaction (DESIGN.md §10)
+    "cascade(pq16x4|lpq8|r32)"  N-stage scoring cascade (DESIGN.md §14):
+                            the head stage (any non-stream factory) prunes
+                            the corpus to a per-stage candidate budget,
+                            each later stage re-scores the survivors at
+                            higher precision (lpq<bits> int codes, r8 int8,
+                            r32 fp32), the final stage settles the top-k
+    "ivf64,lpq8,regions"    per-region Eq. 1 constants: one constant set
+                            per IVF list / graph neighborhood instead of
+                            one global set, with density-scaled clipping
 
 Grammar: comma-separated fragments.  Exactly one *kind* fragment
 (``flat`` | ``ivf<nlist>`` | ``hnsw<M>`` | ``graph<degree>`` |
@@ -42,6 +51,15 @@ The mutable wrapper is an outer production: ``stream(<factory>)[+r<N>]``,
 where ``<factory>`` is any non-stream factory string (the sealed-segment
 kind) and the rerank suffix — whether written inside or outside the
 parens — names the precision of the cross-segment merge/rerank store.
+
+The cascade is a second outer production: ``cascade(<head>|<stage>|...)``
+with ``|``-separated stages.  The head is any non-stream, non-cascade
+factory string; every later stage is a precision fragment — ``lpq<bits>``
+(its own Eq. 1 constants, learned on the build corpus) or ``r8`` / ``r32``
+(the rerank-store precisions).  Stage fetch budgets are *plan-time* knobs
+(``SearchParams.budgets``), not grammar, so one built cascade serves any
+budget schedule.  ``stream(cascade(...))`` composes; a rerank fragment
+inside the head is rejected — write it as a later stage instead.
 """
 
 from __future__ import annotations
@@ -65,6 +83,9 @@ KIND_PARAM = {
     # the mutable LSM wrapper; its "parameter" is a whole inner factory
     # string carried in params["inner"], not a numeric fragment
     "stream": (None, None),
+    # the multi-stage scoring cascade; its "parameter" is the normalized
+    # "|"-joined stage list carried in params["stages"]
+    "cascade": (None, None),
 }
 
 
@@ -195,6 +216,25 @@ class IndexSpec:
                 "of the kind its sealed segments are built as, e.g. "
                 "parse_factory('stream(flat,lpq4)')"
             )
+        if self.kind == "cascade":
+            if "stages" not in self.params:
+                raise ValueError(
+                    "a cascade spec needs params['stages'] — the "
+                    "'|'-joined stage list, e.g. "
+                    "parse_factory('cascade(pq16x4|lpq8|r32)')"
+                )
+            if self.rerank_bits is not None:
+                raise ValueError(
+                    "a cascade spec takes no rerank fragment: the rerank "
+                    "tail is generalized by the stage list — write "
+                    "'cascade(...|r32)' instead of '+r32'"
+                )
+        if self.params.get("regions") and self.kind in ("flat", "pq"):
+            raise ValueError(
+                f"'regions' needs a partitioned kind (per-IVF-list or "
+                f"per-graph-neighborhood constants): {self.kind!r} has no "
+                "regions — use ivf/hnsw/graph, e.g. 'ivf64,lpq8,regions'"
+            )
         if (self.kind == "pq"
                 and self.params.get("bits") not in (None, *PQ_CODE_BITS)):
             raise ValueError(
@@ -214,6 +254,8 @@ class IndexSpec:
             if self.rerank_bits is not None:
                 frag += f"+r{self.rerank_bits}"
             return frag
+        if self.kind == "cascade":
+            return f"cascade({self.params['stages']})"
         pname, pdefault = KIND_PARAM[self.kind]
         frag = self.kind
         if pname is not None:
@@ -230,6 +272,8 @@ class IndexSpec:
             parts.append(qfrag)
         elif self.rerank_bits is not None:
             parts.append(f"r{self.rerank_bits}")
+        if self.params.get("regions"):
+            parts.append("regions")
         if self.metric != "ip":
             parts.append(self.metric)
         return ",".join(parts)
@@ -243,6 +287,80 @@ _RERANK_RE = re.compile(r"^r(\d+)$")
 
 
 _STREAM_RE = re.compile(r"^stream\((.+)\)(\+r(\d+))?$", re.IGNORECASE)
+_CASCADE_RE = re.compile(r"^cascade\((.+)\)$", re.IGNORECASE)
+
+
+def _parse_cascade(factory: str, metric: str | None) -> IndexSpec:
+    """``cascade(<head>|<stage>|...)`` -> a kind-"cascade" spec.
+
+    The head stage is parsed recursively (any non-stream, non-cascade
+    factory) and re-serialized in normalized form; later stages are
+    precision fragments (``lpq<bits>[@scheme][:sigmas]`` | ``r8`` |
+    ``r32``).  The normalized ``"|"``-joined stage list rides in
+    ``params["stages"]`` so the spec stays a plain JSON-able record,
+    exactly like stream's ``params["inner"]``.
+    """
+    m = _CASCADE_RE.match(factory.strip())
+    assert m is not None
+    stages = [s.strip() for s in m.group(1).split("|")]
+    if len(stages) < 2:
+        raise ValueError(
+            f"cascade needs at least two '|'-separated stages (a head "
+            f"index and one refinement), got {factory!r}"
+        )
+    if _STREAM_RE.match(stages[0]) or _CASCADE_RE.match(stages[0]):
+        raise ValueError(
+            f"cascade head must be a plain kind, not {stages[0]!r}: "
+            "wrap the whole cascade in stream(...) instead of nesting"
+        )
+    head = parse_factory(stages[0], metric=metric)
+    if head.rerank_bits is not None:
+        raise ValueError(
+            f"cascade head {stages[0]!r} carries a rerank fragment — "
+            "write the exact tail as a later stage: "
+            "cascade(pq16x4|lpq8|r32), not cascade(pq16x4+r32|lpq8)"
+        )
+    norm = [head.to_factory()]
+    for s in stages[1:]:
+        frag = s.lower()
+        mq = _QUANT_RE.match(frag)
+        if mq:
+            if mq.group(4):
+                raise ValueError(
+                    f"cascade stage {s!r} carries a '+r' suffix — each "
+                    "precision is its own stage: write '|lpq8|r32'"
+                )
+            bits = int(mq.group(1))
+            if not 1 <= bits <= 8:
+                raise ValueError(
+                    f"lpq bits must be in [1, 8], got {bits} in {factory!r}"
+                )
+            scheme = mq.group(2) or "gaussian"
+            Qz.Scheme(scheme)  # validate early
+            sigmas = float(mq.group(3)) if mq.group(3) else 1.0
+            norm.append(
+                QuantSpec(bits=bits, scheme=scheme, sigmas=sigmas).to_fragment()
+            )
+            continue
+        mr = _RERANK_RE.match(frag)
+        if mr:
+            rbits = int(mr.group(1))
+            if rbits not in RERANK_BITS:
+                raise ValueError(
+                    f"rerank precision must be one of {RERANK_BITS} "
+                    f"(fp32 or int8 store), got r{rbits} in {factory!r}"
+                )
+            norm.append(f"r{rbits}")
+            continue
+        raise ValueError(
+            f"cascade stage {s!r} in {factory!r} must be a precision "
+            "fragment: lpq<bits>[@scheme][:sigmas], r8, or r32"
+        )
+    return IndexSpec(
+        kind="cascade",
+        metric=head.metric,
+        params={"stages": "|".join(norm)},
+    )
 
 
 def _parse_stream(factory: str, metric: str | None) -> IndexSpec:
@@ -291,10 +409,18 @@ def parse_factory(factory: str, metric: str | None = None) -> IndexSpec:
     """
     if _STREAM_RE.match(factory.strip()):
         return _parse_stream(factory, metric)
+    if _CASCADE_RE.match(factory.strip()):
+        return _parse_cascade(factory, metric)
+    if re.match(r"^cascade\(.*\)\+r\d+$", factory.strip(), re.IGNORECASE):
+        raise ValueError(
+            f"a cascade takes no '+r' suffix ({factory!r}): the final "
+            "stage IS the rerank — spell it cascade(...|r32)"
+        )
     kind = None
     params: dict[str, Any] = {}
     quant = None
     rerank_bits: Optional[int] = None
+    regions = False
     out_metric = metric or "ip"
     metric_seen = False
 
@@ -319,6 +445,11 @@ def parse_factory(factory: str, metric: str | None = None) -> IndexSpec:
                 raise ValueError(f"duplicate metric fragment in {factory!r}")
             metric_seen = True
             out_metric = frag
+            continue
+        if frag == "regions":
+            if regions:
+                raise ValueError(f"duplicate regions fragment in {factory!r}")
+            regions = True
             continue
         mq = _QUANT_RE.match(frag)
         if mq:
@@ -391,6 +522,13 @@ def parse_factory(factory: str, metric: str | None = None) -> IndexSpec:
                 f"{quant.to_fragment()!r} in {factory!r}"
             )
         params["lpq_tables"] = True
+    if regions:
+        if quant is None:
+            raise ValueError(
+                f"'regions' scales per-region Eq. 1 constants — add an "
+                f"lpq fragment, e.g. 'ivf64,lpq8,regions' (in {factory!r})"
+            )
+        params["regions"] = True
     return IndexSpec(kind=kind, metric=out_metric, quant=quant, params=params,
                      rerank_bits=rerank_bits)
 

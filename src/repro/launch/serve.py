@@ -108,6 +108,14 @@ def _parse_args(argv):
                     help="named runtime profile (default: "
                          "$REPRO_RUNTIME_PROFILE or 'default'); see "
                          "repro.runtime.profile.PROFILES")
+    ap.add_argument("--profile-file", default=None,
+                    help="load the runtime profile from a JSON file "
+                         "(RuntimeProfile.to_dict() format) instead of "
+                         "the named registry; overrides --profile")
+    ap.add_argument("--budgets", default=None,
+                    help="explicit cascade stage budgets, comma-separated "
+                         "(e.g. '128,32' for cascade(pq16x4|lpq8|r32)); "
+                         "cascade indexes only — validated at plan time")
     ap.add_argument("--cache", type=int, default=0,
                     help="result-cache capacity in entries (0 = off)")
     ap.add_argument("--cache-ttl", type=float, default=0.0,
@@ -165,7 +173,10 @@ def main(argv: list[str] | None = None) -> None:
     args = _parse_args(argv)
 
     # profile first: platform/XLA/core-pinning are process-start state
-    prof = rtprofile.apply(rtprofile.resolve(args.profile))
+    prof = rtprofile.apply(
+        rtprofile.from_file(args.profile_file) if args.profile_file
+        else rtprofile.resolve(args.profile)
+    )
 
     import jax
 
@@ -233,8 +244,10 @@ def main(argv: list[str] | None = None) -> None:
         print(f"[serve] saved index -> {args.save_index} "
               f"(tune={tunetable.active_hash() or 'none'})")
 
+    budgets = (tuple(int(b) for b in args.budgets.split(","))
+               if args.budgets else None)
     sp = SearchParams(chunk=args.chunk, nprobe=args.nprobe,
-                      ef_search=args.ef_search)
+                      ef_search=args.ef_search, budgets=budgets)
     if args.batch_sizes:
         buckets = tuple(sorted(int(b) for b in args.batch_sizes.split(",")))
     else:
@@ -286,8 +299,9 @@ def main(argv: list[str] | None = None) -> None:
             d_depth = ctrl.policy.rerank_depth(
                 primary.rerank.depth if primary.rerank else 0, args.k
             )
+            # params(sp, k) also shrinks cascade stage budgets (floor k)
             degraded = index.searcher(
-                args.k, ctrl.policy.params(sp), batch_sizes=buckets,
+                args.k, ctrl.policy.params(sp, args.k), batch_sizes=buckets,
                 shards=mesh, rerank=(d_depth or False),
             )
         return primary, degraded

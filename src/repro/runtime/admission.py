@@ -100,12 +100,29 @@ class DegradePolicy:
     nprobe_scale: float = 0.5
     ef_scale: float = 0.5
     degrade_cost: float = 0.25
+    budget_scale: float = 0.5       # cascade stage budgets shrink by this
 
-    def params(self, sp: SearchParams) -> SearchParams:
+    def params(self, sp: SearchParams, k: Optional[int] = None) -> SearchParams:
         return dataclasses.replace(
             sp,
             nprobe=max(1, int(sp.nprobe * self.nprobe_scale)),
             ef_search=max(1, int(sp.ef_search * self.ef_scale)),
+            budgets=self.budgets(sp.budgets, k),
+        )
+
+    def budgets(
+        self, budgets: Optional[tuple[int, ...]], k: Optional[int]
+    ) -> Optional[tuple[int, ...]]:
+        """Degraded cascade stage budgets: every fetch depth shrinks by
+        ``budget_scale`` but no stage drops below ``k`` (or below 1 when
+        k is unset) — the shrunken schedule must stay a valid
+        non-increasing cascade, so the floor is applied uniformly and
+        ceil-rounding preserves the ordering of the full schedule."""
+        if budgets is None:
+            return None
+        floor = max(1, int(k or 1))
+        return tuple(
+            max(floor, int(-(-b * self.budget_scale // 1))) for b in budgets
         )
 
     def rerank_depth(self, depth: int, k: int) -> int:

@@ -5,12 +5,18 @@ Searcher recomputes every repeat from scratch.  Two tiers fix that
 (DESIGN.md §12):
 
   * **result tier** (``CachedSearcher`` over a ``TTLLRUCache``): the
-    whole ``SearchResult`` keyed on a fingerprint of (query bytes, k,
-    params, index version).  A hit is **bit-identical** to the uncached
-    run — the cache stores the materialized score/id arrays the searcher
-    produced, so parity is structural, not approximate.  The version
-    component (serve wires the replan generation / manifest epoch in)
-    invalidates across mutations without any scan of the cache.
+    whole ``SearchResult`` keyed on a fingerprint of (canonicalized
+    query bytes, k, params, index version).  Keys are *semantic*: the
+    query batch is normalized to contiguous fp32 before fingerprinting
+    — exactly the form every compiled runner consumes — so a float64
+    copy, an f32 view with exotic strides, and the original batch all
+    hit one entry instead of three.  A hit is **bit-identical** to the
+    uncached run: the searcher itself is handed the same canonical
+    array that was fingerprinted, and the cache stores the materialized
+    score/id arrays it produced, so parity is structural, not
+    approximate.  The version component (serve wires the replan
+    generation / manifest epoch in) invalidates across mutations
+    without any scan of the cache.
   * **LUT tier** (``LUTCache`` installed via ``engine.set_lut_cache``):
     per-query ADC lookup tables keyed on (query fingerprint, codebook
     fingerprint, metric).  Repeated query batches skip the
@@ -178,12 +184,25 @@ class CachedSearcher:
     def buckets_for(self, q_len: int):
         return self.searcher.buckets_for(q_len)
 
+    @staticmethod
+    def canonicalize(queries) -> np.ndarray:
+        """The semantic-key normal form: contiguous fp32.
+
+        Every compiled runner starts with ``jnp.asarray(q, float32)``,
+        so any two batches that agree after this cast are the *same
+        search* — dtype (f64 copies), memory layout (strided views) and
+        array flavor (jax vs numpy) must not fragment the key space.
+        Fingerprinting the canonical array and then searching that same
+        array is what keeps hits bit-identical to misses.
+        """
+        return np.ascontiguousarray(np.asarray(queries, dtype=np.float32))
+
     def _key(self, q: np.ndarray):
         s = self.searcher
         return ("result", fingerprint(q), s.k, s.params, self.version())
 
     def __call__(self, queries):
-        q = np.asarray(queries)
+        q = self.canonicalize(queries)
         key = self._key(q)
         entry = self.cache.get(key)
         if entry is not MISS:

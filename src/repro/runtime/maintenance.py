@@ -16,6 +16,12 @@ layer's three-phase protocol (DESIGN.md §12):
                                       lock; concurrent deletes re-applied,
                                       competing swaps detected and dropped
 
+After a successful swap the scheduler also owns the *rerank-store
+refresh*: the swap invalidated the stream index's cached merge re-score
+store, so ``index.refresh_rerank_store()`` rebuilds it eagerly inside
+the same background round (counted as ``rerank_refreshes``) instead of
+letting the next query's plan pay for it.
+
 Triggers, checked every ``interval_s``:
 
   * **structural** — the compactor's own ``should_compact`` (too many
@@ -148,6 +154,12 @@ class MaintenanceScheduler:
             out["swapped"] = bool(self.index.apply_compaction(pending))
             out["recalibrated"] = pending.recalibrated
             out["epoch"] = self.index.epoch
+            if out["swapped"]:
+                # the swap invalidated the merge re-score store; rebuild
+                # it here so the cost lands in this background round, not
+                # in the next query's plan
+                out["rerank_refreshed"] = bool(
+                    self.index.refresh_rerank_store())
 
         if self.telemetry is not None:
             with self.telemetry.span("maintenance/compact", trigger=trigger):
@@ -157,6 +169,8 @@ class MaintenanceScheduler:
         self.counters["maintenance_rounds"] += 1
         if out["swapped"]:
             self.counters["maintenance_swaps"] += 1
+            if out.get("rerank_refreshed"):
+                self.counters["rerank_refreshes"] += 1
         elif not out.get("empty"):
             self.counters["maintenance_conflicts"] += 1
         if self.telemetry is not None:

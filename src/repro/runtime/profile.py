@@ -118,6 +118,41 @@ def register(profile: RuntimeProfile) -> RuntimeProfile:
     return profile
 
 
+def from_file(path) -> RuntimeProfile:
+    """Load a profile from a JSON file and register it.
+
+    The file holds one ``RuntimeProfile.to_dict()`` object (see
+    ``to_file`` for the writer); unknown fields are rejected with the
+    field list, so a typo'd knob cannot silently fall back to a default.
+    This is the ``serve --profile-file`` path: ops can ship environment
+    definitions as reviewed artifacts instead of editing code.
+    """
+    import json
+
+    with open(path) as f:
+        d = json.load(f)
+    if not isinstance(d, dict):
+        raise ValueError(
+            f"profile file {path!r} must hold one JSON object "
+            f"(RuntimeProfile.to_dict()), got {type(d).__name__}"
+        )
+    if "name" not in d:
+        raise ValueError(
+            f"profile file {path!r} needs a 'name' field — profiles are "
+            "named artifacts stamped into every report"
+        )
+    return register(RuntimeProfile.from_dict(d))
+
+
+def to_file(profile: RuntimeProfile, path) -> None:
+    """Write ``profile`` as JSON — ``from_file``'s exact inverse."""
+    import json
+
+    with open(path, "w") as f:
+        json.dump(profile.to_dict(), f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
 def resolve(name: Optional[str] = None) -> RuntimeProfile:
     """Resolve a profile: explicit name > $REPRO_RUNTIME_PROFILE > default."""
     name = name or os.environ.get(ENV_VAR) or "default"

@@ -121,7 +121,13 @@ class MutableIndex:
                                    self.policy, self.inner_overrides)
         self._key = key if key is not None else jax.random.PRNGKey(0)
         self.counters = {"seals": 0, "compactions": 0, "recalibrations": 0,
-                         "upserts": 0, "deletes": 0, "swap_conflicts": 0}
+                         "upserts": 0, "deletes": 0, "swap_conflicts": 0,
+                         "rerank_refreshes": 0}
+        # (key, CodeStore) memo of the merge re-score store.  The payload
+        # only changes when the segment set swaps (manifest epoch) or the
+        # memtable ingests (upsert counter): deletes flip live bitmaps,
+        # not raw rows, so the cached codes stay valid across them.
+        self._merge_cache: Optional[tuple[tuple[int, int], engine.CodeStore]] = None
         # serializes writes/seals/compaction swaps against each other and
         # against plan-time snapshot assembly; reentrant because compact
         # -> _seal -> maybe_compact nests.  The expensive background
@@ -426,6 +432,55 @@ class MutableIndex:
         parts_i.append(mi)
         return np.concatenate(parts_i), np.concatenate(parts_v)
 
+    # -- merge re-score store (cached) --------------------------------------
+    def _merge_store_key(self) -> tuple[int, int]:
+        return (int(self.manifest.epoch), int(self.counters["upserts"]))
+
+    def _build_merge_store(self, mvecs, m: int) -> engine.CodeStore:
+        """Materialize the merge re-score store over every raw payload
+        (sealed segments + memtable tail).  Caller holds the lock."""
+        if self.rerank_bits == 8:
+            # int8 merge codes need constants learned over the union
+            parts = ([self.manifest.raw_concat()]
+                     if self.manifest.segments else [])
+            if m:
+                parts.append(mvecs)
+            return QuantSpec(bits=8).build_store(
+                jnp.asarray(np.concatenate(parts))
+            )
+        # None / 32 -> exact fp32
+        return engine.CodeStore.concat(
+            [engine.CodeStore.dense(jnp.asarray(seg.raw))
+             for seg in self.manifest.segments]
+            + ([engine.CodeStore.dense(jnp.asarray(mvecs))] if m else [])
+        )
+
+    def _merge_store_cached(self, mvecs, m: int) -> engine.CodeStore:
+        key = self._merge_store_key()
+        if self._merge_cache is not None and self._merge_cache[0] == key:
+            return self._merge_cache[1]
+        store = self._build_merge_store(mvecs, m)
+        self._merge_cache = (key, store)
+        self.counters["rerank_refreshes"] += 1
+        return store
+
+    def refresh_rerank_store(self) -> bool:
+        """Eagerly rebuild the merge re-score store if stale (the
+        maintenance scheduler calls this after a compaction swap, so the
+        rebuild cost lands in the background pass, not the next query's
+        plan).  Returns True when a rebuild actually happened."""
+        with self._lock:
+            key = self._merge_store_key()
+            if self._merge_cache is not None and self._merge_cache[0] == key:
+                return False
+            mvecs, _mids = self.memtable.snapshot()
+            m = int(mvecs.shape[0])
+            if not self.manifest.segments and not m:
+                return False
+            self._merge_cache = (key, self._build_merge_store(mvecs, m))
+            self.counters["rerank_refreshes"] += 1
+            return True
+
     # -- query -------------------------------------------------------------
     def plan(
         self,
@@ -487,22 +542,7 @@ class MutableIndex:
             rescore = len(sources) > 1 or rerank_depth is not None
             merge_store = None
             if rescore and sources:
-                if self.rerank_bits == 8:
-                    # int8 merge codes need constants learned over the union
-                    parts = ([self.manifest.raw_concat()]
-                             if self.manifest.segments else [])
-                    if m:
-                        parts.append(mvecs)
-                    merge_store = QuantSpec(bits=8).build_store(
-                        jnp.asarray(np.concatenate(parts))
-                    )
-                else:                           # None / 32 -> exact fp32
-                    merge_store = engine.CodeStore.concat(
-                        [engine.CodeStore.dense(jnp.asarray(seg.raw))
-                         for seg in self.manifest.segments]
-                        + ([engine.CodeStore.dense(jnp.asarray(mvecs))]
-                           if m else [])
-                    )
+                merge_store = self._merge_store_cached(mvecs, m)
 
             live = self.live_stats.stats
             drifts = [seg.drift(live) for seg in self.manifest.segments]

@@ -146,17 +146,10 @@ class Segment:
 
 
 # -- DimStats <-> npz fragments (shared with the manifest's live stats) ----
+# The canonical helpers moved to ``core.stats`` when the cascade
+# subsystem's per-region constants adopted the same representation;
+# these aliases keep the stream-internal import surface stable.
 
-_STATS_FIELDS = ("count", "mean", "m2", "amax", "vmin", "vmax")
-
-
-def _stats_arrays(prefix: str, s: St.DimStats) -> dict[str, np.ndarray]:
-    return {f"{prefix}{f}": np.asarray(getattr(s, f)) for f in _STATS_FIELDS}
-
-
-def _stats_from_arrays(prefix: str, arrays) -> St.DimStats:
-    import jax.numpy as jnp
-
-    return St.DimStats(
-        **{f: jnp.asarray(arrays[f"{prefix}{f}"]) for f in _STATS_FIELDS}
-    )
+_STATS_FIELDS = St.STATS_FIELDS
+_stats_arrays = St.stats_arrays
+_stats_from_arrays = St.stats_from_arrays

@@ -1,0 +1,365 @@
+"""Cascade subsystem tests (DESIGN.md §14): the multi-stage grammar and
+budget validation, per-stage stats, the final-fp32 exactness guarantee,
+density-aware per-region constants, and the satellite runtime hooks
+(profile files, semantic cache keys, background rerank refresh, degraded
+cascade budgets)."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.knn import SearchParams, load_index, make_index, parse_factory
+
+K = 10
+N, D = 384, 32
+
+
+@pytest.fixture(scope="module")
+def corpus_queries():
+    corpus = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(0), (N, D))) * 0.05
+    # density contrast: the first block concentrates, so per-region
+    # constants actually differ from the global fit
+    corpus[: N // 3] *= 0.2
+    queries = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(1), (8, D))) * 0.05
+    return corpus, queries
+
+
+# ---------------------------------------------------------------------------
+# grammar
+# ---------------------------------------------------------------------------
+
+def test_cascade_factory_round_trip():
+    for factory in ("cascade(pq16x4|lpq8|r32)", "cascade(flat,lpq4|r32)",
+                    "cascade(ivf8,lpq8|lpq8|r8)"):
+        spec = parse_factory(factory)
+        assert spec.kind == "cascade"
+        assert parse_factory(spec.to_factory()) == spec
+
+
+def test_regions_factory_round_trip():
+    for factory in ("ivf8,lpq8,regions", "hnsw8,lpq4,regions",
+                    "graph16,lpq8@absmax,regions"):
+        spec = parse_factory(factory)
+        assert spec.params.get("regions") is True
+        assert parse_factory(spec.to_factory()) == spec
+
+
+def test_cascade_needs_two_stages():
+    with pytest.raises(ValueError, match="stage"):
+        parse_factory("cascade(flat,lpq8)")
+
+
+def test_cascade_rejects_plus_r_suffix():
+    with pytest.raises(ValueError, match="cascade"):
+        parse_factory("cascade(flat,lpq4|lpq8)+r32")
+    # the final stage IS the rerank — the suffix spelling gets a pointed
+    # redirect, not a generic cannot-parse fallthrough
+    with pytest.raises(ValueError, match="final stage IS the rerank"):
+        parse_factory("cascade(flat,lpq4|r32)+r8")
+
+
+def test_regions_need_quant_fragment():
+    with pytest.raises(ValueError, match="lpq"):
+        parse_factory("ivf8,regions")
+
+
+def test_regions_rejected_for_unpartitioned_kinds():
+    for factory in ("flat,lpq8,regions", "pq16,regions"):
+        with pytest.raises(ValueError):
+            parse_factory(factory)
+
+
+# ---------------------------------------------------------------------------
+# budgets + per-stage stats
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def cascade_idx(corpus_queries):
+    corpus, _ = corpus_queries
+    return make_index("cascade(pq16x4|lpq8|r32)", corpus,
+                      key=jax.random.PRNGKey(0), kmeans_iters=4)
+
+
+def test_non_monotone_budgets_raise_pointed_error(cascade_idx, corpus_queries):
+    _, queries = corpus_queries
+    with pytest.raises(ValueError, match="never invent them"):
+        cascade_idx.search(queries, K,
+                           SearchParams(budgets=(32, 128)))
+    # a budget below k trips the same monotonicity rule (k rides as the
+    # final element of the checked sequence)
+    with pytest.raises(ValueError, match="never invent them"):
+        cascade_idx.search(queries, K, SearchParams(budgets=(64, K - 1)))
+
+
+def test_budget_arity_mismatch_raises(cascade_idx, corpus_queries):
+    _, queries = corpus_queries
+    with pytest.raises(ValueError, match="one fetch depth per"):
+        cascade_idx.search(queries, K, SearchParams(budgets=(64,)))
+
+
+def test_per_stage_stats_ride_on_results(cascade_idx, corpus_queries):
+    _, queries = corpus_queries
+    res = cascade_idx.search(queries, K, SearchParams(budgets=(128, 32)))
+    stages = res.stats["stages"]
+    assert res.stats["kind"] == "cascade"
+    assert res.stats["cascade_stages"] == 3 == len(stages)
+    labels = [row[0] for row in stages]
+    assert labels[0].startswith("head:") and labels[1:] == ["lpq8", "r32"]
+    cands = [row[1] for row in stages]
+    assert cands == [128, 128, 32]          # stage i receives budgets[i]
+    bits = [row[3] for row in stages]
+    assert bits == [4, 8, 32]
+    # total bytes_read is exactly the per-stage sum
+    assert res.stats["bytes_read"] == sum(row[2] for row in stages)
+
+
+def test_budgets_ride_in_searcher_plans(cascade_idx, corpus_queries):
+    _, queries = corpus_queries
+    sp = SearchParams(budgets=(128, 32))
+    eager = cascade_idx.search(queries, K, sp)
+    planned = cascade_idx.searcher(K, sp, batch_sizes=(4, 16))(queries)
+    np.testing.assert_array_equal(np.asarray(eager.ids),
+                                  np.asarray(planned.ids))
+    np.testing.assert_array_equal(np.asarray(eager.scores),
+                                  np.asarray(planned.scores))
+
+
+def test_final_fp32_stage_at_full_depth_is_exact(corpus_queries):
+    """cascade(...|r32) with the final budget = n == the exact fp32
+    search: ids exactly, scores to float tolerance (the same standard
+    the +r32 full-depth rerank test holds the Searcher to)."""
+    corpus, queries = corpus_queries
+    exact = make_index("flat", corpus).search(queries, K)
+    idx = make_index("cascade(flat,lpq4|r32)", corpus)
+    res = idx.search(queries, K, SearchParams(budgets=(N,)))
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(exact.ids))
+    np.testing.assert_allclose(np.asarray(res.scores),
+                               np.asarray(exact.scores), rtol=1e-5)
+
+
+def test_cascade_save_load_keeps_stage_structure(cascade_idx, corpus_queries,
+                                                 tmp_path):
+    _, queries = corpus_queries
+    path = str(tmp_path / "cascade.npz")
+    cascade_idx.save(path)
+    restored = load_index(path)
+    assert restored.stages == cascade_idx.stages
+    sp = SearchParams(budgets=(128, 32))
+    a = cascade_idx.search(queries, K, sp)
+    b = restored.search(queries, K, sp)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.scores), np.asarray(b.scores))
+    assert a.stats["stages"] == b.stats["stages"]
+
+
+# ---------------------------------------------------------------------------
+# per-region constants
+# ---------------------------------------------------------------------------
+
+def test_density_scales_widen_sparse_tighten_dense():
+    from repro.cascade import density_scales
+
+    scales = density_scales(np.array([1000, 10, 0]))
+    assert scales[0] < 1.0 < scales[1]       # dense tightens, sparse widens
+    lo, hi = 0.5, 2.0
+    assert (scales >= lo).all() and (scales <= hi).all()
+
+
+@pytest.mark.parametrize("factory,overrides", [
+    ("ivf8,lpq8,regions", {"kmeans_iters": 4}),
+    ("graph16,lpq8,regions", {"n_seeds": 16}),
+    ("hnsw8,lpq8,regions", {"ef_construction": 40, "batch_size": 128}),
+])
+def test_region_round_trip_and_drift(factory, overrides, corpus_queries,
+                                     tmp_path):
+    corpus, queries = corpus_queries
+    idx = make_index(factory, corpus, key=jax.random.PRNGKey(0), **overrides)
+    assert idx.regions is not None
+    res = idx.search(queries, K, SearchParams(nprobe=8, ef_search=40))
+    assert res.stats["regional"] is True
+
+    path = str(tmp_path / "regions.npz")
+    idx.save(path)
+    restored = load_index(path)
+    assert restored.regions is not None
+    b = restored.search(queries, K, SearchParams(nprobe=8, ef_search=40))
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(res.scores),
+                                  np.asarray(b.scores))
+
+    # drift: the build corpus assigns identically -> exactly 0 everywhere
+    # a region is populated; a shifted corpus drifts in every live region
+    dr = restored.region_drift(corpus)
+    finite = np.isfinite(dr)
+    assert finite.any()
+    np.testing.assert_array_equal(dr[finite], 0.0)
+    dr2 = restored.region_drift(corpus + 0.5)
+    assert (dr2[np.isfinite(dr2)] > 0).all()
+
+
+def test_region_constants_differ_across_regions(corpus_queries):
+    corpus, _ = corpus_queries
+    idx = make_index("ivf8,lpq8,regions", corpus, key=jax.random.PRNGKey(0),
+                     kmeans_iters=4)
+    scale = np.asarray(idx.regions.scale)
+    counts = np.bincount(np.asarray(idx.regions.assign), minlength=8)
+    live = counts > 1
+    assert live.sum() >= 2
+    # distinct distributions -> distinct LSB sizes
+    assert np.ptp(scale[live].mean(axis=1)) > 0
+
+
+def test_global_build_degrades_gracefully(corpus_queries, tmp_path):
+    """No 'regions' fragment -> the exact pre-region global path: no
+    regions attached, no regional stats key, bit-exact round-trip."""
+    corpus, queries = corpus_queries
+    idx = make_index("ivf8,lpq8", corpus, key=jax.random.PRNGKey(0),
+                     kmeans_iters=4)
+    assert idx.regions is None
+    res = idx.search(queries, K, SearchParams(nprobe=8))
+    assert "regional" not in res.stats
+    with pytest.raises(ValueError, match="regions"):
+        idx.region_drift(corpus)
+    path = str(tmp_path / "global.npz")
+    idx.save(path)
+    restored = load_index(path)
+    assert restored.regions is None
+    b = restored.search(queries, K, SearchParams(nprobe=8))
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(res.scores),
+                                  np.asarray(b.scores))
+
+
+def test_regions_rejected_at_spec_construction_for_flat_and_pq():
+    """The rejection fires as early as possible — already at IndexSpec
+    validation, before any build machinery runs."""
+    with pytest.raises(ValueError, match="partitioned"):
+        dataclasses.replace(parse_factory("flat,lpq8"),
+                            params={"regions": True})
+    with pytest.raises(ValueError, match="partitioned"):
+        dataclasses.replace(
+            parse_factory("pq16"),
+            params={**parse_factory("pq16").params, "regions": True},
+        )
+
+
+# ---------------------------------------------------------------------------
+# satellites: runtime hooks
+# ---------------------------------------------------------------------------
+
+def test_profile_file_round_trip(tmp_path):
+    from repro.runtime import profile as rtprofile
+
+    prof = rtprofile.RuntimeProfile(
+        name="test-file-prof", platform="cpu", host_device_count=2,
+        xla_flags=("--xla_foo=1",), seed=7, deterministic=False,
+    )
+    path = str(tmp_path / "prof.json")
+    rtprofile.to_file(prof, path)
+    loaded = rtprofile.from_file(path)
+    assert loaded == prof
+    assert rtprofile.PROFILES["test-file-prof"] == prof
+    del rtprofile.PROFILES["test-file-prof"]
+
+
+def test_profile_file_rejects_unknown_and_nameless(tmp_path):
+    import json
+
+    from repro.runtime import profile as rtprofile
+
+    bad = str(tmp_path / "bad.json")
+    with open(bad, "w") as f:
+        json.dump({"name": "x", "platfrm": "cpu"}, f)
+    with pytest.raises(ValueError, match="platfrm"):
+        rtprofile.from_file(bad)
+    nameless = str(tmp_path / "nameless.json")
+    with open(nameless, "w") as f:
+        json.dump({"platform": "cpu"}, f)
+    with pytest.raises(ValueError, match="name"):
+        rtprofile.from_file(nameless)
+
+
+def test_semantic_cache_keys_unify_query_representations(corpus_queries):
+    """A float64 copy and a strided fp32 view of the same batch must hit
+    the entry the canonical batch populated, and the hit must be
+    bit-identical to the original miss."""
+    from repro.runtime import CachedSearcher, TTLLRUCache
+
+    corpus, queries = corpus_queries
+    idx = make_index("flat,lpq8", corpus)
+    cached = CachedSearcher(idx.searcher(K), TTLLRUCache(capacity=8))
+
+    miss = cached(queries)
+    assert miss.stats["cache"] == "miss"
+
+    as_f64 = np.asarray(queries, np.float64)
+    hit = cached(as_f64)
+    assert hit.stats["cache"] == "hit"
+    np.testing.assert_array_equal(np.asarray(miss.ids), np.asarray(hit.ids))
+    np.testing.assert_array_equal(np.asarray(miss.scores),
+                                  np.asarray(hit.scores))
+
+    strided = np.ascontiguousarray(
+        np.stack([queries, queries], axis=1))[:, 0, :]
+    assert not strided.flags["C_CONTIGUOUS"]
+    hit2 = cached(strided)
+    assert hit2.stats["cache"] == "hit"
+    assert cached.cache.counters["misses"] == 1
+    assert cached.cache.counters["hits"] == 2
+
+
+def test_maintenance_refreshes_rerank_store_after_swap(corpus_queries):
+    from repro.runtime import MaintenanceScheduler
+
+    corpus, queries = corpus_queries
+    idx = make_index("stream(flat,lpq8)+r32", corpus, seal_threshold=64,
+                     auto_compact=False, key=jax.random.PRNGKey(0))
+    idx.searcher(K)(queries)                       # warm the merge cache
+    warm_refreshes = idx.counters["rerank_refreshes"]
+    assert warm_refreshes >= 1
+
+    sched = MaintenanceScheduler(idx, interval_s=10.0)
+    out = sched.run_once(force_full=True)
+    assert out["swapped"] is True
+    assert out["rerank_refreshed"] is True
+    assert sched.counters["rerank_refreshes"] == 1
+    assert idx.counters["rerank_refreshes"] == warm_refreshes + 1
+    # the scheduler pre-paid the rebuild: the next plan is cache-hot
+    idx.searcher(K)(queries)
+    assert idx.counters["rerank_refreshes"] == warm_refreshes + 1
+
+
+def test_merge_store_cache_invalidates_on_writes(corpus_queries):
+    corpus, queries = corpus_queries
+    idx = make_index("stream(flat,lpq8)+r32", corpus, seal_threshold=64,
+                     auto_compact=False, key=jax.random.PRNGKey(0))
+    idx.searcher(K)(queries)
+    base = idx.counters["rerank_refreshes"]
+    idx.searcher(K)(queries)                       # same epoch -> cache hit
+    assert idx.counters["rerank_refreshes"] == base
+    idx.upsert(np.arange(N, N + 4),
+               np.asarray(jax.random.normal(jax.random.PRNGKey(3), (4, D)))
+               * 0.05)
+    idx.searcher(K)(queries)                       # upsert -> rebuild
+    assert idx.counters["rerank_refreshes"] == base + 1
+
+
+def test_degrade_policy_shrinks_cascade_budgets(corpus_queries):
+    from repro.runtime import DegradePolicy
+
+    policy = DegradePolicy()                       # budget_scale = 0.5
+    assert policy.budgets((128, 32), K) == (64, 16)
+    assert policy.budgets((16, 12), K) == (K, K)   # floor at k, stays valid
+    assert policy.budgets(None, K) is None
+
+    # the degraded schedule actually plans and searches
+    corpus, queries = corpus_queries
+    idx = make_index("cascade(flat,lpq4|r32)", corpus)
+    sp = policy.params(SearchParams(budgets=(128,)), K)
+    assert sp.budgets == (64,)
+    res = idx.search(queries, K, sp)
+    assert res.stats["stages"][-1][1] == 64

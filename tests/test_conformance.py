@@ -41,6 +41,16 @@ FACTORIES = {
     "pq16x4+lpq,r32": {"kmeans_iters": 4},
     "stream(flat,lpq4)+r32": {"seal_threshold": 128},
     "stream(pq16x4,lpq8)+r32": {"seal_threshold": 128, "kmeans_iters": 4},
+    # the cascade subsystem (DESIGN.md §14): multi-stage refinement ...
+    "cascade(flat,lpq4|r32)": {},
+    "cascade(pq16x4|lpq8|r32)": {"kmeans_iters": 4},
+    # ... including as a stream inner (each sealed segment is a cascade)
+    "stream(cascade(flat,lpq8|r32))": {"seal_threshold": 128},
+    # ... and density-aware per-region Eq. 1 constants on every
+    # partitioned kind
+    "ivf8,lpq8,regions": {"kmeans_iters": 4},
+    "hnsw8,lpq8,regions": {"ef_construction": 40, "batch_size": 128},
+    "graph16,lpq4,regions": {"n_seeds": 16},
 }
 
 #: stats keys every search result must carry (the PR 2 engine schema);

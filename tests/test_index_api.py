@@ -34,6 +34,7 @@ CASES = {
     "graph": ("graph16,lpq8@gaussian:3", {"n_seeds": 16}),
     "pq": ("pq16+lpq", {"kmeans_iters": 4}),
     "stream": ("stream(flat,lpq8@gaussian:3)", {"seal_threshold": 128}),
+    "cascade": ("cascade(flat,lpq8@gaussian:3|r32)", {}),
 }
 
 FP32_CASES = {
@@ -43,6 +44,7 @@ FP32_CASES = {
     "graph": "graph16",
     "pq": "pq16",
     "stream": "stream(flat)",
+    "cascade": "cascade(flat|r32)",
 }
 
 
@@ -98,6 +100,10 @@ def test_quant_spec_honored(kind, corpus_queries, built):
         assert q8.lpq_tables and not fp.lpq_tables
         return
     assert q8.memory_bytes() < fp.memory_bytes()
+    if kind == "cascade":  # quant rides on the head; stages add stores
+        assert q8.head.params is not None and q8.head.params.bits == 8
+        assert q8.head.codes.dtype == jnp.int8
+        return
     assert q8.params is not None and q8.params.bits == 8
     payload = q8.codes if kind == "flat" else q8.data
     assert payload.dtype == jnp.int8
@@ -156,7 +162,9 @@ def test_factory_parse_fields():
      "graph24,lpq8@global_absmax", "flat,lpq4,angular",
      "stream(flat,lpq4)", "stream(ivf256,lpq8)+r32",
      "stream(pq16x4,lpq8)+r32",
-     "stream(hnsw32,lpq8@gaussian:3,l2)+r8"],
+     "stream(hnsw32,lpq8@gaussian:3,l2)+r8",
+     "cascade(flat,lpq4|r32)", "cascade(pq16x4|lpq8|r32)",
+     "stream(cascade(flat,lpq8|r32))", "ivf64,lpq8,regions"],
 )
 def test_factory_string_roundtrip(factory):
     spec = parse_factory(factory)
