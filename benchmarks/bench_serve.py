@@ -44,6 +44,13 @@ QUANTS = {"fp32": "", "lpq8": "lpq8@gaussian:3", "lpq4": "lpq4"}
 #: rerank candidate depths (0 = no rerank tail)
 RERANK_DEPTHS = (0, 50)
 
+#: factories served sharded under ``--mesh S`` (DESIGN.md §15): one
+#: single-index arm and one stream arm, both quantized scans
+MESH_ARMS = {
+    "flat/lpq8": "flat,lpq8@gaussian:3",
+    "stream/ivf64,lpq8": "stream(ivf64,lpq8)",
+}
+
 
 def _factory(kind_frag: str, quant_frag: str, depth: int) -> str:
     parts = [kind_frag]
@@ -52,6 +59,100 @@ def _factory(kind_frag: str, quant_frag: str, depth: int) -> str:
     elif depth:
         parts.append("r32")
     return ",".join(parts)
+
+
+def _mesh_main(args) -> None:
+    """``--mesh S``: the multi-device serving arm (DESIGN.md §15).
+
+    Each MESH_ARMS factory is built once, parity-gated (sharded ids AND
+    scores bit-equal to the unsharded searcher — a hard failure, never a
+    trajectory point), then drained under a mixed-size request load for
+    p50/p95/p99.  The cell also records the simulated per-device budget
+    (total index bytes / S * 1.2): for S >= 2 the whole index is past
+    one device's budget, so the arm only serves because placement splits
+    it.  Trend gating stays honest via ``runtime.n_devices`` — a mesh
+    run never compares against a single-device baseline.
+    """
+    S = args.mesh
+    if len(jax.devices()) < S:
+        raise SystemExit(
+            f"--mesh {S} needs {S} devices, found {len(jax.devices())} "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count)")
+    mesh = jax.make_mesh((S,), ("data",))
+
+    n = 2048 if args.smoke else sized(args.n)
+    requests = 4 if args.smoke else args.requests
+    corpus, queries, metric = synthetic.load("product", n, args.batch * requests)
+    corpus = corpus[:, : args.d]
+    queries = queries[:, : args.d]
+    gt = np.asarray(
+        make_index("flat", corpus, metric=metric).search(queries, K_TOP).ids)
+    sp = SearchParams(nprobe=8, ef_search=100)
+    small = max(1, args.batch // 4)
+
+    results = {
+        "meta": {
+            "n": n, "d": args.d, "batch": args.batch, "k": K_TOP,
+            "requests": requests, "backend": jax.default_backend(),
+            "platform": platform.platform(), "smoke": bool(args.smoke),
+            "mesh": S, "runtime": runtime_meta(),
+        },
+        "cells": {},
+    }
+
+    for name, factory in MESH_ARMS.items():
+        index = make_index(factory, corpus, metric=metric,
+                           key=jax.random.PRNGKey(0))
+        # parity gate first: a sharded plan that is not bit-identical to
+        # the unsharded one produces no number worth tracking
+        un = index.searcher(K_TOP, sp, batch_sizes=(args.batch,))
+        sh = index.searcher(K_TOP, sp, batch_sizes=(args.batch, small),
+                            shards=mesh)
+        ur, sr = un(queries[: args.batch]), sh(queries[: args.batch])
+        np.testing.assert_array_equal(np.asarray(ur.ids), np.asarray(sr.ids))
+        np.testing.assert_array_equal(np.asarray(ur.scores),
+                                      np.asarray(sr.scores))
+
+        total = index.memory_bytes()
+        budget = int(total / S * 1.2)
+        cell = {
+            "factory": factory, "memory_mb": total / 1e6,
+            "device_budget_mb": budget / 1e6,
+            "fits_one_device": bool(total <= budget),
+            "shards": sr.stats.get("shards"),
+            "placement": sr.stats.get("placement"),
+        }
+
+        # mixed-size drain: every 4th request is a small batch, latency
+        # percentiles over the whole stream
+        lat, all_ids, served = [], [], 0
+        jax.block_until_ready(sh(queries[:small]).ids)
+        for r in range(requests):
+            step = small if r % 4 == 3 else args.batch
+            q = queries[served : served + step]
+            if not len(q):
+                break
+            t0 = time.perf_counter()
+            res = sh(q)
+            jax.block_until_ready(res.ids)
+            lat.append(time.perf_counter() - t0)
+            all_ids.append(np.asarray(res.ids))
+            served += len(q)
+        ids = np.concatenate(all_ids)
+        rec = float(recall_at_k(gt[: len(ids)], ids))
+        p50, p95, p99 = (float(np.percentile(lat, p)) for p in (50, 95, 99))
+        cell.update({
+            "qps": served / sum(lat), "recall_at_10": rec,
+            "p50_ms": p50 * 1e3, "p95_ms": p95 * 1e3, "p99_ms": p99 * 1e3,
+        })
+        results["cells"][f"mesh{S}/{name}"] = cell
+        emit(f"bench_serve/mesh{S}/{name}", sum(lat) / len(lat),
+             f"qps={cell['qps']:.1f} p99_ms={p99 * 1e3:.2f} recall={rec:.4f}")
+
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    print(f"[bench_serve] wrote {args.out} "
+          f"({len(results['cells'])} mesh cells, parity OK)")
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -63,7 +164,16 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--out", default="BENCH_serve.json")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes + flat-only (the CI interpret-mode check)")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="serve the MESH_ARMS sharded over an S-device mesh "
+                         "instead of the single-device matrix (needs "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=S "
+                         "on CPU); write to a topology-specific --out")
     args = ap.parse_args(argv)
+
+    if args.mesh > 1:
+        _mesh_main(args)
+        return
 
     n = 2048 if args.smoke else sized(args.n)
     requests = 4 if args.smoke else args.requests

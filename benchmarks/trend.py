@@ -55,9 +55,12 @@ DEFAULT_RECALL_DROP = 0.01
 _META_KEYS = ("smoke", "backend")
 #: runtime-stamp keys that must match (profile/interpret/backend, plus
 #: the TuneTable dispatch hash — two runs dispatching through different
-#: measured tunings are different machines as far as QPS is concerned;
-#: old baselines without the key compare as None == None)
-_RUNTIME_KEYS = ("profile", "backend", "interpret", "tune_table")
+#: measured tunings are different machines as far as QPS is concerned —
+#: and the device topology: a 4-virtual-device mesh run must never gate
+#: against a 1-device baseline; old baselines without a key compare as
+#: None == None)
+_RUNTIME_KEYS = ("profile", "backend", "interpret", "tune_table",
+                 "n_devices")
 
 
 def walk_metrics(node, path: str = "") -> Iterator[tuple[str, str, float]]:
@@ -243,12 +246,28 @@ def _self_test() -> None:
         (r,) = run_gate([fp], base_dir)
         assert r["status"] == "skipped" and "tune_table" in r["note"], r
 
-        # 6. missing baseline: skipped with a note
+        # 6. topology flip: a 4-virtual-device mesh run is not the same
+        # machine as the 1-device baseline — refused, not failed
+        wide = json.loads(json.dumps(bad))
+        wide["meta"]["runtime"]["n_devices"] = 4
+        with open(bp) as f:
+            narrow = json.load(f)
+        narrow["meta"]["runtime"]["n_devices"] = 1
+        with open(bp, "w") as f:
+            json.dump(narrow, f)
+        with open(fp, "w") as f:
+            json.dump(wide, f)
+        (r,) = run_gate([fp], base_dir)
+        assert r["status"] == "skipped" and "n_devices" in r["note"], r
+        with open(bp, "w") as f:
+            json.dump(doc, f)
+
+        # 7. missing baseline: skipped with a note
         (r,) = run_gate([fp], os.path.join(td, "nowhere"))
         assert r["status"] == "skipped" and "no baseline" in r["note"], r
     print("[trend] self-test OK (clean pass, noise tolerated, injected "
-          "QPS+recall regressions tripped, backend and tuning flips "
-          "refused)")
+          "QPS+recall regressions tripped, backend, tuning and topology "
+          "flips refused)")
 
 
 def main(argv: Optional[list[str]] = None) -> None:

@@ -184,12 +184,20 @@ class CascadeIndex:
         return tuple(reversed(out))
 
     # -- query -------------------------------------------------------------
+    def placement(self, n_shards: int):
+        """A cascade shards wherever its head shards — refinement stages
+        gather by id against replicated stage stores."""
+        from repro.dist import placement as dplacement
+
+        return dplacement.for_index(self.head, n_shards)
+
     def plan(
         self,
         k: int,
         params: Optional[B.SearchParams] = None,
         *,
         mesh=None,
+        placement=None,
         rerank_depth: Optional[int] = None,
     ):
         """Freeze budgets + per-stage runners into one pure runner: the
@@ -197,7 +205,9 @@ class CascadeIndex:
         the Searcher compiles the whole chain per batch bucket."""
         sp = (params or B.SearchParams()).validate()
         budgets = self.resolve_budgets(k, sp.budgets, rerank_depth)
-        head_runner = self.head.plan(budgets[0], sp, mesh=mesh)
+        head_runner = self.head.plan(
+            budgets[0], sp, mesh=mesh, placement=placement
+        )
         outs = tuple(budgets[1:]) + (k,)
         labels = tuple(
             _stage_label(f, st)

@@ -122,6 +122,71 @@ def scores(q: jax.Array, x: jax.Array, metric: Metric, quantized: bool = False) 
     return fn(q, x)
 
 
+# --------------------------------------------------------------------------
+# Per-query candidate scoring (q [Q, d] against gathered rows [Q, W, d])
+# --------------------------------------------------------------------------
+
+def _bmm(q: jax.Array, rows: jax.Array) -> jax.Array:
+    """f32 batched row dot, [Q, W].  One einsum rather than a vmapped
+    per-query matmul: XLA lowers the einsum identically inside and
+    outside ``shard_map``, which is what makes sharded plans bit-match
+    their unsharded twins (a vmapped [1, d] x [d, W] dot picks a
+    different f32 accumulation order under ``shard_map``)."""
+    return jnp.einsum(
+        "qd,qwd->qw", q.astype(jnp.float32), rows.astype(jnp.float32)
+    )
+
+
+def _int_bmm(q: jax.Array, rows: jax.Array) -> jax.Array:
+    """int batched row dot with int32 accumulation (exact), [Q, W]."""
+    return jax.lax.dot_general(
+        q,
+        rows,
+        dimension_numbers=(((1,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def scores_among(
+    q: jax.Array, rows: jax.Array, metric: Metric, quantized: bool = False
+) -> jax.Array:
+    """Per-query candidate scores: q [Q, d] vs rows [Q, W, d] -> [Q, W].
+
+    The candidate-list twin of :func:`scores` — same metric semantics,
+    but each query scores its *own* gathered row set.  All reductions
+    are batched (einsum / dot_general), never per-query vmapped dots,
+    so the lowering is stable across jit and ``shard_map`` contexts
+    (DESIGN.md §15 bit-parity).
+    """
+    if metric not in _VALID_METRICS:
+        raise ValueError(f"metric must be one of {_VALID_METRICS}, got {metric!r}")
+    if quantized:
+        if metric == "ip":
+            return _int_bmm(q, rows)
+        if metric == "l2":
+            qi = q.astype(jnp.int32)
+            xi = rows.astype(jnp.int32)
+            qq = jnp.sum(qi * qi, axis=-1, keepdims=True)     # [Q, 1]
+            xx = jnp.sum(xi * xi, axis=-1)                    # [Q, W]
+            return -(qq + xx - 2 * _int_bmm(q, rows))
+        dot = _int_bmm(q, rows).astype(jnp.float32)
+        qn = jnp.sqrt(jnp.sum(q.astype(jnp.float32) ** 2, axis=-1,
+                              keepdims=True))
+        xn = jnp.sqrt(jnp.sum(rows.astype(jnp.float32) ** 2, axis=-1))
+        return dot / jnp.maximum(qn * xn, 1e-12)
+    qf = q.astype(jnp.float32)
+    xf = rows.astype(jnp.float32)
+    if metric == "ip":
+        return _bmm(qf, xf)
+    if metric == "l2":
+        qq = jnp.sum(qf * qf, axis=-1, keepdims=True)
+        xx = jnp.sum(xf * xf, axis=-1)
+        return -(qq + xx - 2.0 * _bmm(qf, xf))
+    qn = qf / jnp.maximum(jnp.linalg.norm(qf, axis=-1, keepdims=True), 1e-12)
+    xn = xf / jnp.maximum(jnp.linalg.norm(xf, axis=-1, keepdims=True), 1e-12)
+    return _bmm(qn, xn)
+
+
 def pairwise_distance(a: jax.Array, b: jax.Array, metric: Metric, quantized: bool = False) -> jax.Array:
     """Single-pair convenience wrapper (used by graph-walk code paths)."""
     return scores(a[None, :], b[None, :], metric, quantized)[0, 0]

@@ -24,11 +24,11 @@ def pack_int4(codes: jax.Array) -> jax.Array:
 
 
 def unpack_int4(packed: jax.Array) -> jax.Array:
-    """[N, d/2] uint8 -> [N, d] int8 in [-8, 7]."""
+    """[..., d/2] uint8 -> [..., d] int8 in [-8, 7] (any leading dims)."""
     lo = (packed & 0x0F).astype(jnp.int32) - 8
     hi = ((packed >> 4) & 0x0F).astype(jnp.int32) - 8
-    n, half = packed.shape
-    out = jnp.stack([lo, hi], axis=-1).reshape(n, half * 2)
+    half = packed.shape[-1]
+    out = jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], half * 2)
     return out.astype(jnp.int8)
 
 
@@ -57,8 +57,8 @@ def unpack_uint4(packed: jax.Array) -> jax.Array:
     """
     lo = (packed & 0x0F).astype(jnp.uint8)
     hi = ((packed >> 4) & 0x0F).astype(jnp.uint8)
-    n, half = packed.shape
-    return jnp.stack([lo, hi], axis=-1).reshape(n, half * 2)
+    half = packed.shape[-1]
+    return jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], half * 2)
 
 
 def qip_scores_packed(q_codes: jax.Array, packed: jax.Array) -> jax.Array:

@@ -25,6 +25,7 @@ import math
 from typing import Any
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 try:  # jax >= 0.5
@@ -44,6 +45,7 @@ __all__ = [
     "replicated",
     "dp_axes",
     "corpus_shards",
+    "sentinel_gids",
     "lm_params_sharding",
     "lm_opt_sharding",
     "lm_grad_specs",
@@ -84,6 +86,32 @@ def corpus_shards(mesh: Mesh) -> tuple[tuple[str, ...], int]:
     """
     axes = tuple(mesh.axis_names)
     return axes, int(mesh.devices.size)
+
+
+def sentinel_gids(gids, valid, *, shard, local_rows, n_total: int,
+                  padded_rows: int):
+    """Replace invalid slots' gids with globally-unique pad sentinels.
+
+    A shard's tile-pad rows used to keep their arithmetic gid
+    ``shard*rows_per + lrow`` — for ``lrow >= rows_per`` that value lands
+    inside the NEXT shard's id range, so the only thing standing between
+    a pad row and a real neighbor was the score mask.  Here every invalid
+    slot instead gets
+
+        ``n_total + shard * padded_rows + local_row``
+
+    which is (a) ``>= n_total``, so it can never name a real row, and
+    (b) unique across shards (each shard owns a disjoint
+    ``padded_rows``-wide sentinel band), so even a dropped mask cannot
+    alias two shards' pads onto one id.  Callers still NEG-mask the
+    scores and map sentinels to ``-1`` at the plan boundary; the
+    sentinel is the belt under that braces.
+
+    ``shard`` and ``local_rows`` broadcast against ``gids`` (int32).
+    """
+    sent = (jnp.int32(n_total) + jnp.asarray(shard, jnp.int32) * padded_rows
+            + jnp.asarray(local_rows, jnp.int32))
+    return jnp.where(valid, jnp.asarray(gids, jnp.int32), sent)
 
 
 def _axes_size(mesh: Mesh, axes: str | tuple[str, ...]) -> int:

@@ -351,20 +351,24 @@ def topk_among(
     q_codes [Q, d_eff] prepared queries; cand_ids [Q, L] (-1 = empty
     slot).  Gathers store rows (unpacking int4 only for what was
     gathered), scores, masks empties, returns ([Q, k], [Q, k]).
+
+    Scoring is the batched ``D.scores_among`` (einsum over the gathered
+    [Q, L, d] block) rather than a vmapped per-query dot: the batched
+    form lowers identically inside ``shard_map``, which is what lets a
+    sharded IVF plan reproduce this function's scores bit-exactly
+    (DESIGN.md §15).
     """
     L = cand_ids.shape[1]
     k_eff = min(k, L)
 
-    def per_query(qv, ids):
-        ok = ids >= 0
-        rows = store.take(jnp.where(ok, ids, 0))
-        s = D.scores(qv[None], rows, metric, quantized=store.quantized)[0]
-        s = jnp.where(ok, s.astype(jnp.float32), NEG)
-        top_s, pos = jax.lax.top_k(s, k_eff)
-        top_i = jnp.where(top_s > NEG, ids[pos], -1).astype(jnp.int32)
-        return top_s, top_i
-
-    s, i = jax.vmap(per_query)(q_codes, cand_ids)
+    ok = cand_ids >= 0
+    rows = store.take(jnp.where(ok, cand_ids, 0))        # [Q, L, d]
+    s = D.scores_among(q_codes, rows, metric, quantized=store.quantized)
+    s = jnp.where(ok, s.astype(jnp.float32), NEG)
+    s, pos = jax.lax.top_k(s, k_eff)
+    i = jnp.where(
+        s > NEG, jnp.take_along_axis(cand_ids, pos, axis=1), -1
+    ).astype(jnp.int32)
     if k_eff < k:
         s = jnp.pad(s, ((0, 0), (0, k - k_eff)), constant_values=NEG)
         i = jnp.pad(i, ((0, 0), (0, k - k_eff)), constant_values=-1)
@@ -459,19 +463,17 @@ def topk_among_regional(
     L = cand_ids.shape[1]
     k_eff = min(k, L)
 
-    def per_query(qv, ids):
-        ok = ids >= 0
-        safe = jnp.where(ok, ids, 0)
-        codes = store.take(safe).astype(jnp.float32)
-        reg = assign[safe]
-        x = codes * region_scale[reg] + region_zero[reg]
-        s = D.scores(qv[None], x, metric, quantized=False)[0]
-        s = jnp.where(ok, s.astype(jnp.float32), NEG)
-        top_s, pos = jax.lax.top_k(s, k_eff)
-        top_i = jnp.where(top_s > NEG, ids[pos], -1).astype(jnp.int32)
-        return top_s, top_i
-
-    s, i = jax.vmap(per_query)(queries, cand_ids)
+    ok = cand_ids >= 0
+    safe = jnp.where(ok, cand_ids, 0)
+    codes = store.take(safe).astype(jnp.float32)         # [Q, L, d]
+    reg = assign[safe]                                   # [Q, L]
+    x = codes * region_scale[reg] + region_zero[reg]
+    s = D.scores_among(queries, x, metric, quantized=False)
+    s = jnp.where(ok, s.astype(jnp.float32), NEG)
+    s, pos = jax.lax.top_k(s, k_eff)
+    i = jnp.where(
+        s > NEG, jnp.take_along_axis(cand_ids, pos, axis=1), -1
+    ).astype(jnp.int32)
     if k_eff < k:
         s = jnp.pad(s, ((0, 0), (0, k - k_eff)), constant_values=NEG)
         i = jnp.pad(i, ((0, 0), (0, k - k_eff)), constant_values=-1)
@@ -504,6 +506,8 @@ def distributed_topk(
     k: int,
     axis_name: str | tuple[str, ...],
     shard_offset: jax.Array,
+    *,
+    tie_break: str = "order",
 ):
     """Merge per-shard top-k into a global top-k, inside ``shard_map``.
 
@@ -515,7 +519,22 @@ def distributed_topk(
 
     Shard-local stores built with ``CodeStore(base=offset)`` already
     return rebased ids from the engine — pass ``shard_offset=0`` there.
+
+    ``tie_break`` decides which of several equal-score candidates wins —
+    the thing that makes sharded results *bit-identical* to unsharded
+    ones, not merely score-identical (quantized scores tie constantly):
+
+      * ``"order"`` — ``lax.top_k``'s stable gather order: lower shard
+        first, then local rank.  Correct when shard order matches global
+        id order (contiguous row blocks: flat/pq/stream scans).
+      * ``"id"`` — lexicographic (score desc, id asc) via a two-key
+        sort.  Correct when shards interleave the id space (IVF list
+        placement merges on candidate *positions*, reproducing
+        ``topk_among``'s canonical per-query ``top_k`` order).
+        Masked entries (NEG score) sort last regardless of id.
     """
+    if tie_break not in ("order", "id"):
+        raise ValueError(f"tie_break must be 'order' or 'id', got {tie_break!r}")
     gids = jnp.where(local_ids >= 0, local_ids + shard_offset, -1)
     names = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
     s, i = local_scores, gids
@@ -525,8 +544,14 @@ def distributed_topk(
         S, Q, kk = s.shape
         s = jnp.moveaxis(s, 0, 1).reshape(Q, S * kk)
         i = jnp.moveaxis(i, 0, 1).reshape(Q, S * kk)
-        s, pos = jax.lax.top_k(s, k)
-        i = jnp.take_along_axis(i, pos, axis=-1)
+        if tie_break == "id":
+            # ascending lexicographic sort on (-score, id): score desc,
+            # id asc among ties; NEG-masked rows (-NEG = fp32 max) last
+            ns, i = jax.lax.sort((-s, i), num_keys=2)
+            s, i = (-ns)[:, :k], i[:, :k]
+        else:
+            s, pos = jax.lax.top_k(s, k)
+            i = jnp.take_along_axis(i, pos, axis=-1)
     return s, i
 
 

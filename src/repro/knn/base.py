@@ -130,7 +130,8 @@ class Index(Protocol):
     def search(self, queries, k: int, params: Optional[SearchParams] = None) -> SearchResult:
         ...
 
-    def plan(self, k: int, params: Optional[SearchParams] = None, *, mesh=None):
+    def plan(self, k: int, params: Optional[SearchParams] = None, *, mesh=None,
+             placement=None):
         ...
 
     def searcher(self, k: int, params: Optional[SearchParams] = None, **kwargs):

@@ -109,25 +109,33 @@ class FlatIndex:
         """h(q) of Definition 2: queries enter the quantized space too."""
         return self.store.encode_queries(queries)
 
+    def placement(self, n_shards: int):
+        """Contiguous row blocks — the flat scan's natural sharding."""
+        from repro.dist.placement import Placement
+
+        return Placement.rows(self.n, n_shards)
+
     def plan(
         self,
         k: int,
         params: Optional[B.SearchParams] = None,
         *,
         mesh=None,
+        placement=None,
     ):
         """Freeze (k, params) into a pure runner (DESIGN.md §9).
 
-        With a mesh, the runner row-shards the store and fuses the
-        shard-local top-k with one cross-shard merge — the flat kind is
-        the row-shardable scan the sharded Searcher compiles.
+        With a mesh, the runner row-shards the store per ``placement``
+        (row blocks) and fuses the shard-local top-k with one
+        cross-shard merge — the flat kind is the row-shardable scan the
+        sharded Searcher compiles.
         """
         sp = params or B.SearchParams()
         if mesh is not None:
             from repro.knn.searcher import sharded_scan_plan
 
             return sharded_scan_plan(self.store, self.metric, k, mesh,
-                                     chunk=sp.chunk)
+                                     chunk=sp.chunk, placement=placement)
 
         def run(queries: jax.Array) -> B.SearchResult:
             q = self.prepare_queries(queries)

@@ -198,30 +198,40 @@ class GraphIndex:
         """queries must already be in the (possibly augmented) index space."""
         return self.store.encode_queries(queries)
 
+    def placement(self, n_shards: int):
+        """The walk is not row-shardable — every shard holds the whole
+        adjacency and queries fan out instead (dist.replica)."""
+        from repro.dist.placement import Placement
+
+        return Placement.replicated(self.n, n_shards)
+
     def plan(
         self,
         k: int,
         params: Optional[B.SearchParams] = None,
         *,
         mesh=None,
+        placement=None,
     ):
         """Freeze (k, ef) into a pure seed-probe + beam-walk runner.
 
         Queries enter in user space; the runner applies the MIP->L2
         augmentation internally, so the Searcher's rerank tail (user
         metric, un-augmented store) composes directly on the walked ids.
+        Under a mesh the index replicates and the query batch shards
+        (``dist.replica``) — bit-exact, the walk is a per-query vmap.
         """
-        if mesh is not None:
+        if placement is not None and placement.kind != "replicated":
             raise ValueError(
-                "sharded searcher plans are flat-only (row-shardable scan); "
-                "the graph walk needs the whole adjacency on every shard"
+                f"the graph walk only replicates; got a {placement.kind!r} "
+                "placement"
             )
         sp = params or B.SearchParams()
         ef = max(sp.ef_search, k)
         score_set = engine.make_score_set(self.store, self.internal_metric)
         n_entry = min(8, self.seeds.shape[0])
 
-        def run(queries: jax.Array) -> B.SearchResult:
+        def core(queries: jax.Array):
             qu = jnp.asarray(queries, jnp.float32)     # user space, for regions
             qf = qu
             if self.aug:
@@ -240,28 +250,44 @@ class GraphIndex:
             scores, ids = G.beam_search_batch(
                 q, self.adj, entry, score_set=score_set, ef=ef
             )
-            cand_bound = n_entry + 8 * ef * self.degree
-            stats = {"kind": "graph", "ef_search": ef, "n_entry": n_entry,
-                     **engine.search_stats(
-                         self.store, candidates=cand_bound, chunks=1,
-                         rows_read=qf.shape[0] * cand_bound)}
             if self.regions is not None:
                 # re-score walked candidates under each row's own seed-
                 # neighborhood constants, in the USER metric and space
                 # (the walk's augmented/internal scores only order)
-                rst = engine.regional_stats(self.region_store, ids)
                 scores, ids = engine.topk_among_regional(
                     qu, self.region_store, self.regions.scale,
                     self.regions.zero, self.regions.assign, ids, k,
                     self.metric,
                 )
+                return scores, ids
+            return scores[:, :k], ids[:, :k]
+
+        if mesh is not None:
+            from repro.dist.replica import replicated_query_plan
+
+            exec_core = replicated_query_plan(core, mesh)
+        else:
+            exec_core = core
+
+        def run(queries: jax.Array) -> B.SearchResult:
+            nq = queries.shape[0]
+            scores, ids = exec_core(queries)
+            cand_bound = n_entry + 8 * ef * self.degree
+            stats = {"kind": "graph", "ef_search": ef, "n_entry": n_entry,
+                     **engine.search_stats(
+                         self.store, candidates=cand_bound, chunks=1,
+                         rows_read=nq * cand_bound)}
+            if self.regions is not None:
                 stats.update(
                     regional=True,
-                    regional_candidates=rst["candidates"],
-                    bytes_read=stats["bytes_read"] + rst["bytes_read"],
+                    regional_candidates=ef,
+                    bytes_read=stats["bytes_read"] + int(nq) * ef * (
+                        self.region_store.row_bytes
+                        + 2 * 4 * int(self.region_store.d)),
                 )
-                return B.SearchResult(scores, ids, stats)
-            return B.SearchResult(scores[:, :k], ids[:, :k], stats)
+            if mesh is not None:
+                stats["placement"] = "replicated"
+            return B.SearchResult(scores, ids, stats)
 
         return run
 

@@ -235,29 +235,41 @@ class HNSWIndex:
         return idx
 
     # ------------------------------------------------------------------
+    def placement(self, n_shards: int):
+        """The walk is not row-shardable — every shard holds the whole
+        graph and queries fan out instead (dist.replica)."""
+        from repro.dist.placement import Placement
+
+        return Placement.replicated(self.n, n_shards)
+
     def plan(
         self,
         k: int,
         params: Optional[B.SearchParams] = None,
         *,
         mesh=None,
+        placement=None,
     ):
         """Freeze (k, ef) into a pure layered-descent + beam runner.
 
         The graph walk itself is not row-shardable (pointer chasing needs
         the whole adjacency); the Searcher composes a compiled rerank
-        tail after the beam instead.
+        tail after the beam instead.  Under a mesh the index replicates
+        and the *query batch* shards (``dist.replica``): each shard walks
+        its slice with the full graph as a closed-over constant — per
+        query independence (the beam is a vmap) makes the fan-out
+        bit-exact against the unsharded run.
         """
-        if mesh is not None:
+        if placement is not None and placement.kind != "replicated":
             raise ValueError(
-                "sharded searcher plans are flat-only (row-shardable scan); "
-                "the hnsw walk needs the whole graph on every shard"
+                f"the hnsw walk only replicates; got a {placement.kind!r} "
+                "placement"
             )
         sp = params or B.SearchParams()
         ef = max(sp.ef_search, k)
         score_set = self._score_set()
 
-        def run(queries: jax.Array) -> B.SearchResult:
+        def core(queries: jax.Array):
             qf = jnp.asarray(queries, jnp.float32)
             q = self.prepare_queries(queries)
             nq = q.shape[0]
@@ -273,6 +285,27 @@ class HNSWIndex:
             scores, ids = G.beam_search_batch(
                 q, self.layers[0], entry[:, None], score_set=score_set, ef=ef
             )
+            if self.regions is not None:
+                # re-score the beam's survivors under each row's own
+                # neighborhood constants before the cut to k
+                scores, ids = engine.topk_among_regional(
+                    qf, self.region_store, self.regions.scale,
+                    self.regions.zero, self.regions.assign, ids, k,
+                    self.metric,
+                )
+                return scores, ids
+            return scores[:, :k], ids[:, :k]
+
+        if mesh is not None:
+            from repro.dist.replica import replicated_query_plan
+
+            exec_core = replicated_query_plan(core, mesh)
+        else:
+            exec_core = core
+
+        def run(queries: jax.Array) -> B.SearchResult:
+            nq = queries.shape[0]
+            scores, ids = exec_core(queries)
             # candidate bound: layer-0 beam expands <= 8*ef nodes of degree
             # <= 2m each (graph-walk while-loops stop early on convergence)
             cand_bound = ef + 8 * ef * 2 * self.m
@@ -283,21 +316,16 @@ class HNSWIndex:
                          chunks=len(self.layers),
                          rows_read=nq * cand_bound)}
             if self.regions is not None:
-                # re-score the beam's survivors under each row's own
-                # neighborhood constants before the cut to k
-                rst = engine.regional_stats(self.region_store, ids)
-                scores, ids = engine.topk_among_regional(
-                    qf, self.region_store, self.regions.scale,
-                    self.regions.zero, self.regions.assign, ids, k,
-                    self.metric,
-                )
                 stats.update(
                     regional=True,
-                    regional_candidates=rst["candidates"],
-                    bytes_read=stats["bytes_read"] + rst["bytes_read"],
+                    regional_candidates=ef,
+                    bytes_read=stats["bytes_read"] + int(nq) * ef * (
+                        self.region_store.row_bytes
+                        + 2 * 4 * int(self.region_store.d)),
                 )
-                return B.SearchResult(scores, ids, stats)
-            return B.SearchResult(scores[:, :k], ids[:, :k], stats)
+            if mesh is not None:
+                stats["placement"] = "replicated"
+            return B.SearchResult(scores, ids, stats)
 
         return run
 

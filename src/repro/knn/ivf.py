@@ -178,19 +178,39 @@ class IVFIndex:
     def prepare_queries(self, queries: jax.Array) -> jax.Array:
         return self.store.encode_queries(queries)
 
+    def list_sizes(self):
+        """Per-list member counts (host ints) — what placement balances."""
+        import numpy as np
+
+        return tuple(int(x) for x in (np.asarray(self.lists) >= 0).sum(axis=1))
+
+    def placement(self, n_shards: int):
+        """Whole IVF lists, LPT-balanced by list size (DESIGN.md §15)."""
+        from repro.dist.placement import Placement
+
+        return Placement.lists(self.list_sizes(), n_shards)
+
     def plan(
         self,
         k: int,
         params: Optional[B.SearchParams] = None,
         *,
         mesh=None,
+        placement=None,
     ):
-        """Freeze (k, nprobe) into a pure probe-then-fine-score runner."""
+        """Freeze (k, nprobe) into a pure probe-then-fine-score runner.
+
+        With a mesh, lists are *placed*: each shard holds the code rows
+        of the lists assigned to it (``Placement.lists``), the coarse
+        probe and candidate gather stay replicated (routing metadata is
+        tiny — the payload is what is placed), each shard fine-scores
+        the candidates it owns, and one ``distributed_topk`` merge with
+        id tie-breaking reproduces the unsharded ``topk_among``'s
+        canonical (score desc, candidate-position asc) order bit-exactly
+        (DESIGN.md §15).
+        """
         if mesh is not None:
-            raise ValueError(
-                "sharded searcher plans are flat-only (row-shardable scan); "
-                "shard the ivf kind by list assignment in a future PR"
-            )
+            return self._sharded_plan(k, params, mesh, placement)
         sp = params or B.SearchParams()
         nprobe = min(sp.nprobe, self.nlist)
 
@@ -230,6 +250,143 @@ class IVFIndex:
                              chunks=nprobe,
                              rows_read=qq.shape[0] * nprobe * self.max_list)}
             return B.SearchResult(scores, ids, stats)
+
+        return run
+
+    def _sharded_plan(self, k, params, mesh, placement):
+        """List-placed fine scoring under ``shard_map`` (DESIGN.md §15).
+
+        Plan-time (host): group each shard's list members into a local
+        row block ``codes [S, rows_max, width]`` (row permutation is safe
+        — packing is per-row) plus replicated ``owner [N]`` / ``local_of
+        [N]`` routing maps.  Query-time (one jit): replicated coarse
+        probe -> replicated candidate vector ``cand [Q, W]`` -> each
+        shard scores the candidate *slots* whose rows it owns (identical
+        per-query gather/score shapes to ``topk_among``, so owned slots
+        score bit-identically) -> local top-k over slot positions ->
+        ``distributed_topk(tie_break="id")`` on (-score, position) ->
+        positions map back to gids through the replicated ``cand``.
+        Unowned/pad slots carry NEG scores and lose every comparison;
+        ids never travel un-masked (positions >= 0 only for real rows).
+        """
+        import numpy as np
+
+        from repro.dist.placement import Placement
+        from repro.dist.sharding import P, corpus_shards, shard_map
+        from repro.engine import distributed_topk
+        from repro.engine.scorer import NEG
+        from repro.core import pack as PK
+
+        sp = params or B.SearchParams()
+        nprobe = min(sp.nprobe, self.nlist)
+        axes, n_shards = corpus_shards(mesh)
+        if placement is None:
+            placement = Placement.lists(self.list_sizes(), n_shards)
+        if placement.kind != "lists" or placement.n_units != self.nlist:
+            raise ValueError(
+                f"ivf plans place whole lists; got a {placement.kind!r} "
+                f"placement over {placement.n_units} units (nlist={self.nlist})"
+            )
+        if placement.n_shards != n_shards:
+            raise ValueError(
+                f"placement covers {placement.n_shards} shards but the mesh "
+                f"has {n_shards}"
+            )
+
+        n = self.store.n
+        lists_np = np.asarray(self.lists)
+        owner = np.zeros(n, np.int32)
+        local_of = np.zeros(n, np.int32)
+        shard_gids = []
+        for s in range(n_shards):
+            mine = [lists_np[c][lists_np[c] >= 0]
+                    for c in placement.shard_units(s)]
+            gids = (np.concatenate(mine).astype(np.int64) if mine
+                    else np.zeros(0, np.int64))
+            owner[gids] = s
+            local_of[gids] = np.arange(gids.size, dtype=np.int32)
+            shard_gids.append(gids)
+        rows_max = max(1, max(g.size for g in shard_gids))
+        data_np = np.asarray(self.store.data)
+        codes = np.zeros((n_shards, rows_max) + data_np.shape[1:],
+                         data_np.dtype)
+        for s, gids in enumerate(shard_gids):
+            codes[s, : gids.size] = data_np[gids]
+        codes = jnp.asarray(codes)
+        owner = jnp.asarray(owner)
+        local_of = jnp.asarray(local_of)
+        shard_idx = jnp.arange(n_shards, dtype=jnp.int32)
+
+        W = nprobe * self.max_list
+        k_eff = min(k, W)
+        regional = self.regions is not None
+        store = self.store
+
+        def local(q, cand, codes_s, idx):
+            codes_s = codes_s[0]                    # [rows_max, width]
+            shard = idx[0]
+            safe = jnp.clip(cand, 0, n - 1)
+            ok = (cand >= 0) & (owner[safe] == shard)
+            rows = codes_s[jnp.where(ok, local_of[safe], 0)]   # [Q, W, w]
+            if store.packed:
+                rows = PK.unpack_int4(rows)
+            if regional:
+                reg = self.regions.assign[safe]                # [Q, W]
+                x = (rows.astype(jnp.float32) * self.regions.scale[reg]
+                     + self.regions.zero[reg])
+                s = D.scores_among(q, x, self.metric, quantized=False)
+            else:
+                s = D.scores_among(q, rows, self.metric,
+                                   quantized=store.quantized)
+            s = jnp.where(ok, s.astype(jnp.float32), NEG)
+            ls, pos = jax.lax.top_k(s, k_eff)
+            # merge on candidate POSITIONS — the id space whose ascending
+            # tie-break equals topk_among's stable top_k
+            li = jnp.where(ls > NEG, pos, -1).astype(jnp.int32)
+            return distributed_topk(ls, li, k_eff, axes, 0, tie_break="id")
+
+        inner = shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(), P(), P(axes, None, None), P(axes)),
+            out_specs=(P(), P()),
+            check_vma=False,
+        )
+
+        merge_wire = n_shards * k_eff * 8
+
+        def run(queries: jax.Array) -> B.SearchResult:
+            qf = jnp.asarray(queries, jnp.float32)
+            qq = self.prepare_queries(queries)
+            _cs, probe, _ = engine.topk(
+                qf, engine.CodeStore.dense(self.centroids), nprobe, self.metric
+            )
+            cand = self.lists[probe].reshape(qq.shape[0], -1)   # [Q, W]
+            s, pos = inner(qf if regional else qq, cand, codes, shard_idx)
+            ids = jnp.where(
+                pos >= 0,
+                jnp.take_along_axis(cand, jnp.clip(pos, 0, W - 1), axis=1),
+                -1,
+            ).astype(jnp.int32)
+            if store.base:
+                ids = jnp.where(ids >= 0, ids + store.base, -1)
+            if k_eff < k:
+                s = jnp.pad(s, ((0, 0), (0, k - k_eff)), constant_values=NEG)
+                ids = jnp.pad(ids, ((0, 0), (0, k - k_eff)),
+                              constant_values=-1)
+            if regional:
+                stats = {"kind": "ivf", "nprobe": nprobe, "chunks": nprobe,
+                         **engine.regional_stats(store, cand)}
+            else:
+                stats = {"kind": "ivf", "nprobe": nprobe,
+                         **engine.search_stats(
+                             store,
+                             candidates=W,
+                             chunks=nprobe,
+                             rows_read=qq.shape[0] * W)}
+            stats.update(placement="lists",
+                         merge_wire_bytes=int(qq.shape[0]) * merge_wire)
+            return B.SearchResult(s, ids, stats)
 
         return run
 

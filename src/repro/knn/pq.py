@@ -146,20 +146,33 @@ class PQIndex:
                        rerank_store=build_rerank_store(spec, corpus))
 
     # ------------------------------------------------------------------
+    def placement(self, n_shards: int):
+        """Contiguous code-row blocks — ADC scans shard like flat scans."""
+        from repro.dist.placement import Placement
+
+        return Placement.rows(self.n, n_shards)
+
     def plan(
         self,
         k: int,
         params: "B.SearchParams | None" = None,
         *,
         mesh=None,
+        placement=None,
     ):
         """Freeze (k, chunk) into a pure ADC-scan runner.  A rerank tail
-        over a ``"pq16+lpq,r32"`` build is the classic PQ+refine pattern."""
+        over a ``"pq16+lpq,r32"`` build is the classic PQ+refine pattern.
+
+        With a mesh, code rows shard in contiguous blocks: the per-query
+        LUT is built (and, for ``lpq_tables``, Eq. 1-quantized)
+        replicated — it is O(Q·M·K), the thing ADC exists to keep small —
+        and each shard runs the streaming gather-sum scan over its block
+        with sentinel-masked pad rows, merged by one ``distributed_topk``
+        (block order == gid order, so the stable merge reproduces the
+        unsharded scan's canonical tie-break bit-exactly).
+        """
         if mesh is not None:
-            raise ValueError(
-                "sharded searcher plans are flat-only (row-shardable scan); "
-                "shard the pq kind by code rows in a future PR"
-            )
+            return self._sharded_plan(k, params, mesh, placement)
         sp = params or B.SearchParams()
 
         def run(queries: jax.Array) -> B.SearchResult:
@@ -170,6 +183,106 @@ class PQIndex:
                 s, i, {"kind": "pq", "m": self.m,
                        "lpq_tables": self.lpq_tables, **stats},
             )
+
+        return run
+
+    def _sharded_plan(self, k, params, mesh, placement):
+        """Row-block ADC scan under ``shard_map`` (DESIGN.md §15)."""
+        from repro.core import pack as PK
+        from repro.dist.placement import Placement
+        from repro.dist.sharding import (
+            P, corpus_shards, sentinel_gids, shard_map,
+        )
+        from repro.engine import distributed_topk, merge_topk
+        from repro.engine.scorer import NEG, _prepare_pq_lut
+
+        sp = params or B.SearchParams()
+        axes, n_shards = corpus_shards(mesh)
+        store = self.store
+        n = store.n
+        if placement is None:
+            placement = Placement.rows(n, n_shards)
+        if placement.kind != "rows" or placement.n_shards != n_shards:
+            raise ValueError(
+                f"pq plans shard contiguous code-row blocks; got a "
+                f"{placement.kind!r} placement over {placement.n_shards} "
+                f"shards (mesh has {n_shards})"
+            )
+        rows_per = -(-n // n_shards)
+        pad = n_shards * rows_per - n
+        k_eff = min(k, n)
+        k_local = min(k_eff, rows_per)
+        tile_rows = min(sp.chunk, rows_per)
+        n_tiles = -(-rows_per // tile_rows)
+        padded_rows = n_tiles * tile_rows
+        data = (jnp.pad(store.codes, ((0, pad), (0, 0))) if pad
+                else store.codes)
+        shard_idx = jnp.arange(n_shards, dtype=jnp.int32)
+
+        def tile_scores(lt, tile_codes):     # same math as _topk_pq_from_lut
+            rows = (PK.unpack_uint4(tile_codes)[:, : store.m]
+                    if store.packed else tile_codes)
+            idx = rows.T[None].astype(jnp.int32)            # [1, M, c]
+            return jnp.sum(
+                jnp.take_along_axis(lt, idx, axis=2), axis=1
+            ).astype(jnp.float32)
+
+        def local(lt, shard, idx):
+            gid0 = idx[0] * rows_per
+            Q = lt.shape[0]
+            tile_pad = padded_rows - rows_per
+            if tile_pad:
+                shard = jnp.pad(shard, ((0, tile_pad), (0, 0)))
+            tiles = shard.reshape(n_tiles, tile_rows, shard.shape[-1])
+
+            def step(carry, inp):
+                tile, t = inp
+                s = tile_scores(lt, tile)
+                lrow = t * tile_rows + jnp.arange(tile_rows, dtype=jnp.int32)
+                gid = sentinel_gids(
+                    gid0 + lrow, (lrow < rows_per) & (gid0 + lrow < n),
+                    shard=idx[0], local_rows=lrow, n_total=n,
+                    padded_rows=padded_rows,
+                )
+                ok = gid < n
+                s = jnp.where(ok[None, :], s, NEG)
+                ids = jnp.where(ok[None, :],
+                                jnp.broadcast_to(gid[None], s.shape), -1)
+                return merge_topk(*carry, s, ids, k_local), None
+
+            init = (jnp.full((Q, k_local), NEG, jnp.float32),
+                    jnp.full((Q, k_local), -1, jnp.int32))
+            (ls, li), _ = jax.lax.scan(
+                step, init, (tiles, jnp.arange(n_tiles, dtype=jnp.int32))
+            )
+            return distributed_topk(ls, li, k_eff, axes, 0)
+
+        inner = shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(), P(axes, None), P(axes)),
+            out_specs=(P(), P()),
+            check_vma=False,
+        )
+
+        merge_wire = n_shards * k_eff * 8
+
+        def run(queries: jax.Array) -> B.SearchResult:
+            lut = _prepare_pq_lut(queries, store, self.metric)
+            ilut = lut.astype(jnp.int32) if store.lpq_tables else lut
+            s, i = inner(ilut, data, shard_idx)
+            i = jnp.where(i >= n, -1, i)     # sentinels never leave the plan
+            if k_eff < k:
+                s = jnp.pad(s, ((0, 0), (0, k - k_eff)), constant_values=NEG)
+                i = jnp.pad(i, ((0, 0), (0, k - k_eff)), constant_values=-1)
+            stats = engine.search_stats(store, candidates=n,
+                                        chunks=n_shards * n_tiles,
+                                        rows_read=n)
+            return B.SearchResult(s, i, {
+                "kind": "pq", "m": self.m, "lpq_tables": self.lpq_tables,
+                **stats, "placement": "rows",
+                "merge_wire_bytes": int(queries.shape[0]) * merge_wire,
+            })
 
         return run
 

@@ -160,22 +160,32 @@ def _resolve_rerank(index, k: int, n: int, rerank) -> Optional[Rerank]:
 # --------------------------------------------------------------------------
 
 def sharded_scan_plan(
-    store: engine.CodeStore, metric: str, k: int, mesh, chunk: int = 16384
+    store: engine.CodeStore, metric: str, k: int, mesh, chunk: int = 16384,
+    placement=None,
 ) -> PlanFn:
-    """Row-shard a ``CodeStore`` scan over a mesh (DESIGN.md §4/§9).
+    """Row-shard a ``CodeStore`` scan over a mesh (DESIGN.md §4/§9/§15).
 
-    Queries replicate; corpus rows shard over every mesh axis; each shard
-    streams its slice in ``chunk``-row tiles (unpacking int4 tile by
-    tile) with a running local top-k — the same O(Q·(k+chunk)) working
-    set as the unsharded scan, never a [Q, N_loc] score matrix — with pad
-    rows id-masked at the source, and ``distributed_topk`` merges the
-    per-shard candidates with one k-sized all_gather.  The whole thing is
-    a pure function of the query batch, so the Searcher compiles
-    scan -> local top-k -> cross-shard merge (-> rerank) as one unit.
+    Queries replicate; corpus rows shard over every mesh axis in the
+    contiguous blocks a ``rows`` :class:`~repro.dist.placement.Placement`
+    describes; each shard streams its slice in ``chunk``-row tiles
+    (unpacking int4 tile by tile) with a running local top-k — the same
+    O(Q·(k+chunk)) working set as the unsharded scan, never a [Q, N_loc]
+    score matrix.  Pad rows are id-masked at the source with
+    globally-unique sentinel gids (``dist.sharding.sentinel_gids`` — a
+    tile-pad row's arithmetic gid lands in the NEXT shard's id range, so
+    the sentinel is what makes a missed mask an impossible alias instead
+    of a silent wrong neighbor), and ``distributed_topk`` merges the
+    per-shard candidates with one k-sized all_gather; block order ==
+    gid order, so the merge's stable shard-major tie-break reproduces
+    the unsharded scan's canonical (score desc, gid asc) order exactly.
+    The whole thing is a pure function of the query batch, so the
+    Searcher compiles scan -> local top-k -> cross-shard merge
+    (-> rerank) as one unit.
     """
     from repro.core import distances as D
     from repro.core import pack as PK
-    from repro.dist.sharding import P, corpus_shards, shard_map
+    from repro.dist.placement import Placement
+    from repro.dist.sharding import P, corpus_shards, sentinel_gids, shard_map
     from repro.engine import distributed_topk
 
     if store.base:
@@ -183,19 +193,32 @@ def sharded_scan_plan(
                          "owns the global id space)")
     axes, n_shards = corpus_shards(mesh)
     n = store.n
+    if placement is None:
+        placement = Placement.rows(n, n_shards)
+    if placement.n_shards != n_shards:
+        raise ValueError(
+            f"placement covers {placement.n_shards} shards but the mesh has "
+            f"{n_shards}"
+        )
+    if placement.kind != "rows":
+        raise ValueError(
+            f"sharded_scan_plan shards contiguous row blocks; got a "
+            f"{placement.kind!r} placement"
+        )
     rows_per = -(-n // n_shards)
     pad = n_shards * rows_per - n
     k_merge = min(k, n)
     k_local = min(k_merge, rows_per)
     tile_rows = min(chunk, rows_per)
     n_tiles = -(-rows_per // tile_rows)
+    padded_rows = n_tiles * tile_rows          # per-shard sentinel band width
     data = jnp.pad(store.data, ((0, pad), (0, 0))) if pad else store.data
     shard_idx = jnp.arange(n_shards, dtype=jnp.int32)
 
     def local(q, shard, idx):
         gid0 = idx[0] * rows_per
         Q = q.shape[0]
-        tile_pad = n_tiles * tile_rows - rows_per
+        tile_pad = padded_rows - rows_per
         if tile_pad:
             shard = jnp.pad(shard, ((0, tile_pad), (0, 0)))
         tiles = shard.reshape(n_tiles, tile_rows, shard.shape[-1])
@@ -206,11 +229,16 @@ def sharded_scan_plan(
             s = D.scores(q, rows, metric, quantized=store.quantized)
             s = s.astype(jnp.float32)
             lrow = t * tile_rows + jnp.arange(tile_rows, dtype=jnp.int32)
-            gid = gid0 + lrow
-            # id-mask at the source: both the shard's own tile-pad rows
-            # (lrow >= rows_per — their gids alias the NEXT shard's rows)
-            # and the global tail pad (gid >= n)
-            ok = (lrow < rows_per) & (gid < n)
+            # pad rows — the shard's own tile pad (lrow >= rows_per,
+            # whose arithmetic gid aliases the NEXT shard) and the
+            # global tail pad (gid >= n) — get unique >= n sentinels:
+            # validity now travels in the gid itself
+            gid = sentinel_gids(
+                gid0 + lrow, (lrow < rows_per) & (gid0 + lrow < n),
+                shard=idx[0], local_rows=lrow, n_total=n,
+                padded_rows=padded_rows,
+            )
+            ok = gid < n
             s = jnp.where(ok[None, :], s, NEG)
             ids = jnp.where(ok[None, :], jnp.broadcast_to(gid[None], s.shape), -1)
             return engine.merge_topk(*carry, s, ids, k_local), None
@@ -222,6 +250,23 @@ def sharded_scan_plan(
         )
         return distributed_topk(ls, li, k_merge, axes, 0)
 
+    merge_wire = n_shards * k_merge * 8        # per query: fp32 score + i32 id
+
+    def run(queries: jax.Array) -> B.SearchResult:
+        q = store.encode_queries(queries)
+        s, i = inner(q, data, shard_idx)
+        # belt under the sentinel braces: nothing >= n may leave the plan
+        i = jnp.where(i >= n, -1, i)
+        if k_merge < k:                  # uniform [Q, k] contract: -1 pads
+            s = jnp.pad(s, ((0, 0), (0, k - k_merge)), constant_values=NEG)
+            i = jnp.pad(i, ((0, 0), (0, k - k_merge)), constant_values=-1)
+        stats = engine.search_stats(store, candidates=n,
+                                    chunks=n_shards * n_tiles, rows_read=n)
+        return B.SearchResult(s, i, {
+            "kind": "flat", **stats, "placement": placement.kind,
+            "merge_wire_bytes": int(queries.shape[0]) * merge_wire,
+        })
+
     inner = shard_map(
         local,
         mesh=mesh,
@@ -229,16 +274,6 @@ def sharded_scan_plan(
         out_specs=(P(), P()),
         check_vma=False,
     )
-
-    def run(queries: jax.Array) -> B.SearchResult:
-        q = store.encode_queries(queries)
-        s, i = inner(q, data, shard_idx)
-        if k_merge < k:                  # uniform [Q, k] contract: -1 pads
-            s = jnp.pad(s, ((0, 0), (0, k - k_merge)), constant_values=NEG)
-            i = jnp.pad(i, ((0, 0), (0, k - k_merge)), constant_values=-1)
-        stats = engine.search_stats(store, candidates=n,
-                                    chunks=n_shards * n_tiles, rows_read=n)
-        return B.SearchResult(s, i, {"kind": "flat", **stats})
 
     return run
 
@@ -257,6 +292,8 @@ def multi_source_plan(
     merge_store: Optional[engine.CodeStore],
     rescore: bool,
     stats_extra: Optional[dict] = None,
+    mesh=None,
+    placement=None,
 ) -> PlanFn:
     """Fuse per-source plans into one runner over a shared internal id
     space (DESIGN.md §10 — the stream kind's search path).
@@ -287,10 +324,20 @@ def multi_source_plan(
     bucket.  Like every plan, the runner snapshots the state it closed
     over — mutations after plan time need a new plan (LSM readers pin a
     manifest version; DESIGN.md §10).
+
+    Under a ``mesh``, the per-source runners handed in are themselves
+    sharded plans (each segment's inner kind shards its own rows/lists
+    over the full mesh — see DESIGN.md §15) and the merge/rescore above
+    them stays replicated inside the same jit; ``placement`` (a
+    ``segments`` Placement) is the accounting view, stamped into the
+    stats so serve telemetry can report per-shard residency.
     """
     if rescore and merge_store is None:
         raise ValueError("rescoring merge needs a merge_store")
     extra = dict(stats_extra or {})
+    if placement is not None:
+        extra["placement"] = placement.kind
+        extra["placement_balance"] = placement.summary()["balance"]
     total_width = sum(w for _, _, w in sources)
 
     def run(queries: jax.Array) -> B.SearchResult:
@@ -304,7 +351,8 @@ def multi_source_plan(
             )
 
         parts_s, parts_i = [], []
-        agg = {"candidates": 0, "bytes_read": 0, "chunks": 0}
+        agg = {"candidates": 0, "bytes_read": 0, "chunks": 0,
+               "merge_wire_bytes": 0}
         for runner, base, _w in sources:
             res = runner(q)
             gid = jnp.where(res.ids >= 0, res.ids + base, -1)
@@ -409,18 +457,35 @@ class Searcher:
         # tuned shapes this plan saw — a table installed later cannot
         # silently retile a compiled plan (DESIGN.md §13)
         self.tune_table = tunetable.snapshot_for_plan()
+        # plan-time placement resolution mirrors the table: the unit ->
+        # shard assignment is computed NOW from the index's sizes (list
+        # sizes / segment rows / row count) and handed to the plan, so a
+        # mutation after plan time cannot silently re-place a compiled
+        # plan's shards (DESIGN.md §15)
+        if shards is not None:
+            from repro.dist import placement as dplacement
+
+            self.placement = dplacement.for_index(index, n_shards)
+        else:
+            self.placement = None
         self._extras = {"shards": n_shards,
                         "tuned": self.tune_table is not None}
+        if self.placement is not None:
+            self._extras["placement"] = self.placement.kind
+            self._extras["placement_balance"] = (
+                self.placement.summary()["balance"])
 
         rr = self.rerank
         if rr is not None and rr.store is None:
             # index-owned rerank (stream): the plan runs scan -> merge ->
             # exact re-score itself; hand it k AND the candidate depth
-            inner = index.plan(k, sp, mesh=shards, rerank_depth=rr.depth)
+            inner = index.plan(k, sp, mesh=shards, rerank_depth=rr.depth,
+                               placement=self.placement)
             rr = None
         else:
             k_inner = rr.depth if rr is not None else k
-            inner = index.plan(k_inner, sp, mesh=shards)
+            inner = index.plan(k_inner, sp, mesh=shards,
+                               placement=self.placement)
         metric = index.metric
 
         def run(queries: jax.Array) -> B.SearchResult:

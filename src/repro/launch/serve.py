@@ -64,7 +64,8 @@ import numpy as np
 from repro.runtime import profile as rtprofile
 
 #: stats keys summed across requests and reported as per-request means
-_AGG_KEYS = ("candidates", "bytes_read", "chunks", "padded_q", "reranked")
+_AGG_KEYS = ("candidates", "bytes_read", "chunks", "padded_q", "reranked",
+             "merge_wire_bytes")
 
 
 def _request_sizes(n_requests: int, batch: int, mixed: bool) -> list[int]:
@@ -93,8 +94,13 @@ def _parse_args(argv):
                     help="comma-separated compile buckets (default 1,8,32,256 "
                          "clipped to --batch)")
     ap.add_argument("--shards", type=int, default=0,
-                    help="row-shard the (flat) scan over this many host "
-                         "devices (0 = unsharded)")
+                    help="shard every plan kind over this many host devices "
+                         "(rows/lists/segments placement; 0 = unsharded)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel serving replicas behind per-replica "
+                         "queues; with --shards the host's devices split "
+                         "into this many disjoint sub-meshes "
+                         "(dist.submeshes), one per replica")
     ap.add_argument("--rerank-depth", type=int, default=0,
                     help="override the rerank candidate depth (0 = the "
                          "index's default when built with +rN)")
@@ -256,7 +262,30 @@ def main(argv: list[str] | None = None) -> None:
             buckets = buckets + (args.batch,)
 
     mesh = None
-    if args.shards > 1:
+    replica_meshes = None
+    n_replicas = max(1, args.replicas)
+    if n_replicas > 1:
+        if args.shards > 1 and len(jax.devices()) > 1:
+            # each replica shards over its own disjoint sub-mesh, so
+            # R x S never oversubscribes a device
+            from repro.dist.replica import submeshes
+
+            groups = submeshes(n_replicas)
+            n_replicas = len(groups)
+            per = int(groups[0].devices.size)
+            if per > 1:
+                if args.shards > per:
+                    print(f"[serve] --shards {args.shards} > {per} devices "
+                          f"per replica group; using {per}")
+                replica_meshes = groups
+            else:
+                print(f"[serve] {per} device per replica group — each "
+                      "replica serves unsharded")
+                replica_meshes = [None] * n_replicas
+        else:
+            # CPU-thread replicas sharing the device pool
+            replica_meshes = [None] * n_replicas
+    elif args.shards > 1:
         n_dev = len(jax.devices())
         if args.shards > n_dev:
             print(f"[serve] --shards {args.shards} > {n_dev} devices; "
@@ -289,9 +318,9 @@ def main(argv: list[str] | None = None) -> None:
             counters=telemetry.counters,
         )
 
-    def make_searchers():
+    def make_searchers(shard_mesh=mesh):
         primary = index.searcher(
-            args.k, sp, batch_sizes=buckets, shards=mesh,
+            args.k, sp, batch_sizes=buckets, shards=shard_mesh,
             rerank=args.rerank_depth or None,
         )
         degraded = None
@@ -302,11 +331,9 @@ def main(argv: list[str] | None = None) -> None:
             # params(sp, k) also shrinks cascade stage budgets (floor k)
             degraded = index.searcher(
                 args.k, ctrl.policy.params(sp, args.k), batch_sizes=buckets,
-                shards=mesh, rerank=(d_depth or False),
+                shards=shard_mesh, rerank=(d_depth or False),
             )
         return primary, degraded
-
-    searcher, searcher_deg = make_searchers()
 
     # -- result cache tier -------------------------------------------------
     cache = None
@@ -314,20 +341,71 @@ def main(argv: list[str] | None = None) -> None:
     if args.cache:
         cache = TTLLRUCache(args.cache, ttl_s=args.cache_ttl or None)
 
-    def wrap(s):
-        if s is None or cache is None:
+    def wrap(s, c=None):
+        c = cache if c is None else c
+        if s is None or c is None:
             return s
-        return CachedSearcher(s, cache, version=lambda: replan_gen[0])
+        return CachedSearcher(s, c, version=lambda: replan_gen[0])
 
-    serve_primary, serve_deg = wrap(searcher), wrap(searcher_deg)
+    # -- replica group (dist.replica): R independent serving replicas ------
+    replicas = None
+    searcher = searcher_deg = serve_primary = serve_deg = None
+    if n_replicas > 1:
+        from repro.dist.replica import ReplicaSet
+
+        replica_primaries: dict = {}
+
+        def make_replica(r):
+            primary, degraded = make_searchers(replica_meshes[r])
+            replica_primaries[r] = primary
+            # the result cache is per replica (TTLLRUCache is not
+            # thread-safe; replica workers are threads)
+            rc = (TTLLRUCache(args.cache, ttl_s=args.cache_ttl or None)
+                  if args.cache else None)
+            sx_p, sx_d = wrap(primary, rc), wrap(degraded, rc)
+            # warm every bucket inside the build so worker threads never
+            # compile on the request path
+            for sz in sorted(set(sizes)):
+                jax.block_until_ready(primary(queries[:sz]).ids)
+                if degraded is not None:
+                    jax.block_until_ready(degraded(queries[:sz]).ids)
+
+            def run(item):
+                payload, use_deg = item
+                res = (sx_d if use_deg else sx_p)(payload)
+                jax.block_until_ready(res.ids)
+                return res
+
+            return run
+
+        replicas = ReplicaSet(make_replica, n_replicas,
+                              max_queue=args.max_queue, telemetry=telemetry)
+        head = replica_primaries[0]
+    else:
+        searcher, searcher_deg = make_searchers()
+        serve_primary, serve_deg = wrap(searcher), wrap(searcher_deg)
+        head = searcher
 
     print(f"[serve] index={args.index} kind={index.kind} build={build_s:.2f}s "
           f"memory={index.memory_bytes() / 1e6:.1f}MB buckets={buckets} "
-          f"shards={searcher.n_shards} "
-          f"rerank={searcher.rerank.depth if searcher.rerank else 0}"
+          f"shards={head.n_shards} replicas={n_replicas} "
+          f"rerank={head.rerank.depth if head.rerank else 0}"
           + (f" degraded_rerank="
              f"{searcher_deg.rerank.depth if searcher_deg and searcher_deg.rerank else 0}"
              if searcher_deg else ""))
+
+    # placement accounting (DESIGN.md §15): what each shard holds
+    if head.placement is not None:
+        psum = head.placement.summary()
+        row_bytes = getattr(getattr(index, "store", None), "row_bytes", None)
+        if row_bytes:
+            psum["shard_bytes"] = list(head.placement.shard_bytes(row_bytes))
+        telemetry.meta["placement"] = psum
+        print(f"[serve] placement: kind={psum['kind']} "
+              f"shards={psum['n_shards']} units={psum['n_units']} "
+              f"balance={psum['balance']}"
+              + (f" shard_bytes={psum['shard_bytes']}"
+                 if "shard_bytes" in psum else ""))
 
     # request queue (open loop: all arrivals enqueued up front); with
     # --mutate an upsert lands a third of the way in and a delete two
@@ -376,7 +454,8 @@ def main(argv: list[str] | None = None) -> None:
             if degraded is not None:
                 jax.block_until_ready(degraded(queries[:sz]).ids)
 
-    warm(searcher, searcher_deg)
+    if replicas is None:
+        warm(searcher, searcher_deg)   # replicas warm inside make_replica
 
     maint = None
     if args.maintenance:
@@ -400,9 +479,33 @@ def main(argv: list[str] | None = None) -> None:
     writes = 0
     seq = 0
     t0 = time.perf_counter()
+    pending = []       # replica mode: (future, n_queries, degraded)
     while queue:
         op, payload, vecs, timing, decision = queue.popleft()
         t_req = time.perf_counter()
+        if op == "query" and replicas is not None:
+            # async path: route to the least-loaded replica; workers
+            # record the per-request telemetry (queue_wait/execute)
+            _t_enq, deadline = timing
+            if ctrl is not None and decision is not None:
+                decision = ctrl.recheck(decision, deadline)
+                if decision.action == SHED:
+                    telemetry.event("shed", reason=decision.reason,
+                                    queries=int(payload.shape[0]))
+                    continue
+            degraded = decision.degraded if decision is not None else False
+            fut = replicas.submit((payload, degraded),
+                                  queries=int(payload.shape[0]))
+            if fut is None:          # per-replica admission: queue full
+                telemetry.event("shed", reason="replica_queue",
+                                queries=int(payload.shape[0]))
+                continue
+            t_sub = time.perf_counter()
+            fut.add_done_callback(
+                lambda _f, t=t_sub: latencies.append(time.perf_counter() - t)
+            )
+            pending.append((fut, int(payload.shape[0]), degraded))
+            continue
         if op == "query":
             t_enq, deadline = timing
             tr = telemetry.request(seq)
@@ -446,19 +549,26 @@ def main(argv: list[str] | None = None) -> None:
             # skipped (counted; the write surfaces at the next
             # structural re-plan under LSM snapshot semantics).
             epoch_before = getattr(index, "epoch", None)
+            if replicas is not None:
+                replicas.drain()     # write barrier: no in-flight queries
             if op == "upsert":
                 index.upsert(payload, vecs)
             else:
                 index.delete(payload)
             replanned = epoch_before is None or index.epoch != epoch_before
             if replanned:
-                searcher, searcher_deg = make_searchers()
                 replan_gen[0] += 1
-                serve_primary, serve_deg = wrap(searcher), wrap(searcher_deg)
-                # warm every distinct request size, as at startup — a
-                # cold bucket after the re-plan would pollute the query
-                # p95/p99
-                warm(searcher, searcher_deg)
+                if replicas is not None:
+                    # every replica re-plans (and re-warms) against the
+                    # new manifest epoch before traffic resumes
+                    replicas.rebuild()
+                else:
+                    searcher, searcher_deg = make_searchers()
+                    serve_primary, serve_deg = wrap(searcher), wrap(searcher_deg)
+                    # warm every distinct request size, as at startup — a
+                    # cold bucket after the re-plan would pollute the query
+                    # p95/p99
+                    warm(searcher, searcher_deg)
                 telemetry.counters["replans"] += 1
             else:
                 telemetry.counters["replans_avoided"] += 1
@@ -467,7 +577,27 @@ def main(argv: list[str] | None = None) -> None:
             telemetry.event("write", op=op, rows=int(len(payload)),
                             replanned=replanned, epoch=index.epoch
                             if epoch_before is not None else None)
+    if replicas is not None:
+        replicas.drain()
+        for fut, nq, degraded in pending:
+            res = fut.result()
+            served += nq
+            for key in _AGG_KEYS:
+                totals[key] += int(res.stats.get(key, 0))
+            telemetry.counters["queries_served"] += nq
+            if degraded:
+                telemetry.counters["requests_degraded"] += 1
     dt = time.perf_counter() - t0
+
+    # per-shard scan-bytes counters (placement accounting: each shard's
+    # share of the session's scanned payload)
+    if head.placement is not None and totals["bytes_read"]:
+        p = head.placement
+        rows_all = sum(p.shard_rows(s) for s in range(p.n_shards)) or 1
+        for s in range(p.n_shards):
+            telemetry.counters[f"shard{s}_scan_bytes"] = int(
+                totals["bytes_read"] * p.shard_rows(s) / rows_all
+            )
 
     if maint is not None:
         maint.stop()
@@ -506,6 +636,20 @@ def main(argv: list[str] | None = None) -> None:
               f"budget={c['admission_shed_budget']} "
               f"deadline={c['admission_shed_deadline']}) "
               f"shed_queries={c['admission_shed_queries']}")
+    if replicas is not None:
+        c = telemetry.counters
+        per = " ".join(
+            f"r{r}:req={c[f'replica{r}_requests']}"
+            f"/peak={c[f'replica{r}_queue_peak']}"
+            for r in range(n_replicas)
+        )
+        print(f"[serve] replicas: {n_replicas} shed={c['replica_shed']} {per}")
+        replicas.close()
+    if head.placement is not None:
+        c = telemetry.counters
+        print("[serve] shard scan bytes: "
+              + " ".join(f"s{s}={c[f'shard{s}_scan_bytes']}"
+                         for s in range(head.placement.n_shards)))
     if maint is not None:
         c = telemetry.counters
         print(f"[serve] maintenance: rounds={c['maintenance_rounds']} "

@@ -482,12 +482,29 @@ class MutableIndex:
             return True
 
     # -- query -------------------------------------------------------------
+    def placement(self, n_shards: int):
+        """Segments are the natural shard unit of a stream index: each
+        carries its own row-id base, so assigning whole segments to
+        shards keeps the gid arithmetic local.  The memtable (when
+        non-empty) rides along as one more unit."""
+        from repro.dist.placement import Placement
+
+        with self._lock:
+            rows = [int(seg.n) for seg in self.manifest.segments]
+            mvecs, _ = self.memtable.snapshot()
+            if int(mvecs.shape[0]):
+                rows.append(int(mvecs.shape[0]))
+        if not rows:
+            rows = [0]
+        return Placement.segments(rows, n_shards)
+
     def plan(
         self,
         k: int,
         params: Optional[B.SearchParams] = None,
         *,
         mesh=None,
+        placement=None,
         rerank_depth: Optional[int] = None,
     ):
         """Snapshot the manifest + memtable into a multi-source runner.
@@ -498,15 +515,19 @@ class MutableIndex:
         re-scores candidates against the raw payloads at ``rerank_bits``
         precision whenever there is more than one source or an explicit
         rerank depth (see ``knn.searcher.multi_source_plan``).
+
+        Under a mesh every source plans against the full mesh (each
+        segment's inner kind shards its own rows/lists), and the merge +
+        rescore stay replicated inside the same jit — no host round-trip
+        between a shard scan and the cross-source merge.
         """
-        if mesh is not None:
-            raise ValueError(
-                "sharded searcher plans are flat-only; shard a stream "
-                "index by segment placement in a future PR"
-            )
         from repro.knn.flat import FlatIndex
         from repro.knn.searcher import multi_source_plan
 
+        if placement is not None and placement.kind != "segments":
+            raise ValueError(
+                "stream shards place whole segments; got a "
+                f"{placement.kind!r} placement")
         sp = params or B.SearchParams()
         depth = rerank_depth or k
         # the whole snapshot assembly holds the write lock: a background
@@ -518,7 +539,7 @@ class MutableIndex:
                 # over-fetch by the dead count so k live rows survive the
                 # tombstone mask on exact sources
                 kj = min(seg.n, depth + seg.dead_count)
-                sources.append((seg.index.plan(kj, sp), base, kj))
+                sources.append((seg.index.plan(kj, sp, mesh=mesh), base, kj))
             mvecs, mids = self.memtable.snapshot()
             m = int(mvecs.shape[0])
             if m:
@@ -527,7 +548,7 @@ class MutableIndex:
                     store=engine.CodeStore.dense(jnp.asarray(mvecs)),
                 )
                 sources.append(
-                    (mem_index.plan(min(m, depth), sp),
+                    (mem_index.plan(min(m, depth), sp, mesh=mesh),
                      self.manifest.total_rows, min(m, depth))
                 )
 
@@ -563,6 +584,8 @@ class MutableIndex:
             merge_store=merge_store,
             rescore=rescore and merge_store is not None,
             stats_extra=stats_extra,
+            mesh=mesh,
+            placement=placement,
         )
 
     def searcher(self, k: int, params: Optional[B.SearchParams] = None, **kw):

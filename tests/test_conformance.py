@@ -184,3 +184,79 @@ def test_stream_pq16x4_mutates_and_roundtrips(corpus_queries, built, tmp_path):
     ids = np.asarray(a.ids)
     assert (ids >= 0).all() and ids.max() < N + 64
     assert not np.isin(ids, np.arange(16)).any(), "deleted rows resurfaced"
+
+
+# --------------------------------------------------------------------------
+# sharded parity matrix (DESIGN.md §15): every kind, 2- and 4-device meshes
+# --------------------------------------------------------------------------
+
+#: representative arm per registered kind (plus regional / packed / l2
+#: variants) for the sharded-vs-unsharded bit-parity matrix
+SHARDED_ARMS = {
+    "flat,lpq4": {},
+    "ivf8,lpq8": {"kmeans_iters": 4},
+    "ivf8,lpq8,regions": {"kmeans_iters": 4},
+    "pq16x4,lpq8": {"kmeans_iters": 4},
+    "pq16+lpq,l2": {"kmeans_iters": 4},
+    "hnsw8,lpq8,regions": {"ef_construction": 40, "batch_size": 128},
+    "graph16,lpq4,regions": {"n_seeds": 16},
+    "stream(ivf8,lpq8)+r32": {"seal_threshold": 128, "kmeans_iters": 4},
+    "cascade(flat,lpq4|r32)": {},
+}
+
+
+@pytest.mark.slow
+def test_sharded_parity_matrix_subprocess():
+    """Every registry kind bit-matches its unsharded twin under 2- and
+    4-virtual-device meshes (one subprocess: the in-process backend is
+    already pinned to this host's device count)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    covered = {parse_factory(f).kind for f in SHARDED_ARMS}
+    covered |= {
+        parse_factory(parse_factory(f).params["inner"]).kind
+        for f in SHARDED_ARMS
+        if parse_factory(f).kind == "stream"
+    }
+    assert covered == set(kinds()), (
+        f"sharded parity matrix must cover every kind "
+        f"(missing: {set(kinds()) - covered})"
+    )
+
+    prog = textwrap.dedent(f"""
+        import jax, numpy as np
+        from repro.knn import SearchParams, make_index
+        assert len(jax.devices()) == 4, jax.devices()
+        ARMS = {SHARDED_ARMS!r}
+        corpus = np.asarray(
+            jax.random.normal(jax.random.PRNGKey(0), (384, 32))) * 0.05
+        queries = np.asarray(
+            jax.random.normal(jax.random.PRNGKey(1), (8, 32))) * 0.05
+        sp = SearchParams(nprobe=8, ef_search=40)
+        for factory, over in ARMS.items():
+            idx = make_index(factory, corpus, key=jax.random.PRNGKey(0), **over)
+            un = idx.searcher(10, sp)(queries)
+            for s in (2, 4):
+                mesh = jax.make_mesh((s,), ("data",))
+                sh = idx.searcher(10, sp, shards=mesh)(queries)
+                np.testing.assert_array_equal(
+                    np.asarray(un.ids), np.asarray(sh.ids),
+                    err_msg=f"{{factory}} ids @ {{s}} shards")
+                np.testing.assert_array_equal(
+                    np.asarray(un.scores), np.asarray(sh.scores),
+                    err_msg=f"{{factory}} scores @ {{s}} shards")
+                assert sh.stats["shards"] == s
+                assert "placement" in sh.stats, factory
+        print("PARITY-OK")
+    """)
+    env = {**os.environ,
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=4",
+           "PYTHONPATH": "src" + os.pathsep + os.environ.get("PYTHONPATH", "")}
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, timeout=1200, env=env,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "PARITY-OK" in out.stdout

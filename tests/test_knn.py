@@ -17,7 +17,7 @@ from repro.knn import (
     merge_topk,
     radius_graph,
 )
-from repro.knn import topk as T
+from repro.engine import distributed_topk
 
 
 @pytest.fixture(scope="module")
@@ -103,7 +103,7 @@ def test_distributed_topk_matches_global():
     def local(q, shard, idx):
         s = q @ shard.T
         ls, li = jax.lax.top_k(s, k)
-        return T.distributed_topk(ls, li.astype(jnp.int32), k, ("data",),
+        return distributed_topk(ls, li.astype(jnp.int32), k, ("data",),
                                   idx[0] * shard.shape[0])
 
     fn = shard_map(

@@ -1,0 +1,223 @@
+"""Distributed placement subsystem (DESIGN.md §15): Placement plans,
+sentinel pad gids, replica fan-out, and the ReplicaSet serving layer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist import sentinel_gids, submeshes
+from repro.dist.placement import Placement, balance, for_index
+from repro.dist.replica import ReplicaSet, replicated_query_plan
+from repro.knn import make_index
+
+
+# --------------------------------------------------------------------------
+# Placement plans (host-side)
+# --------------------------------------------------------------------------
+
+def test_balance_lpt_is_deterministic_and_bounded():
+    sizes = [7, 1, 5, 5, 3, 9, 2]
+    a1 = balance(sizes, 3)
+    a2 = balance(list(sizes), 3)
+    assert a1 == a2                      # reproducible across calls
+    loads = [0, 0, 0]
+    for u, s in enumerate(a1):
+        loads[s] += sizes[u]
+    # LPT guarantee: max load <= (4/3 - 1/3m) * OPT; generous bound here
+    assert max(loads) <= 2 * (sum(sizes) + 2) // 3
+
+
+def test_placement_rows_contiguous_blocks():
+    p = Placement.rows(10, 3)
+    assert p.kind == "rows" and p.n_shards == 3
+    assert sum(p.unit_sizes) == 10
+    assert p.shard_rows(0) == 4 and p.shard_rows(2) == 2
+    assert p.n_rows == 10
+    assert p.summary()["balance"] >= 1.0
+
+
+def test_placement_lists_balances_skew():
+    sizes = [100, 1, 1, 1, 1, 1, 1, 1]
+    p = Placement.lists(sizes, 2)
+    # the one giant list must not drag everything onto its shard
+    big_shard = p.assign[0]
+    assert all(s != big_shard for u, s in enumerate(p.assign) if u)
+    assert p.shard_rows(big_shard) == 100
+    assert p.n_rows == sum(sizes)
+
+
+def test_placement_segments_and_bytes():
+    p = Placement.segments([128, 128, 64], 2)
+    assert p.kind == "segments" and p.n_units == 3
+    assert p.shard_rows(0) + p.shard_rows(1) == 320
+    assert p.shard_bytes(4) == (p.shard_rows(0) * 4, p.shard_rows(1) * 4)
+
+
+def test_placement_replicated():
+    p = Placement.replicated(500, 4)
+    assert p.kind == "replicated" and p.n_units == 0
+    assert p.n_rows == 500
+    assert all(p.shard_rows(s) == 500 for s in range(4))
+
+
+def test_placement_validates():
+    with pytest.raises(ValueError):
+        Placement("rows", 2, (0, 2), (5, 5))        # shard id out of range
+    with pytest.raises(ValueError):
+        Placement("bogus", 2, (0, 1), (5, 5))
+    with pytest.raises(ValueError):
+        balance([1, 2], 0)
+
+
+def test_for_index_picks_the_kind_unit():
+    corpus = np.random.RandomState(0).randn(256, 16).astype("float32")
+    assert for_index(make_index("flat", corpus), 2).kind == "rows"
+    assert for_index(make_index("ivf8", corpus, kmeans_iters=2), 2).kind == "lists"
+    assert for_index(make_index("hnsw", corpus), 2).kind == "replicated"
+
+
+# --------------------------------------------------------------------------
+# sentinel pad gids (the PR 3 aliasing hazard)
+# --------------------------------------------------------------------------
+
+def test_sentinel_gids_unique_and_out_of_range():
+    """Pad rows must never alias a *real* gid of another shard, at
+    non-dividing chunk/shard combos: n=97 rows over 2 shards with
+    chunk=10 tiles pads each shard to 50 rows, and shard 0's pad gids
+    (49..) would alias shard 1's real rows without the sentinel bands."""
+    n, n_shards, padded = 97, 2, 50
+    all_gids = []
+    for shard in range(n_shards):
+        start = shard * 49
+        lrow = jnp.arange(padded, dtype=jnp.int32)
+        gid0 = start + lrow
+        valid = (lrow < 49) & (gid0 < n)
+        g = sentinel_gids(gid0, valid, shard=shard, local_rows=lrow,
+                          n_total=n, padded_rows=padded)
+        g = np.asarray(g)
+        # every invalid slot is >= n (never a real row anywhere)
+        assert (g[~np.asarray(valid)] >= n).all()
+        all_gids.append(g)
+    flat = np.concatenate(all_gids)
+    real = flat[flat < n]
+    sent = flat[flat >= n]
+    # sentinels are globally unique: no two pad slots share a gid
+    assert len(set(sent.tolist())) == sent.size
+    # and they collide with no real row
+    assert not (set(sent.tolist()) & set(real.tolist()))
+
+
+def test_sharded_scan_non_dividing_rows_parity():
+    """End-to-end regression for the aliasing hazard on the devices this
+    host exposes: odd corpus size + tiny chunk forces pad tiles whose
+    naive gids would run into the next shard."""
+    corpus = np.random.RandomState(0).randn(97, 8).astype("float32")
+    queries = np.random.RandomState(1).randn(5, 8).astype("float32")
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    from repro.knn import SearchParams
+
+    for factory in ("flat", "flat,lpq4"):
+        idx = make_index(factory, corpus)
+        un = idx.searcher(20, SearchParams(chunk=10))(queries)
+        sh = idx.searcher(20, SearchParams(chunk=10), shards=mesh)(queries)
+        np.testing.assert_array_equal(np.asarray(un.ids), np.asarray(sh.ids))
+        np.testing.assert_array_equal(np.asarray(un.scores),
+                                      np.asarray(sh.scores))
+
+
+# --------------------------------------------------------------------------
+# replica fan-out
+# --------------------------------------------------------------------------
+
+def test_replicated_query_plan_pads_and_restores():
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+
+    def core(qs):
+        s = jnp.sum(qs, axis=-1, keepdims=True)
+        return s, jnp.zeros_like(s, jnp.int32)
+
+    run = replicated_query_plan(core, mesh)
+    for Q in (1, 3, 8):
+        q = jnp.asarray(np.random.RandomState(Q).randn(Q, 4), jnp.float32)
+        s, i = run(q)
+        assert s.shape == (Q, 1) and i.shape == (Q, 1)
+        np.testing.assert_allclose(np.asarray(s),
+                                   np.asarray(jnp.sum(q, -1, keepdims=True)),
+                                   rtol=1e-6)
+
+
+def test_submeshes_disjoint_cover():
+    groups = submeshes(len(jax.devices()))
+    seen = set()
+    for m in groups:
+        for d in m.devices.flat:
+            assert d.id not in seen
+            seen.add(d.id)
+
+
+# --------------------------------------------------------------------------
+# ReplicaSet serving layer
+# --------------------------------------------------------------------------
+
+def test_replicaset_routes_and_serves():
+    served = []
+
+    def make(r):
+        return lambda x: served.append((r, x)) or (r, x * 10)
+
+    rs = ReplicaSet(make, 2)
+    futs = [rs.submit(i, queries=1) for i in range(6)]
+    out = [f.result(timeout=10) for f in futs]
+    rs.close()
+    assert sorted(x for _r, x in out) == [0, 10, 20, 30, 40, 50]
+    assert {r for r, _x in served} <= {0, 1}
+
+
+def test_replicaset_admission_sheds_and_counts():
+    import threading
+
+    from repro.runtime.telemetry import Telemetry
+
+    gate = threading.Event()
+    tel = Telemetry()
+    rs = ReplicaSet(lambda r: lambda x: (gate.wait(10), x)[1], 1,
+                    max_queue=1, telemetry=tel)
+    first = rs.submit(0, queries=1)
+    # worker may or may not have picked up the first yet; fill to the cap
+    while rs.submit(99, queries=1) is not None:
+        pass
+    assert tel.counters["replica_shed"] >= 1
+    gate.set()
+    assert first.result(timeout=10) == 0
+    rs.close()
+    assert tel.counters["replica0_requests"] >= 1
+    assert tel.counters["replica0_queries"] >= 1
+
+
+def test_replicaset_rebuild_is_a_write_barrier():
+    epochs = {"e": 0}
+
+    def make(r):
+        e = epochs["e"]
+        return lambda x: (e, x)
+
+    rs = ReplicaSet(make, 2)
+    assert rs.submit(1).result(timeout=10)[0] == 0
+    epochs["e"] = 1
+    rs.rebuild()
+    assert rs.submit(1).result(timeout=10)[0] == 1
+    rs.close()
+
+
+def test_replicaset_surfaces_exceptions():
+    def make(r):
+        def run(x):
+            raise RuntimeError("boom")
+        return run
+
+    rs = ReplicaSet(make, 1)
+    fut = rs.submit(1)
+    with pytest.raises(RuntimeError, match="boom"):
+        fut.result(timeout=10)
+    rs.close()

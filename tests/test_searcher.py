@@ -226,11 +226,38 @@ def test_sharded_plan_matches_unsharded(corpus_queries):
         assert sh.stats["shards"] == len(jax.devices())
 
 
-def test_sharded_plan_rejected_for_graph_kinds(corpus_queries, built):
+def test_sharded_plan_every_kind_matches_unsharded(corpus_queries, built):
+    """Every registry kind now shards (lists / rows / replicated fan-out)
+    and must bit-match its unsharded twin — ids AND scores."""
+    corpus, queries = corpus_queries
     mesh = jax.make_mesh((len(jax.devices()),), ("data",))
-    for kind in ("ivf", "hnsw", "graph", "pq"):
-        with pytest.raises(ValueError, match="flat-only"):
-            built[kind].searcher(K, SP, shards=mesh)
+    for kind, idx in built.items():
+        un = idx.searcher(K, SP)(queries)
+        sh = idx.searcher(K, SP, shards=mesh)(queries)
+        np.testing.assert_array_equal(
+            np.asarray(un.ids), np.asarray(sh.ids), err_msg=kind
+        )
+        np.testing.assert_array_equal(
+            np.asarray(un.scores), np.asarray(sh.scores), err_msg=kind
+        )
+        assert sh.stats["placement"] in (
+            "rows", "lists", "segments", "replicated"
+        ), kind
+
+
+def test_sharded_plan_rejects_mismatched_placement(corpus_queries, built):
+    """A pinned placement must match the index's shard unit — an ivf plan
+    refuses a row placement, a graph walk refuses anything non-replicated."""
+    from repro.dist.placement import Placement
+
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    n_dev = len(jax.devices())
+    with pytest.raises(ValueError, match="place whole lists"):
+        built["ivf"].plan(K, SP, mesh=mesh,
+                          placement=Placement.rows(built["ivf"].n, n_dev))
+    with pytest.raises(ValueError, match="only replicates"):
+        built["graph"].plan(K, SP, mesh=mesh,
+                            placement=Placement.rows(built["graph"].n, n_dev))
 
 
 @pytest.mark.slow

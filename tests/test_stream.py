@@ -130,18 +130,6 @@ class TestTopkConsolidation:
             np.testing.assert_allclose(np.asarray(s), np.asarray(ref_s),
                                        rtol=1e-6)
 
-    def test_legacy_shim_reexports(self):
-        from repro.knn import topk as T
-
-        assert T.chunked_topk is engine.chunked_topk
-        assert T.distributed_topk is engine.distributed_topk
-        assert T.merge_topk is engine.merge_topk
-        padded, n = T.pad_corpus(jnp.ones((10, 3)), 4)
-        assert padded.shape == (12, 3) and n == 10
-        s, i = T.mask_invalid(jnp.ones((1, 3)),
-                              jnp.asarray([[0, 10, 2]], jnp.int32), 3)
-        assert np.asarray(i).tolist() == [[0, -1, 2]]
-
     def test_remap_ids(self):
         id_map = jnp.asarray([7, 8, 9], jnp.int32)
         out = engine.remap_ids(jnp.asarray([[0, -1, 2]], jnp.int32), id_map)
@@ -438,8 +426,9 @@ class TestMutableIndex:
         with pytest.raises(ValueError):
             idx.upsert([1], np.zeros((1, D + 1), np.float32))
         assert idx.delete([42]) == 0
-        with pytest.raises(ValueError, match="unsharded|flat-only"):
-            idx.plan(3, mesh=object())
+        from repro.dist.placement import Placement
+        with pytest.raises(ValueError, match="whole segments"):
+            idx.plan(3, placement=Placement.rows(10, 1))
 
     def test_hnsw_inner_kind(self, corpus, queries):
         idx = make_index("stream(hnsw8,lpq8)", corpus, seal_threshold=300,
