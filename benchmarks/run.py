@@ -23,6 +23,7 @@ from benchmarks import (  # noqa: E402 — profile must precede jax init
     bench_adc,
     bench_autotune,
     bench_cascade,
+    bench_filtered,
     bench_kernels,
     bench_serve,
     bench_stream,
@@ -48,6 +49,8 @@ SUITES = {
     "bench_adc": lambda: bench_adc.main(["--smoke"]),
     # multi-stage cascade vs single-stage ancestors (recall/bytes gate)
     "bench_cascade": lambda: bench_cascade.main(["--smoke"]),
+    # predicate bitmaps through the id-masking path (QPS/oracle gate)
+    "bench_filtered": lambda: bench_filtered.main(["--smoke"]),
     # tuned-vs-default dispatch (runs the measured autotuner first)
     "bench_autotune": lambda: bench_autotune.main(["--smoke"]),
     "table3": table3_graph_recall.main,

@@ -1,0 +1,88 @@
+"""Category-filtered two-tower retrieval (DESIGN.md §16): a recsys
+candidate generator that must only surface items from the categories a
+request is allowed to see (storefront section, region licensing, user
+opt-outs), served through a mutable ``stream(ivf64,lpq8)`` index.
+
+The item tower's embeddings land in a quantized IVF index; each item
+carries a category id in a plain metadata column.  A request turns its
+allowed categories into a :class:`repro.filter.Filter` bitmap riding
+``SearchParams`` — the engine ANDs it into the same id fence that drops
+padding and tombstones, so the filtered query costs a mask, not a
+rescan, and survives live catalog churn (upserts/deletes) unchanged.
+
+    PYTHONPATH=src python examples/filtered_recsys.py
+"""
+
+import jax
+import numpy as np
+
+from repro.filter import Filter
+from repro.knn import SearchParams, make_index
+
+N_ITEMS, D, N_USERS, K, N_CATS = 3000, 32, 8, 10, 6
+
+
+def towers(key):
+    """A stand-in two-tower geometry: items on a latent sphere, each
+    user tower output near a handful of items (their history)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    items = jax.random.normal(k1, (N_ITEMS, D))
+    items = items / jax.numpy.linalg.norm(items, axis=1, keepdims=True)
+    anchor = jax.random.randint(k2, (N_USERS,), 0, N_ITEMS)
+    users = items[anchor] + 0.15 * jax.random.normal(k3, (N_USERS, D))
+    return np.asarray(items), np.asarray(users)
+
+
+def oracle(items, users, allowed_ids, k):
+    """Brute-force filtered MIP top-k in fp32 (ids in catalog space)."""
+    scores = users @ items[allowed_ids].T
+    order = np.argsort(-scores, axis=1)[:, :k]
+    return allowed_ids[order]
+
+
+def main():
+    items, users = towers(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    category = rng.integers(0, N_CATS, N_ITEMS)
+
+    idx = make_index("stream(ivf64,lpq8)+r32", items, metric="ip",
+                     key=jax.random.PRNGKey(1))
+    print(f"[filtered_recsys] catalog: {idx.n} items x {D}d, "
+          f"{N_CATS} categories, kind={idx.kind}")
+
+    # one storefront section: categories {1, 4} only
+    filt = Filter.from_column(category, {1, 4})
+    sp = SearchParams(nprobe=64, filter=filt)
+    res = idx.search(users, K, sp)
+    ids = np.asarray(res.ids)
+    assert np.isin(category[ids[ids >= 0]], [1, 4]).all()
+    gt = oracle(items, users, np.where(filt.mask)[0], K)
+    hit = np.mean([len(set(r) & set(g)) / K for r, g in zip(ids, gt)])
+    print(f"[filtered_recsys] categories {{1,4}}: selectivity="
+          f"{filt.selectivity:.3f} recall@{K} vs filtered oracle={hit:.3f} "
+          f"(stats: filter_selectivity="
+          f"{res.stats['filter_selectivity']})")
+
+    # catalog churn: new items arrive in category 4, stale ones retire —
+    # the same request-side bitmap (extended with the column) stays exact
+    new_items = items[:64] * 0.9 + 0.1 * rng.standard_normal((64, D))
+    new_ids = np.arange(N_ITEMS, N_ITEMS + 64)
+    idx.upsert(new_ids, new_items)
+    idx.delete(np.where(category == 1)[0][:50])
+    category2 = np.concatenate([category, np.full(64, 4)])
+
+    filt2 = Filter.from_column(category2, {1, 4})
+    res2 = idx.search(users, K, SearchParams(nprobe=64, filter=filt2))
+    ids2 = np.asarray(res2.ids)
+    live = ids2[ids2 >= 0]
+    assert np.isin(category2[live], [1, 4]).all()
+    deleted = set(np.where(category == 1)[0][:50].tolist())
+    assert not (set(live.tolist()) & deleted), "tombstoned item surfaced"
+    print(f"[filtered_recsys] after churn (+64 upserts, -50 deletes): "
+          f"n={idx.n} live={idx.stats()['live']} "
+          f"new-item hits={int(np.isin(ids2, new_ids).sum())} "
+          f"(filter ∧ tombstone composed in one bitmap)")
+
+
+if __name__ == "__main__":
+    main()

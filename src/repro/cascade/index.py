@@ -205,6 +205,16 @@ class CascadeIndex:
         the Searcher compiles the whole chain per batch bucket."""
         sp = (params or B.SearchParams()).validate()
         budgets = self.resolve_budgets(k, sp.budgets, rerank_depth)
+        # filter (DESIGN.md §16): the head prunes under the filter (it
+        # receives sp verbatim), and every refinement stage re-applies
+        # the bitmap on its candidate slots — a stage can only prune, so
+        # no disallowed row can re-enter once the head dropped it, but
+        # the re-apply keeps the invariant independent of head kind
+        fmask, fstats = None, {}
+        if sp.filter is not None:
+            fmask = jnp.asarray(sp.filter.aligned(self.n))
+            fstats = {"filter_selectivity":
+                      round(sp.filter.selectivity, 6)}
         head_runner = self.head.plan(
             budgets[0], sp, mesh=mesh, placement=placement
         )
@@ -226,7 +236,7 @@ class CascadeIndex:
             )]
             for store, out_k, label in zip(self.stage_stores, outs, labels):
                 s, ids, sst = engine.refine_among(
-                    q, store, ids, out_k, self.metric
+                    q, store, ids, out_k, self.metric, mask=fmask
                 )
                 total_bytes += sst["bytes_read"]
                 stage_rows.append(
@@ -239,6 +249,7 @@ class CascadeIndex:
                 cascade_stages=1 + len(self.stage_stores),
                 reranked=int(budgets[-1]),
                 rerank_bits=self.rerank_bits,
+                **fstats,
             )
             return B.SearchResult(s, ids, stats)
 

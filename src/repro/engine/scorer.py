@@ -94,15 +94,18 @@ def remap_ids(ids: jax.Array, id_map: jax.Array) -> jax.Array:
     return jnp.where(ids >= 0, id_map[safe].astype(jnp.int32), -1)
 
 
-def _stream_topk(q, data, k, chunk, n_valid, tile_scores):
+def _stream_topk(q, data, k, chunk, n_valid, tile_scores, mask=None):
     """THE streaming top-k loop: every scan-shaped top-k routes here.
 
     Scores ``data`` in ``chunk``-row tiles through ``tile_scores(q, tile)``
     with a running [Q, k] best set (``merge_topk``), id-masking rows
-    >= ``n_valid`` at the source.  Callers wrap it in their own jit
-    (``_scan_topk`` specializes on the store pytree, ``chunked_topk`` on a
-    static score_fn) so there is exactly one implementation of the
-    chunked-merge formulation and two compiled entry points.
+    >= ``n_valid`` at the source.  An optional [n] predicate ``mask``
+    (True = allowed) ANDs into the same fence — the filter dataflow of
+    DESIGN.md §16: filtered rows die exactly like pad rows, inside the
+    tile the scan was reading anyway, so ``bytes_read`` is unchanged.
+    Callers wrap it in their own jit (``_scan_topk`` specializes on the
+    store pytree, ``chunked_topk`` on a static score_fn) so there is
+    exactly one implementation of the chunked-merge formulation.
     """
     Q = q.shape[0]
     n = data.shape[0]
@@ -111,6 +114,8 @@ def _stream_topk(q, data, k, chunk, n_valid, tile_scores):
         s = tile_scores(q, data)
         gid = jnp.arange(n, dtype=jnp.int32)[None, :]
         ok = gid < n_valid
+        if mask is not None:
+            ok = ok & mask.astype(bool)[None, :]
         s = jnp.where(ok, s, NEG)
         ids = jnp.where(ok, jnp.broadcast_to(gid, s.shape), -1)
         return merge_topk(
@@ -123,6 +128,27 @@ def _stream_topk(q, data, k, chunk, n_valid, tile_scores):
     tiles = padded.reshape(n_chunks, chunk, padded.shape[-1])
 
     init = (jnp.full((Q, k), NEG, jnp.float32), jnp.full((Q, k), -1, jnp.int32))
+
+    if mask is not None:
+        mtiles = jnp.pad(
+            mask.astype(bool), (0, padded.shape[0] - n)
+        ).reshape(n_chunks, chunk)
+
+        def step_masked(carry, inp):
+            best_s, best_i = carry
+            tile, tile_idx, mrow = inp
+            s = tile_scores(q, tile)
+            gid = tile_idx * chunk + jnp.arange(chunk, dtype=jnp.int32)[None, :]
+            ok = (gid < n_valid) & mrow[None, :]
+            s = jnp.where(ok, s, NEG)
+            ids = jnp.where(ok, jnp.broadcast_to(gid, s.shape), -1)
+            return merge_topk(best_s, best_i, s, ids, k), None
+
+        (best_s, best_i), _ = jax.lax.scan(
+            step_masked, init,
+            (tiles, jnp.arange(n_chunks, dtype=jnp.int32), mtiles),
+        )
+        return best_s, best_i
 
     def step(carry, inp):
         best_s, best_i = carry
@@ -148,6 +174,7 @@ def chunked_topk(
     score_fn: Callable[[jax.Array, jax.Array], jax.Array],
     chunk: int = 16384,
     n_valid: int | None = None,
+    mask: jax.Array | None = None,
 ):
     """Exact top-k of score_fn(queries, corpus) without materializing [Q, N].
 
@@ -163,7 +190,8 @@ def chunked_topk(
     def tile_scores(q, tile):
         return score_fn(q, tile).astype(jnp.float32)
 
-    return _stream_topk(queries, corpus, k, chunk, n_valid, tile_scores)
+    return _stream_topk(queries, corpus, k, chunk, n_valid, tile_scores,
+                        mask=mask)
 
 
 # --------------------------------------------------------------------------
@@ -208,7 +236,8 @@ def make_score_set(store: CodeStore, metric: str) -> ScoreSet:
 # --------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("k", "metric", "chunk"))
-def _scan_topk(q: jax.Array, store: CodeStore, k: int, metric: str, chunk: int):
+def _scan_topk(q: jax.Array, store: CodeStore, k: int, metric: str, chunk: int,
+               mask: jax.Array | None = None):
     """Unfused fallback: ``_stream_topk`` over the store's tiles.
 
     Used for metrics the fused kernel does not cover (angular needs the
@@ -222,7 +251,8 @@ def _scan_topk(q: jax.Array, store: CodeStore, k: int, metric: str, chunk: int):
             jnp.float32
         )
 
-    return _stream_topk(q, store.data, k, chunk, store.n, tile_scores)
+    return _stream_topk(q, store.data, k, chunk, store.n, tile_scores,
+                        mask=mask)
 
 
 def topk(
@@ -235,6 +265,7 @@ def topk(
     prepared: bool = False,
     use_pallas: bool = True,
     interpret: bool | None = None,
+    mask: jax.Array | None = None,
 ):
     """Exact top-k of the whole store: (scores [Q, k] f32, ids, stats).
 
@@ -243,6 +274,9 @@ def topk(
     already in the store's code space (skip ``encode_queries``).
     ``chunk`` sizes the scan chunks on the unfused path and caps the
     fused kernel's corpus tile (the working-set bound either way).
+    An optional [n] ``mask`` (True = allowed; store-local row space,
+    before ``base`` rebasing) rides the id-masking fence on every path —
+    filtered rows cost nothing extra to skip, so stats are unchanged.
 
     Dispatch consults the installed TuneTable first (``repro.tune``):
     a matching entry decides fused-vs-scan and the tile/chunk shapes;
@@ -258,7 +292,8 @@ def topk(
         cfg = T.lookup("fused_adc", metric, store.bits,
                        jnp.shape(queries)[0], store.n, store.m)
         s, i = _topk_pq(queries, store, k, metric, chunk,
-                        use_pallas=use_pallas, interpret=interpret, cfg=cfg)
+                        use_pallas=use_pallas, interpret=interpret, cfg=cfg,
+                        mask=mask)
         if s.shape[1] < k:               # uniform [Q, k] contract: -1 pads
             s = jnp.pad(s, ((0, 0), (0, k - s.shape[1])), constant_values=NEG)
             i = jnp.pad(i, ((0, 0), (0, k - i.shape[1])), constant_values=-1)
@@ -312,14 +347,14 @@ def topk(
     if fused:
         s, i = K.fused_topk(
             q, store.data, k_eff, metric, packed=store.packed,
-            bq=bq, bn=tile, interpret=interpret,
+            bq=bq, bn=tile, interpret=interpret, mask=mask,
         )
         chunks = -(-store.n // tile)
         # the fused grid re-streams the corpus once per bq-row query tile
         # (queries are VMEM-resident within a tile, not across tiles)
         passes = max(1, -(-q.shape[0] // (bq or K.fused_query_tile())))
     else:
-        s, i = _scan_topk(q, store, k_eff, metric, chunk_eff)
+        s, i = _scan_topk(q, store, k_eff, metric, chunk_eff, mask)
         chunks = max(1, -(-store.n // chunk_eff))
         passes = 1                       # one scan, all queries resident
 
@@ -345,12 +380,15 @@ def topk_among(
     cand_ids: jax.Array,
     k: int,
     metric: str,
+    mask: jax.Array | None = None,
 ):
     """Top-k restricted to per-query candidate lists.
 
     q_codes [Q, d_eff] prepared queries; cand_ids [Q, L] (-1 = empty
     slot).  Gathers store rows (unpacking int4 only for what was
     gathered), scores, masks empties, returns ([Q, k], [Q, k]).
+    An optional [n] predicate ``mask`` over store rows (True = allowed,
+    same row space as ``cand_ids``) ANDs into the empty-slot fence.
 
     Scoring is the batched ``D.scores_among`` (einsum over the gathered
     [Q, L, d] block) rather than a vmapped per-query dot: the batched
@@ -362,7 +400,10 @@ def topk_among(
     k_eff = min(k, L)
 
     ok = cand_ids >= 0
-    rows = store.take(jnp.where(ok, cand_ids, 0))        # [Q, L, d]
+    safe = jnp.where(ok, cand_ids, 0)
+    if mask is not None:
+        ok = ok & mask.astype(bool)[safe]
+    rows = store.take(safe)                              # [Q, L, d]
     s = D.scores_among(q_codes, rows, metric, quantized=store.quantized)
     s = jnp.where(ok, s.astype(jnp.float32), NEG)
     s, pos = jax.lax.top_k(s, k_eff)
@@ -387,6 +428,7 @@ def rerank_among(
     cand_ids: jax.Array,
     k: int,
     metric: str,
+    mask: jax.Array | None = None,
 ):
     """Re-score candidate ids against a higher-precision store.
 
@@ -398,7 +440,7 @@ def rerank_among(
     delta) — ``bytes_read`` counts the gathered rerank payload.
     """
     q = store.encode_queries(jnp.asarray(queries, jnp.float32))
-    s, i = topk_among(q, store, cand_ids, k, metric)
+    s, i = topk_among(q, store, cand_ids, k, metric, mask)
     depth = int(cand_ids.shape[1])
     stats = {
         "reranked": depth,
@@ -418,6 +460,7 @@ def refine_among(
     cand_ids: jax.Array,
     out_k: int,
     metric: str,
+    mask: jax.Array | None = None,
 ):
     """One cascade refinement stage: re-score the surviving candidates at
     this store's precision and keep the best ``out_k``.
@@ -429,7 +472,7 @@ def refine_among(
     candidate-list width), gathered payload bytes, and code width.
     """
     q = store.encode_queries(jnp.asarray(queries, jnp.float32))
-    s, i = topk_among(q, store, cand_ids, out_k, metric)
+    s, i = topk_among(q, store, cand_ids, out_k, metric, mask)
     depth = int(cand_ids.shape[1])
     stats = {
         "candidates": depth,
@@ -449,6 +492,7 @@ def topk_among_regional(
     cand_ids: jax.Array,
     k: int,
     metric: str,
+    mask: jax.Array | None = None,
 ):
     """Candidate top-k with per-region Eq. 1 constant lookup.
 
@@ -457,14 +501,16 @@ def topk_among_regional(
     against *dequantized* rows: each gathered candidate's region id
     (``assign [N]``) selects its own ``region_scale`` / ``region_zero``
     rows ([R, d]) and the code is mapped back to fp32 before the metric.
-    Everything else (empty-slot masking, -1 pads, base rebasing) matches
-    ``topk_among``.
+    Everything else (empty-slot masking, -1 pads, base rebasing, the
+    optional row-space ``mask``) matches ``topk_among``.
     """
     L = cand_ids.shape[1]
     k_eff = min(k, L)
 
     ok = cand_ids >= 0
     safe = jnp.where(ok, cand_ids, 0)
+    if mask is not None:
+        ok = ok & mask.astype(bool)[safe]
     codes = store.take(safe).astype(jnp.float32)         # [Q, L, d]
     reg = assign[safe]                                   # [Q, L]
     x = codes * region_scale[reg] + region_zero[reg]
@@ -654,6 +700,7 @@ def _topk_pq(
     use_pallas: bool = True,
     interpret: bool | None = None,
     cfg=None,
+    mask: jax.Array | None = None,
 ):
     """Asymmetric distance computation over the code matrix.
 
@@ -678,7 +725,7 @@ def _topk_pq(
         lut = _prepare_pq_lut(queries, store, metric)
     return _topk_pq_from_lut(lut, store, k, metric, chunk,
                              use_pallas=use_pallas, interpret=interpret,
-                             cfg=cfg)
+                             cfg=cfg, mask=mask)
 
 
 @partial(jax.jit, static_argnames=("k", "metric", "chunk", "use_pallas",
@@ -692,6 +739,7 @@ def _topk_pq_from_lut(
     use_pallas: bool = True,
     interpret: bool | None = None,
     cfg=None,
+    mask: jax.Array | None = None,
 ):
     n = store.n
     k_eff = min(k, n)
@@ -702,7 +750,7 @@ def _topk_pq_from_lut(
         return K.fused_adc_topk(lut, store.codes, k_eff,
                                 packed=store.packed,
                                 bq=(cfg.bq if cfg is not None else None),
-                                bn=tile, interpret=interpret)
+                                bn=tile, interpret=interpret, mask=mask)
 
     ilut = lut.astype(jnp.int32) if store.lpq_tables else lut
 
@@ -714,4 +762,5 @@ def _topk_pq_from_lut(
             jnp.take_along_axis(lt, idx, axis=2), axis=1
         ).astype(jnp.float32)
 
-    return _stream_topk(ilut, store.codes, k_eff, chunk, n, tile_scores)
+    return _stream_topk(ilut, store.codes, k_eff, chunk, n, tile_scores,
+                        mask=mask)

@@ -1,0 +1,5 @@
+"""Filtered search: predicate bitmaps in the engine's id-masking path."""
+
+from repro.filter.filter import Filter, overfetch
+
+__all__ = ["Filter", "overfetch"]

@@ -97,15 +97,16 @@ def fused_adc_pallas(
     bq: int = BQ,
     bn: int = BN,
     interpret: bool = False,
+    mask: jax.Array | None = None,
 ):
     """[Q, M*K] int8 LUT x [N, M] uint8 codes -> ([Q, k] f32, [Q, k] i32).
 
     Streaming fused ADC + top-k; rows with id >= ``n_valid`` (padding)
-    are masked in-kernel.
+    are masked in-kernel, as is an optional [N] predicate ``mask``.
     """
     return _fused_call(make_adc_tile(n_codewords), [lut2d], codes,
                        k=k, n_valid=n_valid, bq=bq, bn=bn,
-                       interpret=interpret)
+                       interpret=interpret, mask=mask)
 
 
 @functools.partial(
@@ -123,10 +124,11 @@ def fused_adc4_pallas(
     bq: int = BQ,
     bn: int = BN,
     interpret: bool = False,
+    mask: jax.Array | None = None,
 ):
     """Packed-nibble variant: [Q, (M/2)*K] int8 LUT planes x [N, M/2]
     uint8 packed codes -> top-k, unpacking two-codewords-per-byte
     in-kernel."""
     return _fused_call(make_adc4_tile(n_codewords), [lut_even, lut_odd],
                        packed, k=k, n_valid=n_valid, bq=bq, bn=bn,
-                       interpret=interpret)
+                       interpret=interpret, mask=mask)

@@ -107,9 +107,12 @@ def _merge_tile(best_s, best_i, s, ids, k: int):
     return out_s, out_i
 
 
-def _make_kernel(score_tile, k: int, bn: int, n_valid: int):
+def _make_kernel(score_tile, k: int, bn: int, n_valid: int,
+                 with_mask: bool = False):
     def kernel(*refs):
         *in_refs, os_ref, oi_ref = refs
+        if with_mask:
+            *in_refs, m_ref = in_refs
         j = pl.program_id(1)                               # corpus-tile index
 
         @pl.when(j == 0)
@@ -120,6 +123,11 @@ def _make_kernel(score_tile, k: int, bn: int, n_valid: int):
         s = score_tile(*[r[...] for r in in_refs]).astype(jnp.float32)
         gid = j * bn + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         ok = gid < n_valid
+        if with_mask:
+            # predicate bitmap rides the corpus grid axis as an [bn, 1]
+            # int8 column — the filter ANDs into the same pad fence, so
+            # a filtered row dies exactly like a pad row (DESIGN.md §16)
+            ok = ok & (m_ref[...][:, 0] != 0)[None, :]
         s = jnp.where(ok, s, NEG)
         ids = jnp.where(ok, gid, -1)
         bs, bi = _merge_tile(os_ref[...], oi_ref[...], s, ids, k)
@@ -129,7 +137,8 @@ def _make_kernel(score_tile, k: int, bn: int, n_valid: int):
     return kernel
 
 
-def _fused_call(score_tile, inputs, corpus, *, k, n_valid, bq, bn, interpret):
+def _fused_call(score_tile, inputs, corpus, *, k, n_valid, bq, bn, interpret,
+                mask=None):
     Q = inputs[0].shape[0]
     N = corpus.shape[0]
     assert Q % bq == 0 and N % bn == 0, (Q, N, bq, bn)
@@ -137,18 +146,24 @@ def _fused_call(score_tile, inputs, corpus, *, k, n_valid, bq, bn, interpret):
         pl.BlockSpec((bq, a.shape[1]), lambda i, j: (i, 0)) for a in inputs
     ]
     x_spec = pl.BlockSpec((bn, corpus.shape[1]), lambda i, j: (j, 0))
+    operands = list(inputs) + [corpus]
+    in_specs = q_specs + [x_spec]
+    if mask is not None:
+        assert mask.shape[0] == N, (mask.shape, N)
+        operands.append(mask.reshape(N, 1).astype(jnp.int8))
+        in_specs.append(pl.BlockSpec((bn, 1), lambda i, j: (j, 0)))
     out_spec = pl.BlockSpec((bq, k), lambda i, j: (i, 0))
     return pl.pallas_call(
-        _make_kernel(score_tile, k, bn, n_valid),
+        _make_kernel(score_tile, k, bn, n_valid, with_mask=mask is not None),
         grid=(Q // bq, N // bn),
-        in_specs=q_specs + [x_spec],
+        in_specs=in_specs,
         out_specs=[out_spec, out_spec],
         out_shape=[
             jax.ShapeDtypeStruct((Q, k), jnp.float32),
             jax.ShapeDtypeStruct((Q, k), jnp.int32),
         ],
         interpret=interpret,
-    )(*inputs, corpus)
+    )(*operands)
 
 
 @functools.partial(
@@ -164,13 +179,16 @@ def fused_topk_pallas(
     bq: int = BQ,
     bn: int = BN,
     interpret: bool = False,
+    mask: jax.Array | None = None,
 ):
     """[Q, d] x [N, d] -> ([Q, k] f32 scores, [Q, k] i32 ids), streaming.
 
-    Rows with global id >= n_valid (padding) are masked in-kernel.
+    Rows with global id >= n_valid (padding) are masked in-kernel; an
+    optional [N] ``mask`` (nonzero = allowed) ANDs into the same fence.
     """
     return _fused_call(_TILE_FNS[(metric, False)], [q], x,
-                       k=k, n_valid=n_valid, bq=bq, bn=bn, interpret=interpret)
+                       k=k, n_valid=n_valid, bq=bq, bn=bn, interpret=interpret,
+                       mask=mask)
 
 
 @functools.partial(
@@ -187,7 +205,9 @@ def fused_topk4_pallas(
     bq: int = BQ,
     bn: int = BN,
     interpret: bool = False,
+    mask: jax.Array | None = None,
 ):
     """Packed-int4 variant: [Q, d/2] (x2) vs [N, d/2] uint8 -> top-k."""
     return _fused_call(_TILE_FNS[(metric, True)], [q_even, q_odd], packed,
-                       k=k, n_valid=n_valid, bq=bq, bn=bn, interpret=interpret)
+                       k=k, n_valid=n_valid, bq=bq, bn=bn, interpret=interpret,
+                       mask=mask)

@@ -226,6 +226,7 @@ def fused_topk(
     bn: int | None = None,
     use_pallas: bool = True,
     interpret: bool | None = None,
+    mask: jax.Array | None = None,
 ):
     """Streaming fused score + top-k: ([Q, k] f32 scores, [Q, k] i32 ids).
 
@@ -235,6 +236,8 @@ def fused_topk(
     int8.  ``bq`` overrides the query tile and ``bn`` caps the corpus
     tile (the VMEM working-set knobs — tuned dispatch threads the
     TuneTable entry through both; bare calls keep the family constants).
+    An optional [N] ``mask`` (nonzero = allowed) ANDs into the kernels'
+    pad fence — filtered rows die like pad rows, at no extra bytes read.
     The [Q, N] score matrix never reaches HBM on the Pallas path;
     ``use_pallas=False`` is the XLA reference (materializes scores, used
     for parity tests and as the shard_map cell fallback).
@@ -252,12 +255,18 @@ def fused_topk(
             from repro.core import distances as D
 
             s = D.scores(q, x, metric)
+        if mask is not None:
+            # the NEG sentinel topk_ref already turns into id -1
+            s = jnp.where(mask.astype(bool)[None, :], s.astype(jnp.float32),
+                          jnp.finfo(jnp.float32).min)
         return _ref.topk_ref(s, k, N)
     interp = (not _on_tpu()) if interpret is None else interpret
     bq = _pick_tile(Q, bq or _fused.BQ)
     # an explicit bn is honored (tuned tiles may exceed the constant —
     # the tuning space owns the VMEM bound); bare calls keep the constant
     bn = _pick_tile(N, bn or _fused.BN)
+    mp = (None if mask is None else
+          jnp.pad(mask.astype(jnp.int8), (0, _round_up(N, bn) - N)))
     if packed:
         qe, qo = _split_nibble_queries(q)
         qe = _pad_rows(qe, _round_up(Q, bq))
@@ -265,14 +274,14 @@ def fused_topk(
         xp = _pad_rows(x, _round_up(N, bn))
         s, i = _fused.fused_topk4_pallas(
             qe, qo, xp, k=k, metric=metric, n_valid=N,
-            bq=bq, bn=bn, interpret=interp,
+            bq=bq, bn=bn, interpret=interp, mask=mp,
         )
     else:
         qp = _pad_rows(q, _round_up(Q, bq))
         xp = _pad_rows(x, _round_up(N, bn))
         s, i = _fused.fused_topk_pallas(
             qp, xp, k=k, metric=metric, n_valid=N,
-            bq=bq, bn=bn, interpret=interp,
+            bq=bq, bn=bn, interpret=interp, mask=mp,
         )
     return s[:Q], i[:Q]
 
@@ -291,6 +300,7 @@ def fused_adc_topk(
     bn: int | None = None,
     use_pallas: bool = True,
     interpret: bool | None = None,
+    mask: jax.Array | None = None,
 ):
     """Streaming fused ADC + top-k: ([Q, k] f32 scores, [Q, k] i32 ids).
 
@@ -310,11 +320,16 @@ def fused_adc_topk(
         lut = jnp.pad(lut, ((0, 0), (0, 2 * codes.shape[1] - m), (0, 0)))
     if not use_pallas:
         s = _ref.adc4_ref(lut, codes) if packed else _ref.adc_ref(lut, codes)
+        if mask is not None:
+            s = jnp.where(mask.astype(bool)[None, :], s.astype(jnp.float32),
+                          jnp.finfo(jnp.float32).min)
         return _ref.topk_ref(s, k, N)
     interp = (not _on_tpu()) if interpret is None else interpret
     bq = _pick_tile(Q, bq or _adc.BQ)
     bn = _pick_tile(N, bn or _adc.BN)
     cp = _pad_rows(codes, _round_up(N, bn))
+    mp = (None if mask is None else
+          jnp.pad(mask.astype(jnp.int8), (0, _round_up(N, bn) - N)))
     if packed:
         le = lut[:, 0::2, :].reshape(Q, -1)
         lo = lut[:, 1::2, :].reshape(Q, -1)
@@ -322,13 +337,13 @@ def fused_adc_topk(
         lo = _pad_rows(lo, _round_up(Q, bq))
         s, i = _adc.fused_adc4_pallas(
             le, lo, cp, k=k, n_codewords=n_codewords, n_valid=N,
-            bq=bq, bn=bn, interpret=interp,
+            bq=bq, bn=bn, interpret=interp, mask=mp,
         )
     else:
         l2d = _pad_rows(lut.reshape(Q, -1), _round_up(Q, bq))
         s, i = _adc.fused_adc_pallas(
             l2d, cp, k=k, n_codewords=n_codewords, n_valid=N,
-            bq=bq, bn=bn, interpret=interp,
+            bq=bq, bn=bn, interpret=interp, mask=mp,
         )
     return s[:Q], i[:Q]
 

@@ -45,12 +45,18 @@ class SearchParams:
                (validated at plan time).  ``None`` = geometric defaults.
                A tuple (not a list) so SearchParams stays hashable — it
                rides inside compiled-plan and result-cache keys.
+    filter     a ``repro.filter.Filter`` predicate bitmap over *external*
+               row ids (DESIGN.md §16); every kind pushes it into the
+               engine's id-masking path so only allowed rows can be
+               returned.  Filters hash by bitmap digest, so SearchParams
+               stays a valid compiled-plan / result-cache key member.
     """
 
     chunk: int = 16384
     nprobe: int = 8
     ef_search: int = 100
     budgets: Optional[tuple[int, ...]] = None
+    filter: Optional[Any] = None
 
     def merged(self, **overrides) -> "SearchParams":
         live = {k: v for k, v in overrides.items() if v is not None}
@@ -77,6 +83,14 @@ class SearchParams:
                         f"SearchParams.budgets entries must be positive "
                         f"ints, got {v!r} in {self.budgets!r}"
                     )
+        if self.filter is not None:
+            from repro.filter import Filter
+
+            if not isinstance(self.filter, Filter):
+                raise ValueError(
+                    f"SearchParams.filter must be a repro.filter.Filter "
+                    f"(or None), got {type(self.filter).__name__}"
+                )
         return self
 
 

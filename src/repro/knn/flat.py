@@ -18,6 +18,7 @@ import dataclasses
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro import engine
 from repro.core import quant as Qz
@@ -131,18 +132,36 @@ class FlatIndex:
         sharded Searcher compiles.
         """
         sp = params or B.SearchParams()
+        # filter bitmap (DESIGN.md §16): external ids == row ids for a
+        # direct build, so the bitmap aligns with the store as-is and
+        # rides the engine's id-masking fence — no rescan, no extra bytes
+        fmask = (None if sp.filter is None
+                 else jnp.asarray(sp.filter.aligned(self.n)))
+        fstats = ({} if sp.filter is None
+                  else {"filter_selectivity": round(sp.filter.selectivity, 6)})
         if mesh is not None:
             from repro.knn.searcher import sharded_scan_plan
 
-            return sharded_scan_plan(self.store, self.metric, k, mesh,
-                                     chunk=sp.chunk, placement=placement)
+            inner = sharded_scan_plan(self.store, self.metric, k, mesh,
+                                      chunk=sp.chunk, placement=placement,
+                                      mask=fmask)
+            if not fstats:
+                return inner
+
+            def run_sharded(queries: jax.Array) -> B.SearchResult:
+                res = inner(queries)
+                return B.SearchResult(res.scores, res.ids,
+                                      {**res.stats, **fstats})
+
+            return run_sharded
 
         def run(queries: jax.Array) -> B.SearchResult:
             q = self.prepare_queries(queries)
             s, i, stats = engine.topk(
-                q, self.store, k, self.metric, chunk=sp.chunk, prepared=True
+                q, self.store, k, self.metric, chunk=sp.chunk, prepared=True,
+                mask=fmask,
             )
-            return B.SearchResult(s, i, {"kind": "flat", **stats})
+            return B.SearchResult(s, i, {"kind": "flat", **stats, **fstats})
 
         return run
 

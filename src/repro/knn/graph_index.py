@@ -228,6 +228,17 @@ class GraphIndex:
             )
         sp = params or B.SearchParams()
         ef = max(sp.ef_search, k)
+        # filter (DESIGN.md §16): walk unfiltered, widen ef by estimated
+        # selectivity, apply the bitmap at the cut/re-score from ef to k
+        fmask, fstats = None, {}
+        if sp.filter is not None:
+            from repro.filter import overfetch
+
+            fmask = jnp.asarray(sp.filter.aligned(self.n))
+            ef = max(ef, overfetch(k, sp.filter.selectivity, self.n))
+            fstats = {"filter_selectivity":
+                      round(sp.filter.selectivity, 6)}
+        NEG = float(jnp.finfo(jnp.float32).min)
         score_set = engine.make_score_set(self.store, self.internal_metric)
         n_entry = min(8, self.seeds.shape[0])
 
@@ -257,8 +268,15 @@ class GraphIndex:
                 scores, ids = engine.topk_among_regional(
                     qu, self.region_store, self.regions.scale,
                     self.regions.zero, self.regions.assign, ids, k,
-                    self.metric,
+                    self.metric, mask=fmask,
                 )
+                return scores, ids
+            if fmask is not None:
+                ok = (ids >= 0) & fmask[jnp.clip(ids, 0, self.n - 1)]
+                scores = jnp.where(ok, scores.astype(jnp.float32), NEG)
+                ids = jnp.where(ok, ids, -1)
+                scores, pos = jax.lax.top_k(scores, k)   # stable: keeps
+                ids = jnp.take_along_axis(ids, pos, -1)  # the walk's order
                 return scores, ids
             return scores[:, :k], ids[:, :k]
 
@@ -287,7 +305,7 @@ class GraphIndex:
                 )
             if mesh is not None:
                 stats["placement"] = "replicated"
-            return B.SearchResult(scores, ids, stats)
+            return B.SearchResult(scores, ids, {**stats, **fstats})
 
         return run
 

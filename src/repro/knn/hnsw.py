@@ -267,7 +267,20 @@ class HNSWIndex:
             )
         sp = params or B.SearchParams()
         ef = max(sp.ef_search, k)
+        # filter (DESIGN.md §16): the walk itself stays unfiltered (the
+        # graph's connectivity must not see holes), the beam's ef is
+        # widened by the filter's estimated selectivity, and the filter
+        # is applied at the cut/re-score from ef down to k
+        fmask, fstats = None, {}
+        if sp.filter is not None:
+            from repro.filter import overfetch
+
+            fmask = jnp.asarray(sp.filter.aligned(self.n))
+            ef = max(ef, overfetch(k, sp.filter.selectivity, self.n))
+            fstats = {"filter_selectivity":
+                      round(sp.filter.selectivity, 6)}
         score_set = self._score_set()
+        NEG = float(jnp.finfo(jnp.float32).min)
 
         def core(queries: jax.Array):
             qf = jnp.asarray(queries, jnp.float32)
@@ -287,12 +300,20 @@ class HNSWIndex:
             )
             if self.regions is not None:
                 # re-score the beam's survivors under each row's own
-                # neighborhood constants before the cut to k
+                # neighborhood constants before the cut to k (the filter
+                # rides the re-score's candidate mask)
                 scores, ids = engine.topk_among_regional(
                     qf, self.region_store, self.regions.scale,
                     self.regions.zero, self.regions.assign, ids, k,
-                    self.metric,
+                    self.metric, mask=fmask,
                 )
+                return scores, ids
+            if fmask is not None:
+                ok = (ids >= 0) & fmask[jnp.clip(ids, 0, self.n - 1)]
+                scores = jnp.where(ok, scores.astype(jnp.float32), NEG)
+                ids = jnp.where(ok, ids, -1)
+                scores, pos = jax.lax.top_k(scores, k)   # stable: keeps
+                ids = jnp.take_along_axis(ids, pos, -1)  # the beam's order
                 return scores, ids
             return scores[:, :k], ids[:, :k]
 
@@ -325,7 +346,7 @@ class HNSWIndex:
                 )
             if mesh is not None:
                 stats["placement"] = "replicated"
-            return B.SearchResult(scores, ids, stats)
+            return B.SearchResult(scores, ids, {**stats, **fstats})
 
         return run
 

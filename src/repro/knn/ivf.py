@@ -213,6 +213,11 @@ class IVFIndex:
             return self._sharded_plan(k, params, mesh, placement)
         sp = params or B.SearchParams()
         nprobe = min(sp.nprobe, self.nlist)
+        # filter (DESIGN.md §16): candidate-level mask over store rows,
+        # plus a list-level skip — lists whose bitmap is empty are masked
+        # out of the coarse probe itself, so their probe slots go to
+        # lists that can still contribute
+        fmask, lmask, fstats = self._filter_masks(sp)
 
         def run(queries: jax.Array) -> B.SearchResult:
             qf = jnp.asarray(queries, jnp.float32)
@@ -221,11 +226,21 @@ class IVFIndex:
             # 1) coarse: engine top-k over the (tiny, always-fp32)
             #    centroid store
             _cs, probe, _ = engine.topk(
-                qf, engine.CodeStore.dense(self.centroids), nprobe, self.metric
+                qf, engine.CodeStore.dense(self.centroids), nprobe,
+                self.metric, mask=lmask,
             )
 
-            # 2) gather candidate ids -> [Q, nprobe * max_list]
-            cand = self.lists[probe].reshape(qq.shape[0], -1)
+            # 2) gather candidate ids -> [Q, nprobe * max_list]; a fully
+            #    masked-out probe slot (id -1 under the list skip) yields
+            #    -1 candidates, dead at the fine-score fence
+            if lmask is None:
+                cand = self.lists[probe].reshape(qq.shape[0], -1)
+            else:
+                probe_ok = probe >= 0
+                cand = jnp.where(
+                    probe_ok[..., None],
+                    self.lists[jnp.clip(probe, 0, self.nlist - 1)], -1,
+                ).reshape(qq.shape[0], -1)
 
             # 3) fine scoring + top-k through the engine (gather, unpack-
             #    as-needed, mask empties, select).  Regional builds must
@@ -235,13 +250,13 @@ class IVFIndex:
             if self.regions is not None:
                 scores, ids = engine.topk_among_regional(
                     qf, self.store, self.regions.scale, self.regions.zero,
-                    self.regions.assign, cand, k, self.metric,
+                    self.regions.assign, cand, k, self.metric, mask=fmask,
                 )
                 stats = {"kind": "ivf", "nprobe": nprobe, "chunks": nprobe,
                          **engine.regional_stats(self.store, cand)}
             else:
                 scores, ids = engine.topk_among(
-                    qq, self.store, cand, k, self.metric
+                    qq, self.store, cand, k, self.metric, mask=fmask
                 )
                 stats = {"kind": "ivf", "nprobe": nprobe,
                          **engine.search_stats(
@@ -249,9 +264,28 @@ class IVFIndex:
                              candidates=nprobe * self.max_list,
                              chunks=nprobe,
                              rows_read=qq.shape[0] * nprobe * self.max_list)}
-            return B.SearchResult(scores, ids, stats)
+            return B.SearchResult(scores, ids, {**stats, **fstats})
 
         return run
+
+    def _filter_masks(self, sp):
+        """(row mask [n] bool | None, probe mask [nlist] bool | None,
+        filter stats) for ``sp.filter`` (DESIGN.md §16).  The probe mask
+        marks lists with at least one allowed member; an all-dead list
+        never earns a probe slot."""
+        if sp.filter is None:
+            return None, None, {}
+        import numpy as np
+
+        m = np.asarray(sp.filter.aligned(self.n))
+        lists_np = np.asarray(self.lists)
+        memb = lists_np >= 0
+        allowed = np.zeros(lists_np.shape, bool)
+        allowed[memb] = m[lists_np[memb]]
+        lmask = allowed.any(axis=1)
+        fstats = {"filter_selectivity": round(sp.filter.selectivity, 6),
+                  "filter_lists_skipped": int((~lmask).sum())}
+        return jnp.asarray(m), jnp.asarray(lmask), fstats
 
     def _sharded_plan(self, k, params, mesh, placement):
         """List-placed fine scoring under ``shard_map`` (DESIGN.md §15).
@@ -279,6 +313,11 @@ class IVFIndex:
 
         sp = params or B.SearchParams()
         nprobe = min(sp.nprobe, self.nlist)
+        # filter: same row/list masks as the unsharded plan — the row
+        # mask ANDs into each shard's slot-ownership test (a filtered
+        # slot is as dead as an unowned one), the list mask skips empty
+        # lists at the replicated coarse probe (DESIGN.md §16)
+        fmask, lmask, fstats = self._filter_masks(sp)
         axes, n_shards = corpus_shards(mesh)
         if placement is None:
             placement = Placement.lists(self.list_sizes(), n_shards)
@@ -327,6 +366,8 @@ class IVFIndex:
             shard = idx[0]
             safe = jnp.clip(cand, 0, n - 1)
             ok = (cand >= 0) & (owner[safe] == shard)
+            if fmask is not None:
+                ok = ok & fmask[safe]
             rows = codes_s[jnp.where(ok, local_of[safe], 0)]   # [Q, W, w]
             if store.packed:
                 rows = PK.unpack_int4(rows)
@@ -359,9 +400,17 @@ class IVFIndex:
             qf = jnp.asarray(queries, jnp.float32)
             qq = self.prepare_queries(queries)
             _cs, probe, _ = engine.topk(
-                qf, engine.CodeStore.dense(self.centroids), nprobe, self.metric
+                qf, engine.CodeStore.dense(self.centroids), nprobe,
+                self.metric, mask=lmask,
             )
-            cand = self.lists[probe].reshape(qq.shape[0], -1)   # [Q, W]
+            if lmask is None:
+                cand = self.lists[probe].reshape(qq.shape[0], -1)   # [Q, W]
+            else:
+                probe_ok = probe >= 0
+                cand = jnp.where(
+                    probe_ok[..., None],
+                    self.lists[jnp.clip(probe, 0, self.nlist - 1)], -1,
+                ).reshape(qq.shape[0], -1)
             s, pos = inner(qf if regional else qq, cand, codes, shard_idx)
             ids = jnp.where(
                 pos >= 0,
@@ -385,7 +434,8 @@ class IVFIndex:
                              chunks=nprobe,
                              rows_read=qq.shape[0] * W)}
             stats.update(placement="lists",
-                         merge_wire_bytes=int(qq.shape[0]) * merge_wire)
+                         merge_wire_bytes=int(qq.shape[0]) * merge_wire,
+                         **fstats)
             return B.SearchResult(s, ids, stats)
 
         return run

@@ -174,14 +174,19 @@ class PQIndex:
         if mesh is not None:
             return self._sharded_plan(k, params, mesh, placement)
         sp = params or B.SearchParams()
+        fmask = (None if sp.filter is None
+                 else jnp.asarray(sp.filter.aligned(self.n)))
+        fstats = ({} if sp.filter is None
+                  else {"filter_selectivity": round(sp.filter.selectivity, 6)})
 
         def run(queries: jax.Array) -> B.SearchResult:
             s, i, stats = engine.topk(
-                queries, self.store, k, self.metric, chunk=sp.chunk
+                queries, self.store, k, self.metric, chunk=sp.chunk,
+                mask=fmask,
             )
             return B.SearchResult(
                 s, i, {"kind": "pq", "m": self.m,
-                       "lpq_tables": self.lpq_tables, **stats},
+                       "lpq_tables": self.lpq_tables, **stats, **fstats},
             )
 
         return run
@@ -227,20 +232,36 @@ class PQIndex:
                 jnp.take_along_axis(lt, idx, axis=2), axis=1
             ).astype(jnp.float32)
 
-        def local(lt, shard, idx):
+        # filter bitmap sliced per shard alongside the code rows: a
+        # filtered row's `valid` goes False, sentinel_gids hands it a
+        # sentinel >= n, and the existing ok fence + merge kill it —
+        # exactly the pad-row dataflow (DESIGN.md §16)
+        fmask = None
+        if sp.filter is not None:
+            fm = jnp.asarray(sp.filter.aligned(n)).astype(jnp.int8)
+            fmask = jnp.pad(fm, (0, pad)) if pad else fm
+
+        def local(lt, shard, mshard, idx):
             gid0 = idx[0] * rows_per
             Q = lt.shape[0]
             tile_pad = padded_rows - rows_per
             if tile_pad:
                 shard = jnp.pad(shard, ((0, tile_pad), (0, 0)))
+                if mshard is not None:
+                    mshard = jnp.pad(mshard, (0, tile_pad))
             tiles = shard.reshape(n_tiles, tile_rows, shard.shape[-1])
+            mtiles = (jnp.zeros((n_tiles, 0), jnp.int8) if mshard is None
+                      else mshard.reshape(n_tiles, tile_rows))
 
             def step(carry, inp):
-                tile, t = inp
+                tile, mrow, t = inp
                 s = tile_scores(lt, tile)
                 lrow = t * tile_rows + jnp.arange(tile_rows, dtype=jnp.int32)
+                valid = (lrow < rows_per) & (gid0 + lrow < n)
+                if mshard is not None:
+                    valid = valid & (mrow != 0)
                 gid = sentinel_gids(
-                    gid0 + lrow, (lrow < rows_per) & (gid0 + lrow < n),
+                    gid0 + lrow, valid,
                     shard=idx[0], local_rows=lrow, n_total=n,
                     padded_rows=padded_rows,
                 )
@@ -253,24 +274,42 @@ class PQIndex:
             init = (jnp.full((Q, k_local), NEG, jnp.float32),
                     jnp.full((Q, k_local), -1, jnp.int32))
             (ls, li), _ = jax.lax.scan(
-                step, init, (tiles, jnp.arange(n_tiles, dtype=jnp.int32))
+                step, init,
+                (tiles, mtiles, jnp.arange(n_tiles, dtype=jnp.int32)),
             )
             return distributed_topk(ls, li, k_eff, axes, 0)
 
-        inner = shard_map(
-            local,
-            mesh=mesh,
-            in_specs=(P(), P(axes, None), P(axes)),
-            out_specs=(P(), P()),
-            check_vma=False,
-        )
+        def local_plain(lt, shard, idx):
+            return local(lt, shard, None, idx)
+
+        if fmask is None:
+            inner_plain = shard_map(
+                local_plain,
+                mesh=mesh,
+                in_specs=(P(), P(axes, None), P(axes)),
+                out_specs=(P(), P()),
+                check_vma=False,
+            )
+        else:
+            inner_masked = shard_map(
+                local,
+                mesh=mesh,
+                in_specs=(P(), P(axes, None), P(axes), P(axes)),
+                out_specs=(P(), P()),
+                check_vma=False,
+            )
 
         merge_wire = n_shards * k_eff * 8
+        fstats = ({} if sp.filter is None
+                  else {"filter_selectivity": round(sp.filter.selectivity, 6)})
 
         def run(queries: jax.Array) -> B.SearchResult:
             lut = _prepare_pq_lut(queries, store, self.metric)
             ilut = lut.astype(jnp.int32) if store.lpq_tables else lut
-            s, i = inner(ilut, data, shard_idx)
+            if fmask is None:
+                s, i = inner_plain(ilut, data, shard_idx)
+            else:
+                s, i = inner_masked(ilut, data, fmask, shard_idx)
             i = jnp.where(i >= n, -1, i)     # sentinels never leave the plan
             if k_eff < k:
                 s = jnp.pad(s, ((0, 0), (0, k - k_eff)), constant_values=NEG)
@@ -280,7 +319,7 @@ class PQIndex:
                                         rows_read=n)
             return B.SearchResult(s, i, {
                 "kind": "pq", "m": self.m, "lpq_tables": self.lpq_tables,
-                **stats, "placement": "rows",
+                **stats, **fstats, "placement": "rows",
                 "merge_wire_bytes": int(queries.shape[0]) * merge_wire,
             })
 

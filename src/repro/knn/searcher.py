@@ -161,7 +161,7 @@ def _resolve_rerank(index, k: int, n: int, rerank) -> Optional[Rerank]:
 
 def sharded_scan_plan(
     store: engine.CodeStore, metric: str, k: int, mesh, chunk: int = 16384,
-    placement=None,
+    placement=None, mask=None,
 ) -> PlanFn:
     """Row-shard a ``CodeStore`` scan over a mesh (DESIGN.md §4/§9/§15).
 
@@ -181,6 +181,13 @@ def sharded_scan_plan(
     The whole thing is a pure function of the query batch, so the
     Searcher compiles scan -> local top-k -> cross-shard merge
     (-> rerank) as one unit.
+
+    ``mask`` (optional [n] bool, DESIGN.md §16) is a filter bitmap over
+    the store's row ids: it shards alongside the data rows and ANDs into
+    the *validity* handed to ``sentinel_gids`` — a filtered row gets a
+    sentinel gid >= n and dies at the existing ``gid < n`` fence, so the
+    filter rides the pad/tombstone masking path with zero extra scans
+    and an unchanged merge.
     """
     from repro.core import distances as D
     from repro.core import pack as PK
@@ -214,17 +221,27 @@ def sharded_scan_plan(
     padded_rows = n_tiles * tile_rows          # per-shard sentinel band width
     data = jnp.pad(store.data, ((0, pad), (0, 0))) if pad else store.data
     shard_idx = jnp.arange(n_shards, dtype=jnp.int32)
+    fmask = None
+    if mask is not None:
+        fm = jnp.asarray(mask).astype(jnp.int8)
+        fmask = jnp.pad(fm, (0, pad)) if pad else fm
 
-    def local(q, shard, idx):
+    def local(q, shard, mshard, idx):
         gid0 = idx[0] * rows_per
         Q = q.shape[0]
         tile_pad = padded_rows - rows_per
         if tile_pad:
             shard = jnp.pad(shard, ((0, tile_pad), (0, 0)))
         tiles = shard.reshape(n_tiles, tile_rows, shard.shape[-1])
+        if mshard is not None:
+            if tile_pad:
+                mshard = jnp.pad(mshard, (0, tile_pad))
+            mtiles = mshard.reshape(n_tiles, tile_rows)
+        else:
+            mtiles = jnp.zeros((n_tiles, 0), jnp.int8)
 
         def step(carry, inp):
-            tile, t = inp
+            tile, mrow, t = inp
             rows = PK.unpack_int4(tile) if store.packed else tile
             s = D.scores(q, rows, metric, quantized=store.quantized)
             s = s.astype(jnp.float32)
@@ -232,9 +249,14 @@ def sharded_scan_plan(
             # pad rows — the shard's own tile pad (lrow >= rows_per,
             # whose arithmetic gid aliases the NEXT shard) and the
             # global tail pad (gid >= n) — get unique >= n sentinels:
-            # validity now travels in the gid itself
+            # validity now travels in the gid itself.  A filtered-out
+            # row is treated exactly like a pad row: its sentinel gid
+            # dies at the same fence (DESIGN.md §16).
+            valid = (lrow < rows_per) & (gid0 + lrow < n)
+            if mshard is not None:
+                valid = valid & (mrow != 0)
             gid = sentinel_gids(
-                gid0 + lrow, (lrow < rows_per) & (gid0 + lrow < n),
+                gid0 + lrow, valid,
                 shard=idx[0], local_rows=lrow, n_total=n,
                 padded_rows=padded_rows,
             )
@@ -246,7 +268,7 @@ def sharded_scan_plan(
         init = (jnp.full((Q, k_local), NEG, jnp.float32),
                 jnp.full((Q, k_local), -1, jnp.int32))
         (ls, li), _ = jax.lax.scan(
-            step, init, (tiles, jnp.arange(n_tiles, dtype=jnp.int32))
+            step, init, (tiles, mtiles, jnp.arange(n_tiles, dtype=jnp.int32))
         )
         return distributed_topk(ls, li, k_merge, axes, 0)
 
@@ -254,7 +276,10 @@ def sharded_scan_plan(
 
     def run(queries: jax.Array) -> B.SearchResult:
         q = store.encode_queries(queries)
-        s, i = inner(q, data, shard_idx)
+        if fmask is None:
+            s, i = inner(q, data, shard_idx)
+        else:
+            s, i = inner(q, data, fmask, shard_idx)
         # belt under the sentinel braces: nothing >= n may leave the plan
         i = jnp.where(i >= n, -1, i)
         if k_merge < k:                  # uniform [Q, k] contract: -1 pads
@@ -267,13 +292,26 @@ def sharded_scan_plan(
             "merge_wire_bytes": int(queries.shape[0]) * merge_wire,
         })
 
-    inner = shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(P(), P(axes, None), P(axes)),
-        out_specs=(P(), P()),
-        check_vma=False,
-    )
+    if fmask is None:
+        # keep the unfiltered trace byte-identical to the pre-filter plan
+        def local_plain(q, shard, idx):
+            return local(q, shard, None, idx)
+
+        inner = shard_map(
+            local_plain,
+            mesh=mesh,
+            in_specs=(P(), P(axes, None), P(axes)),
+            out_specs=(P(), P()),
+            check_vma=False,
+        )
+    else:
+        inner = shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(), P(axes, None), P(axes), P(axes)),
+            out_specs=(P(), P()),
+            check_vma=False,
+        )
 
     return run
 
@@ -307,8 +345,11 @@ def multi_source_plan(
       1. runs every source, rebases ids, and **tombstone-masks** deleted
          rows through the manifest's ``live`` bitmap (masked at candidate
          level: a dead row can occupy a candidate slot but never a
-         result slot — sources over-fetch by their dead count so k live
-         rows always survive on exact sources);
+         result slot — sources over-fetch by their masked count so k
+         surviving rows always reach the merge on exact sources).  A
+         search-time filter (DESIGN.md §16) composes here too: the
+         caller hands ``live ∧ filter`` as one internal-space bitmap, so
+         a filtered row dies exactly like a tombstoned one;
       2. merges: with ``rescore``, all candidates are re-scored in one
          common space via ``engine.topk_among`` against ``merge_store``
          (per-segment quantized scores are NOT comparable across
@@ -447,6 +488,18 @@ class Searcher:
         self.batch_sizes = batch_sizes
         self.mesh = shards
         self.rerank = _resolve_rerank(index, k, n, rerank)
+        if self.rerank is not None and sp.filter is not None:
+            # filter over-fetch (DESIGN.md §16): widen the candidate
+            # depth by the filter's estimated selectivity so ~k allowed
+            # rows survive to the settling stage; survivors < k still
+            # pad with (-1, NEG) — the exact pad-sentinel contract
+            from repro.filter import overfetch
+
+            self.rerank = dataclasses.replace(
+                self.rerank,
+                depth=max(self.rerank.depth,
+                          overfetch(k, sp.filter.selectivity, n)),
+            )
         self._qdim = _query_dim(index)
         self._counts: collections.Counter = collections.Counter()
 

@@ -104,6 +104,17 @@ def _parse_args(argv):
     ap.add_argument("--rerank-depth", type=int, default=0,
                     help="override the rerank candidate depth (0 = the "
                          "index's default when built with +rN)")
+    ap.add_argument("--filter-col", default=None,
+                    help="serve every query under a metadata predicate "
+                         "(DESIGN.md §16): synthesize a per-row integer "
+                         "column with this name and keep only rows whose "
+                         "value matches --filter-value")
+    ap.add_argument("--filter-value", default="0",
+                    help="allowed value(s) for --filter-col, "
+                         "comma-separated (e.g. '3' or '1,4,6')")
+    ap.add_argument("--filter-cats", type=int, default=8,
+                    help="cardinality of the synthesized --filter-col "
+                         "column (selectivity = |values| / cats)")
     ap.add_argument("--mixed", action="store_true",
                     help="cycle request sizes through several buckets")
     ap.add_argument("--mutate", action="store_true",
@@ -250,10 +261,39 @@ def main(argv: list[str] | None = None) -> None:
         print(f"[serve] saved index -> {args.save_index} "
               f"(tune={tunetable.active_hash() or 'none'})")
 
+    # metadata predicate (DESIGN.md §16): a deterministic synthetic
+    # column stands in for real per-row metadata; the bitmap rides
+    # SearchParams into every plan (external-id space, so stream upserts
+    # beyond the horizon pass until the column is extended)
+    filt = None
+    if args.filter_col:
+        import zlib
+
+        from repro.filter import Filter
+
+        col = np.random.default_rng(
+            zlib.crc32(args.filter_col.encode())
+        ).integers(0, args.filter_cats, args.n)
+        vals = sorted({int(v) for v in args.filter_value.split(",")})
+        filt = Filter.from_column(col, vals)
+        telemetry.counters["filter_allowed_rows"] = int(filt.count)
+        telemetry.counters["filter_selectivity_permille"] = int(
+            round(filt.selectivity * 1000)
+        )
+        telemetry.meta["filter"] = {
+            "col": args.filter_col, "values": vals,
+            "cats": args.filter_cats,
+            "selectivity": round(filt.selectivity, 6),
+        }
+        print(f"[serve] filter: col={args.filter_col} values={vals} "
+              f"selectivity={filt.selectivity:.3f} "
+              f"({filt.count}/{args.n} rows allowed)")
+
     budgets = (tuple(int(b) for b in args.budgets.split(","))
                if args.budgets else None)
     sp = SearchParams(chunk=args.chunk, nprobe=args.nprobe,
-                      ef_search=args.ef_search, budgets=budgets)
+                      ef_search=args.ef_search, budgets=budgets,
+                      filter=filt)
     if args.batch_sizes:
         buckets = tuple(sorted(int(b) for b in args.batch_sizes.split(",")))
     else:
@@ -533,6 +573,12 @@ def main(argv: list[str] | None = None) -> None:
             telemetry.counters["queries_served"] += int(payload.shape[0])
             if degraded:
                 telemetry.counters["requests_degraded"] += 1
+            if filt is not None:
+                telemetry.counters["filtered_requests"] += 1
+                telemetry.counters["filtered_queries"] += int(
+                    payload.shape[0])
+                tr.annotate(
+                    filter_selectivity=res.stats.get("filter_selectivity"))
             tr.annotate(outcome="served", degraded=degraded,
                         cache=res.stats.get("cache", "off"),
                         bucket=res.stats.get("bucket"),
@@ -587,6 +633,9 @@ def main(argv: list[str] | None = None) -> None:
             telemetry.counters["queries_served"] += nq
             if degraded:
                 telemetry.counters["requests_degraded"] += 1
+            if filt is not None:
+                telemetry.counters["filtered_requests"] += 1
+                telemetry.counters["filtered_queries"] += nq
     dt = time.perf_counter() - t0
 
     # per-shard scan-bytes counters (placement accounting: each shard's

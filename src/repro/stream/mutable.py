@@ -534,31 +534,56 @@ class MutableIndex:
         # compaction swap must never interleave between reading the
         # segment list and the concatenated id/live/raw views
         with self._lock:
-            sources = []
-            for seg, base in zip(self.manifest.segments, self.manifest.bases()):
-                # over-fetch by the dead count so k live rows survive the
-                # tombstone mask on exact sources
-                kj = min(seg.n, depth + seg.dead_count)
-                sources.append((seg.index.plan(kj, sp, mesh=mesh), base, kj))
-            mvecs, mids = self.memtable.snapshot()
-            m = int(mvecs.shape[0])
-            if m:
-                mem_index = FlatIndex(
-                    metric=self.metric,
-                    store=engine.CodeStore.dense(jnp.asarray(mvecs)),
-                )
-                sources.append(
-                    (mem_index.plan(min(m, depth), sp, mesh=mesh),
-                     self.manifest.total_rows, min(m, depth))
-                )
-
             # manifest-side concatenated views + the memtable tail (all
             # np.concatenate copies: a frozen snapshot of the bitmaps)
+            mvecs, mids = self.memtable.snapshot()
+            m = int(mvecs.shape[0])
             id_map_np = self.manifest.id_map()
             live_np = self.manifest.live_map()
             if m:
                 id_map_np = np.concatenate([id_map_np, mids])
                 live_np = np.concatenate([live_np, np.ones(m, bool)])
+
+            # filter (DESIGN.md §16): the predicate is over EXTERNAL ids,
+            # but segment-local plans speak segment-local rows — so the
+            # filter is stripped from the inner plans and composed with
+            # the tombstone bitmap at merge level instead (filter ∧ live,
+            # one internal-space bitmap: a filtered row is masked exactly
+            # like a dead one)
+            fstats = {}
+            if sp.filter is not None:
+                horizon = (int(id_map_np.max()) + 1 if id_map_np.size else 0)
+                ext_mask = np.asarray(sp.filter.aligned(horizon))
+                if id_map_np.size:
+                    live_np = live_np & ext_mask[id_map_np]
+                fstats = {"filter_selectivity":
+                          round(sp.filter.selectivity, 6)}
+                sp_inner = dataclasses.replace(sp, filter=None)
+            else:
+                sp_inner = sp
+
+            sources = []
+            for seg, base in zip(self.manifest.segments, self.manifest.bases()):
+                # over-fetch by this segment's masked rows — tombstones
+                # AND filtered-out rows — so k surviving rows always
+                # reach the merge on exact sources (a dead-count-only
+                # inflation starves the merge under a selective filter)
+                masked = int(seg.n - live_np[base:base + seg.n].sum())
+                kj = min(seg.n, depth + masked)
+                sources.append((seg.index.plan(kj, sp_inner, mesh=mesh),
+                                base, kj))
+            if m:
+                base_m = self.manifest.total_rows
+                masked_m = int(m - live_np[base_m:base_m + m].sum())
+                k_mem = min(m, depth + masked_m)
+                mem_index = FlatIndex(
+                    metric=self.metric,
+                    store=engine.CodeStore.dense(jnp.asarray(mvecs)),
+                )
+                sources.append(
+                    (mem_index.plan(k_mem, sp_inner, mesh=mesh),
+                     base_m, k_mem)
+                )
 
             rescore = len(sources) > 1 or rerank_depth is not None
             merge_store = None
@@ -574,6 +599,7 @@ class MutableIndex:
                 "tombstones": self.manifest.tombstones,
                 "epoch": self.manifest.epoch,
                 "max_drift": max(finite) if finite else 0.0,
+                **fstats,
             }
         return multi_source_plan(
             sources,

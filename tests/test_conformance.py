@@ -260,3 +260,179 @@ def test_sharded_parity_matrix_subprocess():
                          cwd=os.path.dirname(os.path.dirname(__file__)))
     assert out.returncode == 0, out.stderr[-3000:]
     assert "PARITY-OK" in out.stdout
+
+
+# --------------------------------------------------------------------------
+# filtered search matrix (DESIGN.md §16): every factory arm, three
+# selectivities, oracle-verified on ids AND scores
+# --------------------------------------------------------------------------
+
+#: filter densities the matrix runs at: survivors < k (0.02 on N=384
+#: leaves ~8 rows), a mid-band filter, and a nearly-transparent one
+SELECTIVITIES = (0.02, 0.25, 0.9)
+
+NEG = float(np.finfo(np.float32).min)
+
+
+def _filter_for(sel: float):
+    from repro.filter import Filter
+
+    rng = np.random.default_rng(int(sel * 1000) + 7)
+    mask = rng.random(N) < sel
+    if not mask.any():
+        mask[0] = True
+    return Filter.from_mask(mask)
+
+
+def _depth_searcher(idx, k, sp):
+    """A one-shot searcher whose rerank/settling depth is forced to the
+    full corpus, so every arm that owns a re-scoring stage ranks ALL its
+    candidates — the exhaustive configuration the oracle comparison
+    needs (approximation error would otherwise alias as filter error)."""
+    kw = {}
+    if getattr(idx, "handles_rerank", False) or \
+            getattr(idx, "rerank_store", None) is not None:
+        kw["rerank"] = N
+    return idx.searcher(k, sp, batch_sizes=None, strict=False, **kw)
+
+
+def _post_filter(scores, ids, allow, k):
+    """The brute-force oracle: the arm's own full ranking (k = N, every
+    candidate scored in the arm's final scoring space), post-filtered to
+    the allowed rows and cut to k — ``scores_among`` over survivors."""
+    Q = scores.shape[0]
+    out_s = np.full((Q, k), NEG, np.float32)
+    out_i = np.full((Q, k), -1, np.int32)
+    for r in range(Q):
+        j = 0
+        for s, i in zip(scores[r], ids[r]):
+            if j == k:
+                break
+            if i >= 0 and allow[i]:
+                out_s[r, j] = s
+                out_i[r, j] = i
+                j += 1
+    return out_s, out_i
+
+
+def _assert_oracle_match(scores, ids, oscores, oids, msg):
+    """Bit-match on scores; ids must agree exactly up to permutation
+    within equal-score tie groups (quantized scores tie legitimately,
+    and candidate enumeration order inside a tie is not part of the
+    contract)."""
+    np.testing.assert_array_equal(scores, oscores, err_msg=msg)
+    for r in range(scores.shape[0]):
+        s = scores[r]
+        start = 0
+        while start < len(s):
+            stop = start
+            while stop < len(s) and s[stop] == s[start]:
+                stop += 1
+            assert sorted(ids[r][start:stop].tolist()) == \
+                sorted(oids[r][start:stop].tolist()), \
+                f"{msg}: tie-group ids diverge at row {r} cols " \
+                f"[{start}:{stop}]"
+            start = stop
+
+
+def test_filtered_matrix_covers_every_registered_kind():
+    """The filtered matrix runs over FACTORIES, which must enumerate the
+    full registry — a new kind cannot dodge filter conformance."""
+    covered = {parse_factory(f).kind for f in FACTORIES}
+    covered |= {
+        parse_factory(parse_factory(f).params["inner"]).kind
+        for f in FACTORIES
+        if parse_factory(f).kind == "stream"
+    }
+    assert covered == set(kinds()), (
+        f"filtered conformance must cover every kind "
+        f"(missing: {set(kinds()) - covered})"
+    )
+
+
+@pytest.mark.parametrize("sel", SELECTIVITIES)
+@pytest.mark.parametrize("factory", sorted(FACTORIES))
+def test_filtered_search_matches_post_filter_oracle(
+        factory, sel, corpus_queries, built):
+    """Filtered search == the arm's own exhaustive ranking post-filtered
+    to survivors, bit-exact on scores and (tie-robustly) on ids.  ef is
+    pinned to N so walk kinds enumerate their whole component and the
+    filter acts as a pure id-mask on the candidate stream; cascade
+    budgets are pinned wide so no stage prunes an allowed candidate."""
+    _corpus, queries = corpus_queries
+    idx = built[factory]
+    filt = _filter_for(sel)
+    allow = np.asarray(filt.mask)
+    budgets = None
+    if parse_factory(factory).kind == "cascade":
+        n_stages = len(getattr(idx, "stage_stores"))
+        budgets = (N,) * n_stages
+    sp_plain = SearchParams(nprobe=8, ef_search=N, budgets=budgets)
+    sp_filt = SearchParams(nprobe=8, ef_search=N, budgets=budgets,
+                           filter=filt)
+
+    full = _depth_searcher(idx, N, sp_plain)(queries)
+    oscores, oids = _post_filter(np.asarray(full.scores),
+                                 np.asarray(full.ids), allow, K)
+    res = _depth_searcher(idx, K, sp_filt)(queries)
+    scores, ids = np.asarray(res.scores), np.asarray(res.ids)
+
+    live = ids >= 0
+    assert allow[ids[live]].all(), f"{factory}@{sel}: disallowed id returned"
+    assert res.stats.get("filter_selectivity") is not None, factory
+    _assert_oracle_match(scores, ids, oscores, oids, f"{factory}@{sel}")
+
+
+@pytest.mark.slow
+def test_filtered_sharded_parity_matrix_subprocess():
+    """Every SHARDED_ARMS arm, filtered at each selectivity, bit-matches
+    its unsharded filtered twin on 2- and 4-device meshes."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    prog = textwrap.dedent(f"""
+        import jax, numpy as np
+        from repro.filter import Filter
+        from repro.knn import SearchParams, make_index
+        assert len(jax.devices()) == 4, jax.devices()
+        ARMS = {SHARDED_ARMS!r}
+        SELS = {SELECTIVITIES!r}
+        N = {N}
+        corpus = np.asarray(
+            jax.random.normal(jax.random.PRNGKey(0), (N, {D}))) * 0.05
+        queries = np.asarray(
+            jax.random.normal(jax.random.PRNGKey(1), (8, {D}))) * 0.05
+        for factory, over in ARMS.items():
+            idx = make_index(factory, corpus, key=jax.random.PRNGKey(0), **over)
+            for sel in SELS:
+                rng = np.random.default_rng(int(sel * 1000) + 7)
+                mask = rng.random(N) < sel
+                if not mask.any():
+                    mask[0] = True
+                sp = SearchParams(nprobe=8, ef_search=40,
+                                  filter=Filter.from_mask(mask))
+                un = idx.searcher(10, sp)(queries)
+                ids = np.asarray(un.ids)
+                live = ids >= 0
+                assert mask[ids[live]].all(), (factory, sel)
+                for s in (2, 4):
+                    mesh = jax.make_mesh((s,), ("data",))
+                    sh = idx.searcher(10, sp, shards=mesh)(queries)
+                    np.testing.assert_array_equal(
+                        np.asarray(un.ids), np.asarray(sh.ids),
+                        err_msg=f"{{factory}}@{{sel}} ids @ {{s}} shards")
+                    np.testing.assert_array_equal(
+                        np.asarray(un.scores), np.asarray(sh.scores),
+                        err_msg=f"{{factory}}@{{sel}} scores @ {{s}} shards")
+        print("FILTER-PARITY-OK")
+    """)
+    env = {**os.environ,
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=4",
+           "PYTHONPATH": "src" + os.pathsep + os.environ.get("PYTHONPATH", "")}
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, timeout=1800, env=env,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "FILTER-PARITY-OK" in out.stdout

@@ -1,0 +1,269 @@
+"""Property suite for the filter subsystem (DESIGN.md §16):
+``repro.filter.Filter`` bitmap algebra, the pad-sentinel contract when
+survivors < k, degenerate filters, filter ∘ tombstone composition under
+stream churn, and save -> load -> filtered-search parity."""
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # no hypothesis on this container: see pyproject [test]
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.filter import Filter, overfetch
+from repro.knn import SearchParams, load_index, make_index
+
+NEG = float(np.finfo(np.float32).min)
+
+
+def _mask(seed: int, n: int, sel: float) -> np.ndarray:
+    return np.random.default_rng(seed).random(n) < sel
+
+
+# --------------------------------------------------------------------------
+# bitmap algebra
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.integers(1, 512),
+       sel=st.floats(0.0, 1.0))
+def test_bitmap_round_trip(seed, n, sel):
+    """from_mask -> mask / ids() round-trips; from_ids(ids()) rebuilds
+    an equal filter (digest equality == content equality)."""
+    m = _mask(seed, n, sel)
+    f = Filter.from_mask(m)
+    np.testing.assert_array_equal(np.asarray(f.mask), m)
+    assert f.n == n and f.count == int(m.sum())
+    g = Filter.from_ids(f.ids(), n)
+    assert g == f and hash(g) == hash(f)
+    np.testing.assert_array_equal(g.ids(), np.flatnonzero(m))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.integers(1, 512),
+       sa=st.floats(0.0, 1.0), sb=st.floats(0.0, 1.0))
+def test_bitmap_and_or_invert_composition(seed, n, sa, sb):
+    ma, mb = _mask(seed, n, sa), _mask(seed + 1, n, sb)
+    fa, fb = Filter.from_mask(ma), Filter.from_mask(mb)
+    np.testing.assert_array_equal(np.asarray((fa & fb).mask), ma & mb)
+    np.testing.assert_array_equal(np.asarray((fa | fb).mask), ma | mb)
+    np.testing.assert_array_equal(np.asarray((~fa).mask), ~ma)
+    assert (fa & fb) == (fb & fa)
+    # AND can only shrink, OR can only grow
+    assert (fa & fb).count <= min(fa.count, fb.count)
+    assert (fa | fb).count >= max(fa.count, fb.count)
+
+
+def test_bitmap_n_mismatch_rejected():
+    with pytest.raises(ValueError, match="compose"):
+        Filter.from_mask(np.ones(4, bool)) & Filter.from_mask(np.ones(5, bool))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.integers(1, 256),
+       m=st.integers(1, 256), sel=st.floats(0.0, 1.0))
+def test_aligned_pads_allowed_and_truncates(seed, n, m, sel):
+    """aligned(m): rows beyond the filter's horizon default to ALLOWED
+    (the filter constrains only what it describes), shrinking truncates."""
+    f = Filter.from_mask(_mask(seed, n, sel))
+    a = np.asarray(f.aligned(m))
+    assert a.shape == (m,)
+    k = min(n, m)
+    np.testing.assert_array_equal(a[:k], np.asarray(f.mask)[:k])
+    assert a[k:].all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(k=st.integers(1, 64), sel=st.floats(0.0, 1.0),
+       n=st.integers(1, 100000))
+def test_overfetch_bounds(k, sel, n):
+    of = overfetch(k, sel, n)
+    assert k <= of + max(0, k - n)     # >= k unless the corpus is smaller
+    assert of <= max(n, k) and of >= min(k, n)
+    if sel > 0:
+        assert of >= min(n, int(np.ceil(k / max(sel, 1e-9))))
+    assert overfetch(k, 0.0, n) == n   # unknown selectivity -> everything
+
+
+def test_from_column_and_predicate():
+    col = np.array([0, 1, 2, 1, 0, 2, 1])
+    np.testing.assert_array_equal(
+        Filter.from_column(col, 1).ids(), [1, 3, 6])
+    np.testing.assert_array_equal(
+        Filter.from_column(col, {0, 2}).ids(), [0, 2, 4, 5])
+    np.testing.assert_array_equal(
+        Filter.from_predicate(col, lambda c: c >= 1).ids(), [1, 2, 3, 5, 6])
+    assert Filter.from_column(col, 1) == Filter.from_column(col, [1])
+
+
+# --------------------------------------------------------------------------
+# search contracts: pad sentinel, degenerate filters
+# --------------------------------------------------------------------------
+
+N, D, K = 200, 16, 10
+
+
+@pytest.fixture(scope="module")
+def corpus_queries():
+    corpus = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (N, D))) * 0.1
+    queries = np.asarray(jax.random.normal(jax.random.PRNGKey(1), (6, D))) * 0.1
+    return corpus, queries
+
+
+@pytest.mark.parametrize("factory", ["flat", "flat,lpq4", "ivf8,lpq8",
+                                     "stream(flat,lpq8)"])
+def test_survivors_below_k_pad_sentinel(factory, corpus_queries):
+    """A filter with fewer survivors than k fills the tail with the
+    exact pad sentinel: id -1, score float32-min."""
+    corpus, queries = corpus_queries
+    idx = make_index(factory, corpus, key=jax.random.PRNGKey(0))
+    keep = np.array([3, 17, 42])
+    sp = SearchParams(filter=Filter.from_ids(keep, N), nprobe=8)
+    res = idx.search(queries, K, sp)
+    ids, scores = np.asarray(res.ids), np.asarray(res.scores)
+    assert sorted(set(ids[ids >= 0].tolist())) == sorted(keep.tolist())
+    assert (ids[:, len(keep):] == -1).all(), factory
+    assert (scores[:, len(keep):] == NEG).all(), factory
+
+
+@pytest.mark.parametrize("factory", ["flat,lpq8", "ivf8", "hnsw8",
+                                     "stream(flat,lpq4)"])
+def test_filter_none_and_all(factory, corpus_queries):
+    """filter-all-allowed == no filter (bit-exact); filter-none returns
+    only pad sentinels."""
+    corpus, queries = corpus_queries
+    idx = make_index(factory, corpus, key=jax.random.PRNGKey(0))
+    plain = idx.search(queries, K, SearchParams(nprobe=8))
+    allf = idx.search(
+        queries, K, SearchParams(nprobe=8,
+                                 filter=Filter.from_mask(np.ones(N, bool))))
+    np.testing.assert_array_equal(np.asarray(plain.ids), np.asarray(allf.ids))
+    np.testing.assert_array_equal(np.asarray(plain.scores),
+                                  np.asarray(allf.scores))
+    none = idx.search(
+        queries, K, SearchParams(nprobe=8,
+                                 filter=Filter.from_mask(np.zeros(N, bool))))
+    assert (np.asarray(none.ids) == -1).all()
+    assert (np.asarray(none.scores) == NEG).all()
+
+
+def test_filter_hash_rides_search_params():
+    """Equal-content filters hash equal (compiled-plan cache keys);
+    different bitmaps do not collide on n."""
+    a = SearchParams(filter=Filter.from_ids([1, 2], 10))
+    b = SearchParams(filter=Filter.from_ids([1, 2], 10))
+    c = SearchParams(filter=Filter.from_ids([1, 3], 10))
+    assert hash(a) == hash(b) and a == b
+    assert a != c
+    with pytest.raises(ValueError, match="filter"):
+        SearchParams(filter="not a filter").validate()
+
+
+# --------------------------------------------------------------------------
+# filter ∘ tombstone under churn + disk round-trip
+# --------------------------------------------------------------------------
+
+def _stream_oracle(idx, queries, allow_of, k):
+    """Brute force over live_items() ∩ filter in fp32 (the stream merge
+    re-scores against raw payloads, so fp32 is its scoring space)."""
+    ext, vecs = idx.live_items()
+    keep = np.array([allow_of(e) for e in ext], bool)
+    ext, vecs = ext[keep], vecs[keep]
+    s = queries @ vecs.T
+    order = np.argsort(-s, axis=1, kind="stable")[:, :k]
+    return np.take_along_axis(s, order, 1).astype(np.float32), ext[order]
+
+
+def test_filtered_search_after_churn_matches_live_oracle(corpus_queries):
+    """Upsert/delete churn, then filtered search == oracle over
+    live_items() ∩ filter (ids and scores; fp32 merge space)."""
+    corpus, queries = corpus_queries
+    idx = make_index("stream(flat)+r32", corpus, seal_threshold=64,
+                     key=jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    # churn: delete some originals, upsert new ids and replacements
+    idx.delete(rng.choice(N, 40, replace=False))
+    new_ids = np.arange(N, N + 90)
+    idx.upsert(new_ids, rng.standard_normal((90, D)).astype(np.float32) * 0.1)
+    idx.delete(new_ids[::7])
+    idx.upsert(np.arange(10, 30),
+               rng.standard_normal((20, D)).astype(np.float32) * 0.1)
+
+    # predicate over EXTERNAL ids: even ids allowed
+    horizon = N + 90
+    allow = (np.arange(horizon) % 2) == 0
+    sp = SearchParams(filter=Filter.from_mask(allow))
+    res = idx.searcher(K, sp, rerank=idx.n)(queries)
+    ids, scores = np.asarray(res.ids), np.asarray(res.scores)
+
+    oscores, oids = _stream_oracle(idx, queries, lambda e: allow[e], K)
+    np.testing.assert_array_equal(ids, oids)
+    np.testing.assert_allclose(scores, oscores, rtol=1e-6)
+    assert (ids % 2 == 0).all()
+
+    # churn continues: filtered results track the next plan's snapshot
+    idx.delete(ids[0, 0:1])
+    res2 = idx.searcher(K, sp, rerank=idx.n)(queries)
+    assert int(ids[0, 0]) not in np.asarray(res2.ids)[0].tolist()
+
+
+def test_save_load_filtered_search_parity(corpus_queries, tmp_path):
+    corpus, queries = corpus_queries
+    idx = make_index("stream(ivf8,lpq8)+r32", corpus, seal_threshold=64,
+                     kmeans_iters=4, key=jax.random.PRNGKey(0))
+    idx.delete(np.arange(0, 30))
+    sp = SearchParams(nprobe=8,
+                      filter=Filter.from_mask(_mask(11, N, 0.5)))
+    path = str(tmp_path / "filtered.npz")
+    idx.save(path)
+    restored = load_index(path)
+    a = idx.search(queries, K, sp)
+    b = restored.search(queries, K, sp)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.scores), np.asarray(b.scores))
+
+
+# --------------------------------------------------------------------------
+# the over-fetch starvation regression (multi-source merge)
+# --------------------------------------------------------------------------
+
+def test_segment_overfetch_survives_selective_filter():
+    """Regression: per-segment over-fetch must inflate by masked rows
+    (tombstones AND filtered-out), not dead count alone — otherwise a
+    selective filter starves the merge of survivors a brute-force oracle
+    still finds.  n=97 rows sealed in 10-row chunks."""
+    n, d, k = 97, 8, 5
+    rng = np.random.default_rng(3)
+    vecs = rng.standard_normal((n, d)).astype(np.float32)
+    queries = rng.standard_normal((4, d)).astype(np.float32)
+    # adversarial: DISALLOWED rows score strictly higher than allowed
+    # ones, so under dead-count-only inflation every segment's top-k is
+    # 100% filtered-out rows and the merge starves
+    allow = _mask(9, n, 0.25)
+    allow[:3] = True                       # keep it non-degenerate
+    boost = queries.mean(axis=0)
+    boost /= np.linalg.norm(boost)
+    vecs[~allow] += 4.0 * boost
+    idx = make_index("stream(flat)", np.zeros((0, d), np.float32),
+                     seal_threshold=10, max_segments=64, auto_compact=False)
+    for start in range(0, n, 10):
+        stop = min(start + 10, n)
+        idx.upsert(np.arange(start, stop), vecs[start:stop])
+    idx.seal()
+    assert idx.stats()["segments"] >= 9    # the multi-segment shape
+
+    sp = SearchParams(filter=Filter.from_mask(allow))
+    # no rerank depth: sources fetch at k + masked — exactly the
+    # inflation under test (a forced deep rerank would hide starvation)
+    res = idx.searcher(k, sp)(queries)
+    ids = np.asarray(res.ids)
+
+    s = queries @ vecs[allow].T
+    order = np.argsort(-s, axis=1, kind="stable")[:, :k]
+    oids = np.flatnonzero(allow)[order]
+    np.testing.assert_array_equal(
+        ids, oids,
+        err_msg="selective filter starved the multi-source merge "
+                "(per-segment over-fetch ignored filtered-out rows)")
